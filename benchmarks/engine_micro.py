@@ -1,0 +1,92 @@
+"""Engine micro-benchmarks: wall-time per call of the core operators on
+CPU (jit-compiled, median of repeats).  These are throughput sanity
+numbers for the engine itself, not TPU projections (those are §Roofline).
+"""
+
+from __future__ import annotations
+
+import sys
+sys.path.insert(0, "src")
+
+import time
+from typing import List
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+
+def _timeit(fn, *args, repeats=5) -> float:
+    fn(*args)  # compile + warm
+    times = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times) * 1e6)  # us
+
+
+def bench_engine() -> List[tuple]:
+    from repro.core import SimGrid, edge_relation, two_way_join
+    from repro.core.local import groupby_sum, local_join
+
+    rows = []
+    rng = np.random.default_rng(0)
+
+    # distributed 2-way join on a 4-device simulated grid
+    src = rng.integers(0, 2000, 20000).astype(np.int32)
+    dst = rng.integers(0, 2000, 20000).astype(np.int32)
+    grid = SimGrid((4,))
+    R = edge_relation(src, dst, names=("a", "b", "v"))
+    S = edge_relation(src, dst, names=("b", "c", "w"))
+
+    def scatter(rel):
+        cols = {k: c.reshape(4, -1) for k, c in rel.cols.items()}
+        return type(rel)(cols, rel.valid.reshape(4, -1))
+
+    Rd, Sd = scatter(R), scatter(S)
+
+    @jax.jit
+    def j2(r, s):
+        out, stats, ovf = two_way_join(grid, r, s, "b", "b",
+                                       recv_capacity=8192,
+                                       out_capacity=65536,
+                                       local_capacity=8192)
+        return out.valid.sum(), stats["shuffled"], ovf
+
+    rows.append(("engine/two_way_join_20k_tuples_4dev", _timeit(j2, Rd, Sd),
+                 "distributed hash join, SimGrid"))
+
+    # local group-by aggregation
+    from repro.core.relation import Relation
+    rel = Relation.from_arrays(
+        16384,
+        a=jnp.array(rng.integers(0, 500, 16384), jnp.int32),
+        c=jnp.array(rng.integers(0, 500, 16384), jnp.int32),
+        p=jnp.array(rng.normal(size=16384), jnp.float32))
+
+    @jax.jit
+    def agg(r):
+        out, ovf = groupby_sum(r, ("a", "c"), "p")
+        return out.cols["p"].sum()
+
+    rows.append(("engine/groupby_sum_16k", _timeit(agg, rel),
+                 "sort+segment reduce"))
+
+    # kernels (ref backend on CPU, pallas on TPU)
+    from repro.kernels import ops
+    vals = jnp.array(rng.normal(size=65536), jnp.float32)
+    ids = jnp.sort(jnp.array(rng.integers(0, 4096, 65536), jnp.int32))
+    f = jax.jit(lambda v, i: ops.segment_sum(v, i, 4096, backend="ref"))
+    rows.append(("kernels/segment_sum_64k_ref", _timeit(f, vals, ids),
+                 "pure-jnp oracle path"))
+
+    q = jnp.array(rng.normal(size=(1, 8, 512, 64)), jnp.bfloat16)
+    k = jnp.array(rng.normal(size=(1, 2, 512, 64)), jnp.bfloat16)
+    fa = jax.jit(lambda a, b: ops.flash_attention(a, b, b, causal=True,
+                                                  backend="ref"))
+    rows.append(("kernels/attention_512_gqa_ref", _timeit(fa, q, k),
+                 "reference attention"))
+    return rows

@@ -1,0 +1,133 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+"""§Perf hillclimb driver: compile variants of the three chosen cells and
+extract the roofline-relevant deltas (collective bytes by kind, op mix,
+per-device memory) from the compiled artifacts.
+
+Cells (chosen per the §Roofline baseline table):
+  A qwen2.5-3b × train_4k   — worst collective-bound dense cell
+  B kimi-k2-1t × train_4k   — the paper's technique in production (MoE
+                              dispatch = distributed join): 1,3J-style
+                              replication vs 2,3J-style a2a routing
+  C join3 × paper           — the paper's own workload on the mesh:
+                              1,3JA vs 2,3JA vs 2,3JA+combiner
+
+  python -m benchmarks.hillclimb --cell A
+"""
+
+import argparse
+import dataclasses
+import json
+import sys
+import time
+
+sys.path.insert(0, "src")
+
+import jax
+
+from repro.configs import get_config
+from repro.launch.dryrun import (build_join3_cell, build_train_cell,
+                                 collective_bytes)
+from repro.launch.mesh import make_production_mesh
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "artifacts", "hillclimb")
+
+
+def measure(tag, jitted, args, donatable=0):
+    t0 = time.perf_counter()
+    compiled = jitted.lower(*args).compile()
+    dt = time.perf_counter() - t0
+    mem = compiled.memory_analysis()
+    hlo = compiled.as_text()
+    alias = int(getattr(mem, "alias_size_in_bytes", 0) or 0)
+    total = (mem.argument_size_in_bytes + mem.temp_size_in_bytes
+             + mem.output_size_in_bytes - alias)
+    rec = {
+        "tag": tag,
+        "compile_s": dt,
+        "collectives": collective_bytes(hlo),
+        "hlo_ops": {k: hlo.count(f" {k}(") for k in
+                    ("all-reduce", "all-gather", "reduce-scatter",
+                     "all-to-all", "collective-permute")},
+        "temp_gib": mem.temp_size_in_bytes / 2 ** 30,
+        "total_gib": total / 2 ** 30,
+        "tpu_est_gib": max(total - (donatable if alias == 0 else 0), 0) / 2 ** 30,
+    }
+    os.makedirs(OUT_DIR, exist_ok=True)
+    with open(os.path.join(OUT_DIR, tag.replace("/", "_") + ".json"), "w") as f:
+        json.dump(rec, f, indent=1)
+    c = rec["collectives"]
+    print(f"{tag:42s} coll={c.get('total', 0)/2**20:9.1f}MiB "
+          f"(ar={c.get('all-reduce', 0)/2**20:.1f} ag={c.get('all-gather', 0)/2**20:.1f} "
+          f"rs={c.get('reduce-scatter', 0)/2**20:.1f} a2a={c.get('all-to-all', 0)/2**20:.1f}) "
+          f"mem={rec['tpu_est_gib']:6.2f}GiB compile={dt:.0f}s", flush=True)
+    return rec
+
+
+def cell_a():
+    """qwen2.5-3b train: TP collective reduction via sequence parallelism."""
+    mesh = make_production_mesh()
+    base = get_config("qwen2.5-3b")
+    variants = [
+        ("A0-baseline", base),
+        ("A1-seqshard", dataclasses.replace(base, seq_shard_activations=True)),
+        ("A2-logitchunk", dataclasses.replace(base, logit_chunk=1024)),
+        ("A3-seqshard+logitchunk",
+         dataclasses.replace(base, seq_shard_activations=True,
+                             logit_chunk=1024)),
+    ]
+    for tag, cfg in variants:
+        jitted, args, don = build_train_cell("qwen2.5-3b", "train_4k", mesh,
+                                             cfg=cfg)
+        measure(f"A-qwen2.5/{tag}", jitted, args, don)
+
+
+def cell_b():
+    """kimi-k2 train (multi-pod): MoE dispatch = the paper's join choice."""
+    mesh = make_production_mesh(multi_pod=True)
+    base = get_config("kimi-k2-1t-a32b")
+    variants = [
+        ("B0-replicated(1,3J-style)",
+         dataclasses.replace(base, moe_dispatch="replicated")),
+        ("B1-a2a(2,3J-style)", dataclasses.replace(base, moe_dispatch="a2a")),
+        ("B2-a2a+cf1.0",
+         dataclasses.replace(base, moe_dispatch="a2a", capacity_factor=1.0)),
+        ("B3-a2a+dots-remat",
+         dataclasses.replace(base, moe_dispatch="a2a",
+                             remat_policy="dots")),
+    ]
+    for tag, cfg in variants:
+        jitted, args, don = build_train_cell("kimi-k2-1t-a32b", "train_4k",
+                                             mesh, cfg=cfg)
+        measure(f"B-kimi/{tag}", jitted, args, don)
+
+
+def cell_c():
+    """The paper's own workload: 1,3JA vs 2,3JA vs +combiner on the mesh."""
+    mesh = make_production_mesh()
+    for tag, algo, combine, tight in [
+        ("C0-1,3JA", "1,3JA", False, False),
+        ("C1-2,3JA", "2,3JA", False, False),
+        ("C2-2,3JA+combiner", "2,3JA", True, False),
+        ("C3-2,3JA+combiner+tightcaps", "2,3JA", True, True),
+    ]:
+        jitted, args = build_join3_cell(algo, mesh, local_combine=combine,
+                                        tight=tight)
+        measure(f"C-join3/{tag}", jitted, args)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cell", default="all", choices=["A", "B", "C", "all"])
+    a = ap.parse_args()
+    if a.cell in ("A", "all"):
+        cell_a()
+    if a.cell in ("B", "all"):
+        cell_b()
+    if a.cell in ("C", "all"):
+        cell_c()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,211 @@
+"""§Roofline: three-term analysis per (arch × shape) on the single-pod mesh.
+
+Terms (TPU v5e constants fixed by the assignment):
+  compute_term    = F_exec / (chips × 197e12 bf16 FLOP/s)
+  memory_term     = HBM_bytes_per_chip / 819e9 B/s
+  collective_term = collective_payload_per_chip × ring_factor / 50e9 B/s
+
+Methodology note (documented in EXPERIMENTS.md §Roofline): XLA's
+cost_analysis counts a lax.scan body ONCE regardless of trip count, and
+XLA:CPU legalizes bf16 buffers to f32, so raw compiled numbers are
+systematically off for scanned, bf16 models.  We therefore compute the
+three terms ANALYTICALLY from the model/sharding we built (formulas
+below), and use the compiled dry-run artifacts for (a) memory
+fit (memory_analysis is trip-count independent), (b) structural
+validation of the collective schedule (op kinds/counts/shapes parsed
+from HLO), and (c) exact cost numbers for the un-scanned join3 cells.
+
+MODEL_FLOPS = 6·N_active·D (train) / 2·N_active·D (inference); the
+useful-FLOPs ratio MODEL_FLOPS/F_exec captures remat recompute,
+vocab/head padding, MoE capacity slack and attention overhead.
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+from typing import Dict, List, Optional
+
+sys.path.insert(0, "src")
+
+from repro.configs import all_archs, get_config
+from repro.models.config import SHAPES, ModelConfig
+
+PEAK = 197e12        # bf16 FLOP/s per chip
+HBM = 819e9          # B/s per chip
+LINK = 50e9          # B/s per ICI link
+CHIPS = 256          # single-pod roofline (16 x 16)
+DP, TP = 16, 16
+RING = 2.0           # ring all-reduce moves ~2x payload per chip
+
+ART_DIR = os.path.join(os.path.dirname(__file__), "artifacts", "dryrun")
+
+
+# ---------------------------------------------------------------------------
+# Analytic FLOPs / bytes / collective payloads
+# ---------------------------------------------------------------------------
+
+def _mixing_flops_fwd(cfg: ModelConfig, B: float, S: float,
+                      kv_len: Optional[float] = None) -> float:
+    """Sequence-mixing matmul FLOPs (fwd), beyond the 2·N·D param term."""
+    kv = kv_len if kv_len is not None else S
+    if cfg.family == "ssm":
+        d_in = cfg.d_model * cfg.xlstm_proj_factor
+        return cfg.n_layers * B * S * cfg.ssm_chunk * d_in * 2 * 2
+    att_layers = cfg.n_layers
+    if cfg.family == "hybrid":
+        att_layers = cfg.n_layers // max(cfg.shared_attn_every, 1)
+        d_in = cfg.d_model * cfg.ssm_expand
+        ssm = cfg.n_layers * B * S * cfg.ssm_chunk * d_in * 2 * 2
+    else:
+        ssm = 0.0
+    causal = 0.5 if S == kv else 1.0  # decode reads the whole cache
+    attn = att_layers * 2 * 2 * B * cfg.padded_heads * cfg.head_dim * S * kv * causal
+    if cfg.family == "encdec":
+        attn += cfg.n_encoder_layers * 2 * 2 * B * cfg.padded_heads * \
+            cfg.head_dim * cfg.n_audio_frames ** 2
+        attn += cfg.n_layers * 2 * 2 * B * cfg.padded_heads * cfg.head_dim * \
+            S * cfg.n_audio_frames
+    if cfg.family == "vlm":
+        attn += (cfg.n_layers // max(cfg.cross_attn_every, 1)) * 2 * 2 * B * \
+            cfg.padded_heads * cfg.head_dim * S * cfg.n_image_tokens
+    return attn + ssm
+
+
+def analytic_terms(cfg: ModelConfig, shape_name: str) -> Dict[str, float]:
+    sh = SHAPES[shape_name]
+    B, S = float(sh.global_batch), float(sh.seq_len)
+    n_act = cfg.n_active_params_analytic
+    n_tot = cfg.n_params_analytic
+    mb = max(cfg.microbatch, 1)
+
+    p_dev_bytes = n_tot * 2 / CHIPS if cfg.fsdp else n_tot * 2 / TP
+    act_bytes_layer = (B / DP / mb) * S * cfg.d_model * 2  # per-device
+
+    if sh.kind == "train":
+        D = B * S
+        model_flops = 6 * n_act * D
+        remat = 4.0 / 3.0 if cfg.remat else 1.0
+        f_exec = model_flops * remat + 3 * _mixing_flops_fwd(cfg, B, S)
+        # per-device HBM traffic: weights read 3x per microbatch (fwd,
+        # remat, bwd) + update write + opt r/w; activations ~10 passes.
+        opt_bytes = (2 * n_tot * 4 / CHIPS if cfg.optimizer == "adamw"
+                     else 0.05 * n_tot * 4 / CHIPS)
+        hbm = (3 * mb * p_dev_bytes + 2 * p_dev_bytes + 2 * opt_bytes
+               + 10 * cfg.n_layers * mb * act_bytes_layer)
+        # collectives: TP psums 4x/layer/micro + DP grad reduce
+        tp_payload = 4 * cfg.n_layers * mb * act_bytes_layer
+        if cfg.family == "moe" and cfg.moe_dispatch == "a2a":
+            tok_dev = (B / DP / mb) * S
+            a2a_payload = 4 * cfg.n_layers * mb * \
+                (tok_dev * cfg.top_k * cfg.capacity_factor) * cfg.d_model * 2
+            tp_payload += a2a_payload
+        grad_payload = (n_tot * 2 / CHIPS) * 2 if cfg.fsdp else \
+            (n_tot * 2 / TP) * 2
+        coll = (tp_payload + grad_payload) * RING
+    else:
+        decode = sh.kind == "decode"
+        new_tokens = B * (1.0 if decode else S)
+        kv_len = S
+        model_flops = 2 * n_act * new_tokens
+        f_exec = model_flops + _mixing_flops_fwd(
+            cfg, B, 1.0 if decode else S, kv_len=kv_len)
+        # decode HBM:全 params + full KV cache per step
+        if cfg.family == "ssm":
+            cache_bytes = 0.01 * n_tot  # recurrent state, tiny
+        else:
+            att_layers = (cfg.n_layers // max(cfg.shared_attn_every, 1)
+                          if cfg.family == "hybrid" else cfg.n_layers)
+            cache_bytes = 2 * att_layers * B * kv_len * cfg.kv_dim * 2 / DP
+            if cfg.family == "hybrid":
+                cache_bytes += 0.01 * n_tot
+        p_serve_dev = n_tot * 2 / TP / (DP if cfg.fsdp else 1)
+        hbm = p_serve_dev + cache_bytes * (1 if decode else 1)
+        tp_payload = 4 * cfg.n_layers * (B / DP) * \
+            (1.0 if decode else S) * cfg.d_model * 2
+        coll = tp_payload * RING
+
+    return {
+        "model_flops": model_flops,
+        "f_exec": f_exec,
+        "compute_s": f_exec / (CHIPS * PEAK),
+        "memory_s": hbm / HBM,
+        # coll accumulates PER-CHIP payload bytes (act/param shards above
+        # are already per-device); ring factor applied at accumulation.
+        "collective_s": coll / LINK,
+        "useful_ratio": model_flops / max(f_exec, 1.0),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Table assembly (reads dry-run artifacts for validation columns)
+# ---------------------------------------------------------------------------
+
+def load_artifact(arch: str, shape: str, mesh: str = "single") -> Optional[Dict]:
+    path = os.path.join(ART_DIR, f"{arch}__{shape}__{mesh}.json")
+    if not os.path.exists(path):
+        return None
+    with open(path) as f:
+        return json.load(f)
+
+
+def roofline_rows() -> List[Dict]:
+    rows = []
+    for arch in all_archs():
+        cfg = get_config(arch)
+        for shape_name in SHAPES:
+            art = load_artifact(arch, shape_name)
+            if art is None or art.get("status") != "ok":
+                continue
+            t = analytic_terms(cfg, shape_name)
+            dom = max(("compute_s", "memory_s", "collective_s"),
+                      key=lambda k: t[k])
+            step_time = max(t["compute_s"], t["memory_s"], t["collective_s"])
+            rows.append({
+                "arch": arch, "shape": shape_name,
+                "compute_s": t["compute_s"], "memory_s": t["memory_s"],
+                "collective_s": t["collective_s"],
+                "dominant": dom.replace("_s", ""),
+                "model_flops": t["model_flops"],
+                "useful_ratio": t["useful_ratio"],
+                "roofline_frac": t["compute_s"] / step_time,
+                "mem_dev_gib": art["memory"].get(
+                    "tpu_estimate_bytes",
+                    art["memory"]["per_device_total_bytes"]) / 2 ** 30,
+                "hlo_coll_bytes": art["collectives"].get("total", 0.0),
+                "hlo_ops": art.get("hlo_ops", {}),
+                "compile_s": art.get("compile_s", 0.0),
+            })
+    return rows
+
+
+def bench_rows() -> List[tuple]:
+    """CSV rows for benchmarks/run.py."""
+    out = []
+    for r in roofline_rows():
+        out.append((
+            f"roofline/{r['arch']}/{r['shape']}",
+            r["roofline_frac"],
+            f"dom={r['dominant']};compute={r['compute_s']:.3e}s;"
+            f"mem={r['memory_s']:.3e}s;coll={r['collective_s']:.3e}s;"
+            f"useful={r['useful_ratio']:.2f};memGiB={r['mem_dev_gib']:.1f}"))
+    return out
+
+
+def markdown_table() -> str:
+    lines = ["| arch | shape | compute (s) | memory (s) | collective (s) | "
+             "dominant | MFU-at-roofline | useful FLOPs | mem GiB/chip |",
+             "|---|---|---|---|---|---|---|---|---|"]
+    for r in roofline_rows():
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.2e} | "
+            f"{r['memory_s']:.2e} | {r['collective_s']:.2e} | "
+            f"**{r['dominant']}** | {r['roofline_frac']:.2f} | "
+            f"{r['useful_ratio']:.2f} | {r['mem_dev_gib']:.1f} |")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    print(markdown_table())

@@ -1,0 +1,48 @@
+"""Benchmark harness — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV (figures report tuple counts in
+the value column; micro-benchmarks report wall time per call).
+
+  python -m benchmarks.run            # everything
+  python -m benchmarks.run --only fig # just the paper figures
+"""
+
+import argparse
+import sys
+
+sys.path.insert(0, "src")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="", help="substring filter")
+    args = ap.parse_args()
+
+    from . import paper_figures
+    from . import engine_micro
+
+    sections = [
+        ("fig2", paper_figures.fig2_comm_cost),
+        ("fig3", paper_figures.fig3_crossover),
+        ("fig4", paper_figures.fig4_intermediate_aggregation),
+        ("fig5", paper_figures.fig5_output_reduction),
+        ("fig6", paper_figures.fig6_aggregated_cost),
+        ("validate", paper_figures.engine_validation),
+        ("engine", engine_micro.bench_engine),
+    ]
+    try:
+        from . import roofline
+        sections.append(("roofline", roofline.bench_rows))
+    except Exception:
+        pass
+
+    print("name,us_per_call,derived")
+    for name, fn in sections:
+        if args.only and args.only not in name:
+            continue
+        for row_name, value, derived in fn():
+            print(f"{row_name},{value:.6g},{derived}")
+
+
+if __name__ == "__main__":
+    main()

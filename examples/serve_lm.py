@@ -1,0 +1,73 @@
+"""Batched serving driver: prefill + decode with a KV cache.
+
+Loads (or trains briefly) a small model, then serves a batch of prompts
+through the Engine (prefill writes the cache; decode appends one token
+per step).  Works with any --arch's reduced config too.
+
+  PYTHONPATH=src python examples/serve_lm.py
+  PYTHONPATH=src python examples/serve_lm.py --arch qwen2.5-3b --smoke
+"""
+
+import argparse
+import sys
+import time
+sys.path.insert(0, "src")
+
+import numpy as np
+import jax
+
+from repro.configs import get_config
+from repro.models.config import ModelConfig
+from repro.models.lm import build_model
+from repro.serving.engine import Engine, ServeConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--smoke", action="store_true", default=True)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=12)
+    ap.add_argument("--new-tokens", type=int, default=24)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    args = ap.parse_args()
+
+    if args.arch:
+        cfg = get_config(args.arch, smoke=args.smoke)
+    else:
+        cfg = ModelConfig(
+            arch="serve-demo-20m", family="dense", n_layers=4, d_model=256,
+            n_heads=4, n_kv_heads=2, head_dim=64, d_ff=1024,
+            vocab_size=4096, remat=False)
+    if cfg.family in ("encdec",):
+        print("enc-dec serving needs audio frames; using decoder-only demo "
+              "semantics with empty cross inputs is unsupported here")
+        return
+
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    engine = Engine(model, params,
+                    ServeConfig(max_len=args.prompt_len + args.new_tokens + 8,
+                                temperature=args.temperature))
+
+    rng = np.random.default_rng(0)
+    prompts = rng.integers(1, cfg.vocab_size,
+                           (args.batch, args.prompt_len)).astype(np.int32)
+
+    t0 = time.perf_counter()
+    gen, info = engine.generate(prompts, args.new_tokens)
+    dt = time.perf_counter() - t0
+    print(f"arch={cfg.arch}: served batch={args.batch} "
+          f"prompt={args.prompt_len} new={args.new_tokens} "
+          f"in {dt:.2f}s ({args.batch * args.new_tokens / dt:.1f} tok/s)")
+    for i in range(min(args.batch, 2)):
+        print(f"  seq{i}: {prompts[i].tolist()} -> {gen[i].tolist()}")
+
+    # determinism check: greedy serving must be reproducible
+    gen2, _ = engine.generate(prompts, args.new_tokens)
+    assert (args.temperature > 0) or np.array_equal(gen, gen2)
+    print("serve example done")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,39 @@
+"""The paper's primary contribution: distributed three-way joins.
+
+Public API:
+  Relation, SimGrid, ShardGrid — data model + reducer-grid backends
+  two_way_join                 — one MapReduce join round
+  one_round_three_way          — Afrati–Ullman 1,3J on a k1×k2 grid
+  cascade_three_way[_agg]      — 2,3J / 2,3JA cascade (aggregation pushdown)
+  one_round_three_way_agg      — 1,3JA
+  distributed_groupby_sum      — the aggregator round
+  cost model + planner         — paper formulas, crossover k*, algorithm choice
+  spmm / a_cubed / triangles   — join-based matrix multiply & graph analytics
+"""
+
+from .relation import Relation, concat, flatten_leading
+from .shuffle import Grid, ShardGrid, SimGrid, broadcast_along, shuffle_by_bucket
+from .two_way import two_way_join
+from .one_round import one_round_three_way
+from .cascade import cascade_three_way, cascade_three_way_agg, one_round_three_way_agg
+from .aggregation import distributed_groupby_sum, project_product
+from .cost_model import (JoinStats, cost_cascade, cost_cascade_agg,
+                         cost_one_round, cost_one_round_agg, cost_two_way,
+                         crossover_reducers, estimate_join_size, optimal_k1_k2)
+from .planner import Plan, plan_three_way, self_join_stats, self_join_stats_exact
+from .matmul import (a_cubed, edge_relation, oracle_a3, oracle_triangles,
+                     spmm, triangle_count_from_a3)
+
+__all__ = [
+    "Relation", "concat", "flatten_leading",
+    "Grid", "SimGrid", "ShardGrid", "broadcast_along", "shuffle_by_bucket",
+    "two_way_join", "one_round_three_way",
+    "cascade_three_way", "cascade_three_way_agg", "one_round_three_way_agg",
+    "distributed_groupby_sum", "project_product",
+    "JoinStats", "cost_two_way", "cost_one_round", "cost_cascade",
+    "cost_cascade_agg", "cost_one_round_agg", "crossover_reducers",
+    "estimate_join_size", "optimal_k1_k2",
+    "Plan", "plan_three_way", "self_join_stats", "self_join_stats_exact",
+    "spmm", "a_cubed", "edge_relation", "triangle_count_from_a3",
+    "oracle_a3", "oracle_triangles",
+]

@@ -1,0 +1,107 @@
+"""Analytic communication-cost model (paper §IV–V) + crossover analysis.
+
+All costs are in TUPLES (the paper's unit; multiply by tuple width for
+bytes).  ``r, s, t`` are input sizes; ``j1 = |R ⋈ S|``; ``a1 =
+|Γ(R ⋈ S)|``; ``j3 = |R ⋈ S ⋈ T|`` (raw three-way size).
+
+These formulas are validated against the instrumented engine's measured
+counts in tests/test_cost_model.py — measured == analytic, exactly.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, Optional
+
+
+# ---------------------------------------------------------------------------
+# Paper formulas
+# ---------------------------------------------------------------------------
+
+def cost_two_way(r: float, s: float) -> float:
+    """One two-way join round: read r+s, shuffle r+s (paper §III)."""
+    return 2 * r + 2 * s
+
+
+def optimal_k1_k2(k: int, r: float, t: float) -> tuple:
+    """Afrati–Ullman optimal grid split: k1=√(kr/t), k2=√(kt/r)."""
+    k1 = math.sqrt(k * r / t)
+    k2 = math.sqrt(k * t / r)
+    return k1, k2
+
+
+def cost_one_round(r: float, s: float, t: float, k: int,
+                   k1: Optional[float] = None, k2: Optional[float] = None) -> float:
+    """1,3J cost: (r+s+t) + (s + k1·t + k2·r); at the optimal split this is
+    r + 2s + t + 2√(k·r·t).  Self-join (r=s=t): 4r + 2r√k."""
+    if k1 is None or k2 is None:
+        k1, k2 = optimal_k1_k2(k, r, t)
+    return (r + s + t) + (s + k1 * t + k2 * r)
+
+
+def cost_cascade(r: float, s: float, t: float, j1: float) -> float:
+    """2,3J cost: 2r + 2s + 2t + 2·|R⋈S| — independent of cluster size."""
+    return 2 * r + 2 * s + 2 * t + 2 * j1
+
+
+def cost_cascade_agg(r: float, s: float, t: float, j1: float, a1: float) -> float:
+    """2,3JA cost: 2r+2s+2t + 2j1 + 2a1 (paper: 6r + 2r' + 2r'' for self-join)."""
+    return 2 * r + 2 * s + 2 * t + 2 * j1 + 2 * a1
+
+
+def cost_one_round_agg(r: float, s: float, t: float, j3: float, k: int) -> float:
+    """1,3JA cost: 1,3J + 2·j3 (paper: 4r + 2r√k + 2r''' for self-join)."""
+    return cost_one_round(r, s, t, k) + 2 * j3
+
+
+def crossover_reducers(r: float, s: float, t: float, j1: float) -> float:
+    """k* where 1,3J's cost overtakes 2,3J's (paper Fig. 3).
+
+    Solve r+2s+t+2√(k r t) = 2(r+s+t)+2 j1  ⇒  √k = (r+t+2j1)/(2√(rt)).
+    Self-join: k* = (1 + j1/r)² — e.g. Twitter-like j1/r≈259 ⇒ k*≈67.6k.
+    """
+    num = r + t + 2 * j1
+    den = 2 * math.sqrt(r * t)
+    root = num / den
+    return root * root
+
+
+# ---------------------------------------------------------------------------
+# Statistics + planner inputs
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class JoinStats:
+    """Cardinality statistics driving algorithm choice."""
+    r: float
+    s: float
+    t: float
+    j1: float            # |R ⋈ S|
+    a1: Optional[float] = None   # |Γ_{a,c}(R ⋈ S)|      (aggregated runs)
+    j3: Optional[float] = None   # |R ⋈ S ⋈ T|           (aggregated runs)
+
+    def costs(self, k: int, aggregate: bool) -> Dict[str, float]:
+        out = {
+            "1,3J": cost_one_round(self.r, self.s, self.t, k),
+            "2,3J": cost_cascade(self.r, self.s, self.t, self.j1),
+        }
+        if aggregate:
+            if self.a1 is None or self.j3 is None:
+                raise ValueError("aggregated planning needs a1 and j3 estimates")
+            out["2,3JA"] = cost_cascade_agg(self.r, self.s, self.t, self.j1, self.a1)
+            out["1,3JA"] = cost_one_round_agg(self.r, self.s, self.t, self.j3, k)
+        return out
+
+
+def estimate_join_size(keys_build, keys_probe) -> float:
+    """Exact |R ⋈ S| from key multiplicity histograms:
+    Σ_b count_R(b) · count_S(b).  O(n log n), no materialization — this
+    is how the framework sizes capacities and plans without running the
+    join (cf. the paper's observation that |R⋈S| 'cannot be known
+    before we compute it'; it CAN be counted cheaply, which we exploit)."""
+    import numpy as np
+    bu, bc = np.unique(np.asarray(keys_build), return_counts=True)
+    pu, pc = np.unique(np.asarray(keys_probe), return_counts=True)
+    common, bi, pi = np.intersect1d(bu, pu, return_indices=True)
+    return float(np.sum(bc[bi].astype(np.float64) * pc[pi].astype(np.float64)))

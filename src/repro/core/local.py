@@ -1,0 +1,169 @@
+"""Per-device (per-"reducer") relational operators.
+
+These run inside one mesh shard (the reduce side of the paper's
+MapReduce jobs) or inside the simulated grid (vmapped).  Everything is
+static-shape: outputs have a caller-chosen capacity plus an overflow
+flag.
+
+The two hot-spots the paper's pipeline spends its time in — the
+map-phase *hash partition* (bucket histogram + in-bucket rank) and the
+*group-by aggregation* (segment sum) — have Pallas TPU kernels in
+``repro.kernels``; the implementations here are the pure-jnp semantics
+those kernels must match (see ``repro/kernels/ref.py``).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .relation import Relation
+
+
+# ---------------------------------------------------------------------------
+# Hash partition (map-phase counting sort into destination buckets)
+# ---------------------------------------------------------------------------
+
+def partition_ranks(bucket: jnp.ndarray, valid: jnp.ndarray, n_buckets: int
+                    ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Stable counting-sort plan: for each element, its destination bucket
+    rank (position within its bucket).
+
+    Returns (order, sorted_bucket, rank) where ``order`` stably sorts
+    elements by bucket (invalid last), ``rank[i]`` is the index of
+    sorted element i within its bucket.
+    """
+    key = jnp.where(valid, bucket, n_buckets)  # invalid rows sort last
+    order = jnp.argsort(key, stable=True)
+    sorted_key = key[order]
+    idx = jnp.arange(sorted_key.shape[0], dtype=jnp.int32)
+    # First occurrence of each bucket value in the sorted array.
+    first = jnp.searchsorted(sorted_key, sorted_key, side="left").astype(jnp.int32)
+    rank = idx - first
+    return order, sorted_key, rank
+
+
+def partition(rel: Relation, bucket: jnp.ndarray, n_buckets: int,
+              cap_per_bucket: int) -> Tuple[Relation, jnp.ndarray]:
+    """Scatter tuples into (n_buckets, cap_per_bucket) send buffers.
+
+    This is the map-phase emit of the paper's algorithms: tuple ->
+    destination reducer.  Returns a Relation whose columns have shape
+    (n_buckets, cap_per_bucket) plus an overflow flag (any bucket fuller
+    than its capacity).
+    """
+    order, sorted_bucket, rank = partition_ranks(bucket, rel.valid, n_buckets)
+    in_range = (sorted_bucket < n_buckets) & (rank < cap_per_bucket)
+    overflow = jnp.any((sorted_bucket < n_buckets) & (rank >= cap_per_bucket))
+    dest = jnp.where(in_range, sorted_bucket * cap_per_bucket + rank,
+                     n_buckets * cap_per_bucket)  # drop out-of-range
+    total = n_buckets * cap_per_bucket
+
+    def scatter(col):
+        src = col[order]
+        out = jnp.zeros((total + 1,), col.dtype).at[dest].set(src, mode="drop")
+        return out[:total].reshape(n_buckets, cap_per_bucket)
+
+    cols = {n: scatter(c) for n, c in rel.cols.items()}
+    valid = (
+        jnp.zeros((total + 1,), jnp.bool_)
+        .at[dest].set(in_range, mode="drop")[:total]
+        .reshape(n_buckets, cap_per_bucket)
+    )
+    return Relation(cols, valid), overflow
+
+
+# ---------------------------------------------------------------------------
+# Local equi-join (the reduce-side join within one reducer)
+# ---------------------------------------------------------------------------
+
+def local_join(left: Relation, right: Relation, left_key: str, right_key: str,
+               out_capacity: int,
+               prefix_l: str = "", prefix_r: str = "",
+               ) -> Tuple[Relation, jnp.ndarray]:
+    """Equi-join two local relations on ``left_key == right_key``.
+
+    All-pairs compare with masks (static shape); the reducer in the
+    paper does the same work per key-group.  Output columns are the
+    union of both inputs' columns, with optional prefixes to
+    disambiguate (the shared key is emitted once, unprefixed name of
+    the left key).
+    """
+    lk, rk = left.col(left_key), right.col(right_key)
+    match = (lk[:, None] == rk[None, :]) & left.valid[:, None] & right.valid[None, :]
+    flat = match.reshape(-1)
+    # Exclusive prefix count = output slot of each matching pair.
+    slot = jnp.cumsum(flat) - flat
+    n_match = jnp.sum(flat)
+    overflow = n_match > out_capacity
+    dest = jnp.where(flat & (slot < out_capacity), slot, out_capacity)
+
+    nl, nr = lk.shape[0], rk.shape[0]
+    li = (jnp.arange(nl * nr, dtype=jnp.int32) // nr)
+    ri = (jnp.arange(nl * nr, dtype=jnp.int32) % nr)
+    li_out = jnp.zeros((out_capacity + 1,), jnp.int32).at[dest].set(li, mode="drop")[:out_capacity]
+    ri_out = jnp.zeros((out_capacity + 1,), jnp.int32).at[dest].set(ri, mode="drop")[:out_capacity]
+    valid_out = (
+        jnp.zeros((out_capacity + 1,), jnp.bool_).at[dest].set(flat, mode="drop")[:out_capacity]
+    )
+
+    cols: Dict[str, jnp.ndarray] = {}
+    for n, c in left.cols.items():
+        name = n if n == left_key else prefix_l + n
+        cols[name] = jnp.where(valid_out, c[li_out], jnp.zeros((), c.dtype))
+    for n, c in right.cols.items():
+        if n == right_key:
+            continue  # key equal to left key; emitted once
+        name = prefix_r + n
+        if name in cols:
+            raise ValueError(f"column collision {name!r}; use prefixes")
+        cols[name] = jnp.where(valid_out, c[ri_out], jnp.zeros((), c.dtype))
+    return Relation(cols, valid_out), overflow
+
+
+# ---------------------------------------------------------------------------
+# Local group-by-sum (the aggregation hot-spot; paper Section V)
+# ---------------------------------------------------------------------------
+
+def groupby_sum(rel: Relation, keys: Tuple[str, ...], value: str,
+                out_capacity: int | None = None
+                ) -> Tuple[Relation, jnp.ndarray]:
+    """SUM ``value`` grouped by ``keys`` (lexicographic sort + segment sum).
+
+    Matches the paper's aggregator: for matrix multiply, keys=("a","c")
+    and value="p".  Output capacity defaults to the input capacity.
+    """
+    cap = rel.capacity
+    out_cap = out_capacity if out_capacity is not None else cap
+    # Stable lexicographic sort: least-significant key first.
+    order = jnp.arange(cap, dtype=jnp.int32)
+    for k in reversed(keys):
+        col = jnp.where(rel.valid[order], rel.cols[k][order], jnp.iinfo(jnp.int32).max)
+        order = order[jnp.argsort(col, stable=True)]
+    # Invalid rows last: final pass on validity.
+    order = order[jnp.argsort(~rel.valid[order], stable=True)]
+
+    sorted_valid = rel.valid[order]
+    sorted_keys = [rel.cols[k][order] for k in keys]
+    sorted_val = rel.cols[value][order].astype(jnp.float32)
+
+    prev_same = jnp.ones((cap,), jnp.bool_)
+    for sk in sorted_keys:
+        prev_same = prev_same & (sk == jnp.roll(sk, 1))
+    head = sorted_valid & (~prev_same | (jnp.arange(cap) == 0))
+    seg_id = jnp.cumsum(head.astype(jnp.int32)) - 1  # group index per row
+    n_groups = jnp.sum(head)
+    overflow = n_groups > out_cap
+
+    dest = jnp.where(sorted_valid & (seg_id < out_cap), seg_id, out_cap)
+    sums = jnp.zeros((out_cap + 1,), jnp.float32).at[dest].add(
+        jnp.where(sorted_valid, sorted_val, 0.0))[:out_cap]
+    out_cols = {}
+    for k, sk in zip(keys, sorted_keys):
+        out_cols[k] = jnp.zeros((out_cap + 1,), sk.dtype).at[dest].set(
+            sk, mode="drop")[:out_cap]
+    out_cols[value] = sums
+    valid_out = jnp.arange(out_cap) < n_groups
+    return Relation(out_cols, valid_out), overflow

@@ -1,0 +1,77 @@
+"""Cost-based planner — the paper's decision procedure as a feature.
+
+Given cardinality statistics and the cluster size, choose the cheapest
+algorithm.  Encodes the paper's conclusions:
+
+* enumeration only: 1,3J below the crossover k*, else 2,3J;
+* aggregation needed: 2,3JA is "the preferred solution" (its cost is
+  flat in k while 1,3JA grows as 2r√k) — but we still evaluate both
+  and pick by cost, which reduces to the paper's rule.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import numpy as np
+
+from .cost_model import JoinStats, crossover_reducers, estimate_join_size
+
+
+@dataclasses.dataclass(frozen=True)
+class Plan:
+    algorithm: str                 # "1,3J" | "2,3J" | "1,3JA" | "2,3JA"
+    k: int
+    costs: Dict[str, float]
+    crossover_k: float
+
+    @property
+    def predicted_cost(self) -> float:
+        return self.costs[self.algorithm]
+
+
+def self_join_stats(src: np.ndarray, dst: np.ndarray) -> JoinStats:
+    """Stats for A ⋈ A ⋈ A over edge list A(src, dst): R=S=T=A with
+    R(a,b)=A, S(b,c)=A, T(c,d)=A.  |R⋈S| = Σ_x indeg(x)·outdeg(x)."""
+    n = float(len(src))
+    j1 = estimate_join_size(dst, src)
+    return JoinStats(r=n, s=n, t=n, j1=j1)
+
+
+def self_join_stats_exact(src: np.ndarray, dst: np.ndarray) -> JoinStats:
+    """Full stats including a1=|Γ(A⋈A)| (=nnz(A²)) and j3=|A⋈A⋈A| via a
+    sparse matmul on the host.  Used by benchmarks to drive the planner
+    with exact numbers (feasible at experiment scales)."""
+    n = float(len(src))
+    j1 = estimate_join_size(dst, src)
+    nodes = int(max(src.max(initial=0), dst.max(initial=0))) + 1
+    # Dict-of-rows sparse bool product for nnz(A^2) and Σ path counts.
+    from collections import defaultdict
+    out_adj = defaultdict(list)
+    for s_, d_ in zip(src.tolist(), dst.tolist()):
+        out_adj[s_].append(d_)
+    a2 = {}
+    for a, mids in out_adj.items():
+        row = defaultdict(int)
+        for b in mids:
+            for c in out_adj.get(b, ()):  # noqa: B905
+                row[c] += 1
+        if row:
+            a2[a] = row
+    a1 = float(sum(len(row) for row in a2.values()))
+    j3 = 0.0
+    for a, row in a2.items():
+        for c, mult in row.items():
+            j3 += mult * len(out_adj.get(c, ()))
+    return JoinStats(r=n, s=n, t=n, j1=j1, a1=a1, j3=j3)
+
+
+def plan_three_way(stats: JoinStats, k: int, aggregate: bool) -> Plan:
+    costs = stats.costs(k, aggregate)
+    if aggregate:
+        algorithm = min(("2,3JA", "1,3JA"), key=lambda a: costs[a])
+    else:
+        algorithm = min(("2,3J", "1,3J"), key=lambda a: costs[a])
+    return Plan(algorithm=algorithm, k=k, costs=costs,
+                crossover_k=crossover_reducers(stats.r, stats.s, stats.t, stats.j1))

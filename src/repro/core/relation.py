@@ -1,0 +1,143 @@
+"""Static-shape columnar relations.
+
+JAX/XLA requires static buffer sizes, so a Relation is a fixed-capacity
+struct-of-arrays with a validity mask.  Hadoop's dynamically-sized KVP
+streams become (capacity,)-shaped columns + ``valid``; every operator
+propagates an ``overflow`` flag instead of growing buffers.
+
+Columns are stored in a dict keyed by attribute name (e.g. ``a``, ``b``,
+``v``).  Key columns are int32; value columns are float32 by default.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterable, Mapping, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class Relation:
+    """Fixed-capacity columnar relation with a validity mask.
+
+    Attributes:
+      cols:  name -> (capacity,) array.  All columns share the capacity.
+      valid: (capacity,) bool mask; invalid rows are padding.
+    """
+
+    cols: Dict[str, jnp.ndarray]
+    valid: jnp.ndarray
+
+    # -- pytree protocol -------------------------------------------------
+    def tree_flatten(self):
+        names = tuple(sorted(self.cols))
+        children = tuple(self.cols[n] for n in names) + (self.valid,)
+        return children, names
+
+    @classmethod
+    def tree_unflatten(cls, names, children):
+        *col_vals, valid = children
+        return cls(cols=dict(zip(names, col_vals)), valid=valid)
+
+    # -- construction ----------------------------------------------------
+    @classmethod
+    def from_arrays(cls, capacity: int | None = None, **cols) -> "Relation":
+        """Build from equal-length 1-D arrays, padding to ``capacity``."""
+        arrs = {k: jnp.asarray(v) for k, v in cols.items()}
+        n = next(iter(arrs.values())).shape[0]
+        for k, v in arrs.items():
+            if v.shape[0] != n:
+                raise ValueError(f"column {k!r} length {v.shape[0]} != {n}")
+        cap = capacity if capacity is not None else n
+        if cap < n:
+            raise ValueError(f"capacity {cap} < data length {n}")
+        pad = cap - n
+        padded = {
+            k: jnp.concatenate([v, jnp.zeros((pad,), v.dtype)]) if pad else v
+            for k, v in arrs.items()
+        }
+        valid = jnp.concatenate(
+            [jnp.ones((n,), jnp.bool_), jnp.zeros((pad,), jnp.bool_)]
+        )
+        return cls(cols=padded, valid=valid)
+
+    @classmethod
+    def empty(cls, capacity: int, schema: Mapping[str, jnp.dtype]) -> "Relation":
+        cols = {k: jnp.zeros((capacity,), dt) for k, dt in schema.items()}
+        return cls(cols=cols, valid=jnp.zeros((capacity,), jnp.bool_))
+
+    # -- accessors ---------------------------------------------------------
+    @property
+    def capacity(self) -> int:
+        return int(self.valid.shape[-1])
+
+    @property
+    def names(self) -> Tuple[str, ...]:
+        return tuple(sorted(self.cols))
+
+    def count(self) -> jnp.ndarray:
+        """Number of valid tuples (traced scalar)."""
+        return jnp.sum(self.valid, axis=-1)
+
+    def col(self, name: str) -> jnp.ndarray:
+        return self.cols[name]
+
+    # -- transforms --------------------------------------------------------
+    def select(self, names: Iterable[str]) -> "Relation":
+        names = tuple(names)
+        return Relation({n: self.cols[n] for n in names}, self.valid)
+
+    def rename(self, mapping: Mapping[str, str]) -> "Relation":
+        return Relation(
+            {mapping.get(n, n): c for n, c in self.cols.items()}, self.valid
+        )
+
+    def filter(self, mask: jnp.ndarray) -> "Relation":
+        return Relation(dict(self.cols), self.valid & mask)
+
+    def gather(self, idx: jnp.ndarray, valid: jnp.ndarray) -> "Relation":
+        """Gather rows by index; rows with valid=False become padding."""
+        safe = jnp.where(valid, idx, 0)
+        cols = {n: jnp.where(valid, c[safe], jnp.zeros((), c.dtype)) for n, c in self.cols.items()}
+        taken_valid = valid & self.valid[safe]
+        return Relation(cols, taken_valid)
+
+    def compact(self, capacity: int | None = None) -> "Relation":
+        """Move valid rows to the front (stable); optionally resize."""
+        cap_out = capacity if capacity is not None else self.capacity
+        order = jnp.argsort(~self.valid, stable=True)  # valid rows first
+        n = self.count()
+        idx = order[:cap_out] if cap_out <= self.capacity else jnp.concatenate(
+            [order, jnp.zeros((cap_out - self.capacity,), order.dtype)]
+        )
+        valid = jnp.arange(cap_out) < n
+        return self.gather(idx, valid)
+
+    def to_numpy(self) -> Dict[str, np.ndarray]:
+        """Host-side dict of the *valid* rows (test/debug helper)."""
+        valid = np.asarray(self.valid)
+        return {n: np.asarray(c)[valid] for n, c in self.cols.items()}
+
+    def to_tuple_set(self, names: Iterable[str] | None = None) -> set:
+        """Set of valid tuples (test/debug helper)."""
+        names = tuple(names) if names is not None else self.names
+        data = self.to_numpy()
+        return set(zip(*[data[n].tolist() for n in names])) if data[names[0]].size else set()
+
+
+def concat(rels: Iterable[Relation]) -> Relation:
+    rels = list(rels)
+    names = rels[0].names
+    cols = {n: jnp.concatenate([r.cols[n] for r in rels]) for n in names}
+    valid = jnp.concatenate([r.valid for r in rels])
+    return Relation(cols, valid)
+
+
+def flatten_leading(rel: Relation) -> Relation:
+    """Collapse a leading axis (e.g. (K, cap) bucketed buffers -> (K*cap,))."""
+    cols = {n: c.reshape((-1,) + c.shape[2:]) for n, c in rel.cols.items()}
+    return Relation(cols, rel.valid.reshape(-1))

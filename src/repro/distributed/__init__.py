@@ -1,0 +1,6 @@
+from .mesh import make_mesh, single_device_mesh
+from .sharding import DEFAULT_RULES, Planner, tree_specs
+from .compression import ef_compress, ef_init, quantize, dequantize
+
+__all__ = ["make_mesh", "single_device_mesh", "DEFAULT_RULES", "Planner",
+           "tree_specs", "ef_compress", "ef_init", "quantize", "dequantize"]

@@ -1,0 +1,35 @@
+"""Mesh construction + axis conventions.
+
+Axis roles:
+  pod    — crosses DCN (slow links); only gradient all-reduce (train)
+           should traverse it.  Data-parallel.
+  data   — within-pod data parallelism (batch), ZeRO-1 state sharding,
+           and sequence parallelism for batch=1 long-context decode.
+  model  — tensor/expert parallelism (fast ICI).
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import Mesh
+
+
+def make_mesh(shape: Tuple[int, ...], axes: Tuple[str, ...]) -> Mesh:
+    if len(shape) != len(axes):
+        raise ValueError(f"mesh shape {shape} vs axes {axes}")
+    n = 1
+    for s in shape:
+        n *= s
+    if n > len(jax.devices()):
+        raise RuntimeError(
+            f"mesh needs {n} devices, have {len(jax.devices())}; the dry-run "
+            "must set XLA_FLAGS=--xla_force_host_platform_device_count "
+            "before importing jax")
+    return jax.make_mesh(shape, axes)
+
+
+def single_device_mesh() -> Mesh:
+    """1×1 mesh for CPU tests — same axis names as production."""
+    return jax.make_mesh((1, 1), ("data", "model"))

@@ -1,0 +1,73 @@
+"""Pure-jnp oracles for every Pallas kernel.
+
+Each function is the semantic ground truth a kernel must reproduce
+(asserted with assert_allclose across shape/dtype sweeps in
+tests/test_kernels.py).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def segment_sum(values: jnp.ndarray, segment_ids: jnp.ndarray,
+                num_segments: int) -> jnp.ndarray:
+    """Sum ``values`` into ``num_segments`` buckets by (sorted or unsorted)
+    ``segment_ids``; ids outside [0, num_segments) are dropped."""
+    valid = (segment_ids >= 0) & (segment_ids < num_segments)
+    ids = jnp.where(valid, segment_ids, num_segments)
+    v = jnp.where(valid, values, jnp.zeros((), values.dtype))
+    out = jnp.zeros((num_segments + 1,), values.dtype).at[ids].add(v)
+    return out[:num_segments]
+
+
+def hash_histogram(keys: jnp.ndarray, n_buckets: int, salt: int = 0,
+                   block: int = 256) -> jnp.ndarray:
+    """Per-block histogram of bucket_hash(keys): output (n_blocks, n_buckets).
+
+    keys length must be a multiple of ``block``; callers pad with
+    sentinel key < 0 rows marked by mask=False via ``valid``."""
+    from repro.core.hashing import bucket_hash
+    n = keys.shape[0]
+    assert n % block == 0, "pad keys to a multiple of the block size"
+    b = bucket_hash(keys, n_buckets, salt=salt)
+    onehot = (b[:, None] == jnp.arange(n_buckets)[None, :]).astype(jnp.int32)
+    return onehot.reshape(n // block, block, n_buckets).sum(axis=1)
+
+
+def masked_hash_histogram(keys: jnp.ndarray, valid: jnp.ndarray,
+                          n_buckets: int, salt: int = 0,
+                          block: int = 256) -> jnp.ndarray:
+    from repro.core.hashing import bucket_hash
+    n = keys.shape[0]
+    assert n % block == 0
+    b = bucket_hash(keys, n_buckets, salt=salt)
+    onehot = (b[:, None] == jnp.arange(n_buckets)[None, :]) & valid[:, None]
+    return onehot.astype(jnp.int32).reshape(n // block, block, n_buckets).sum(axis=1)
+
+
+def attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+              causal: bool = True, scale: float | None = None) -> jnp.ndarray:
+    """Reference attention.  q: (B, Hq, Sq, D); k/v: (B, Hkv, Skv, D) with
+    Hq a multiple of Hkv (GQA: each kv head serves Hq/Hkv query heads).
+    Computed in float32, returned in q.dtype."""
+    B, Hq, Sq, D = q.shape
+    _, Hkv, Skv, _ = k.shape
+    group = Hq // Hkv
+    scale = scale if scale is not None else 1.0 / jnp.sqrt(D).astype(jnp.float32)
+    qf = q.astype(jnp.float32) * scale
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    kf = jnp.repeat(kf, group, axis=1)
+    vf = jnp.repeat(vf, group, axis=1)
+    logits = jnp.einsum("bhqd,bhkd->bhqk", qf, kf)
+    if causal:
+        # Decode-friendly: align the causal diagonal to the END of the kv
+        # axis (queries are the last Sq positions of the Skv context).
+        qpos = jnp.arange(Sq)[:, None] + (Skv - Sq)
+        kpos = jnp.arange(Skv)[None, :]
+        logits = jnp.where(qpos >= kpos, logits, -jnp.inf)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", probs, vf)
+    return out.astype(q.dtype)

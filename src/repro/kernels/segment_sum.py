@@ -1,0 +1,94 @@
+"""Pallas TPU kernel: segment sum — the paper's aggregation hot-spot.
+
+The group-by-SUM reducer (paper §V) reduces to: given values and their
+(sorted) segment ids, produce per-segment sums.  TPU adaptation: instead
+of a scalar scatter-add loop (GPU-style atomics have no TPU analogue),
+each (segment-tile × input-block) cell becomes a one-hot **matmul** on
+the MXU:   out[t0:t0+T] += v_blk (1×B) @ onehot(ids_blk − t0) (B×T).
+
+For sorted ids, off-diagonal cells are skipped via a `pl.when` guard on
+the block's id range, so the work is O(N·T) along the diagonal band —
+the skip makes the kernel effectively linear while every surviving cell
+is dense MXU work (B and T are multiples of the 128 MXU width).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(ids_ref, val_ref, out_ref, *, seg_tile: int, block: int):
+    nb = pl.program_id(1)
+    st = pl.program_id(0)
+
+    @pl.when(nb == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    ids = ids_ref[0, :]
+    t0 = st * seg_tile
+    lo = jnp.min(ids)
+    hi = jnp.max(ids)
+
+    # Skip blocks whose id range cannot touch this segment tile (for
+    # sorted ids this prunes everything off the diagonal band).
+    @pl.when((hi >= t0) & (lo < t0 + seg_tile))
+    def _accumulate():
+        v = val_ref[0, :].astype(jnp.float32)
+        local = ids - t0
+        onehot = (
+            local[:, None] == jax.lax.broadcasted_iota(jnp.int32, (block, seg_tile), 1)
+        ).astype(jnp.float32)
+        contrib = jnp.dot(v[None, :], onehot,
+                          preferred_element_type=jnp.float32)  # (1, T)
+        out_ref[...] += contrib
+
+
+@functools.partial(jax.jit, static_argnames=("num_segments", "seg_tile",
+                                             "block", "interpret"))
+def segment_sum(values: jnp.ndarray, segment_ids: jnp.ndarray,
+                num_segments: int, *, seg_tile: int = 512, block: int = 1024,
+                interpret: bool = False) -> jnp.ndarray:
+    """Per-segment sums of ``values`` (float32 accumulation).
+
+    values/segment_ids: (N,).  Ids outside [0, num_segments) are dropped.
+    Result: (num_segments,) float32.
+    """
+    n = values.shape[0]
+    block = min(block, max(128, 1 << (n - 1).bit_length())) if n else block
+    pad_n = -n % block
+    seg_tile = min(seg_tile, max(128, 1 << (max(num_segments, 1) - 1).bit_length()))
+    pad_s = -num_segments % seg_tile
+
+    # Out-of-range ids (incl. padding) -> sentinel segment beyond the last
+    # tile so they never accumulate.
+    n_seg_pad = num_segments + pad_s
+    ids = jnp.where((segment_ids >= 0) & (segment_ids < num_segments),
+                    segment_ids, n_seg_pad + seg_tile)
+    ids = jnp.pad(ids, (0, pad_n), constant_values=n_seg_pad + seg_tile)
+    vals = jnp.pad(values.astype(jnp.float32), (0, pad_n))
+
+    n_blocks = (n + pad_n) // block
+    n_tiles = n_seg_pad // seg_tile
+    ids2 = ids.reshape(n_blocks, block)
+    vals2 = vals.reshape(n_blocks, block)
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, seg_tile=seg_tile, block=block),
+        grid=(n_tiles, n_blocks),
+        in_specs=[
+            pl.BlockSpec((1, block), lambda st, nb: (nb, 0)),
+            pl.BlockSpec((1, block), lambda st, nb: (nb, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, seg_tile), lambda st, nb: (st, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_tiles, seg_tile), jnp.float32),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(ids2, vals2)
+    return out.reshape(-1)[:num_segments]

@@ -1,0 +1,406 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST run before any other import (jax locks the
+# device count at first init).  Do not move them.
+if os.environ.get("REPRO_DRYRUN_DEVICES"):  # test hook (small device counts)
+    os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count="
+                               + os.environ["REPRO_DRYRUN_DEVICES"])
+
+"""Multi-pod dry-run: prove the distribution config is coherent.
+
+For every (architecture × input shape × mesh) cell:
+  jax.jit(step).lower(**input_specs).compile()
+on the 16×16 single-pod mesh and the 2×16×16 multi-pod mesh, recording
+memory_analysis() (fits?), cost_analysis() (FLOPs/bytes for §Roofline)
+and the collective-byte breakdown parsed from the compiled HLO.
+
+Also lowers the PAPER's own workload ("join3"): the 1,3JA and 2,3JA
+three-way-join pipelines on the full mesh treated as the k1×k2 reducer
+grid — the production deployment of the reproduction itself.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen2-7b --shape train_4k --mesh single
+  python -m repro.launch.dryrun --all --mesh both --out benchmarks/artifacts/dryrun
+"""
+
+import argparse
+import json
+import re
+import time
+import traceback
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import all_archs, get_config
+from repro.distributed.sharding import (Planner, rules_for_config,
+                                         tree_specs)
+from repro.launch.inputs import input_specs
+from repro.launch.mesh import make_production_mesh
+from repro.models.config import SHAPES
+from repro.models.lm import build_model
+from repro.models.params import abstract_params, axes_of
+from repro.optim import make_optimizer
+from repro.optim.optimizers import state_logical_axes
+
+
+# ---------------------------------------------------------------------------
+# HLO collective accounting
+# ---------------------------------------------------------------------------
+
+_DTYPE_BYTES = {"pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2,
+                "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+                "f64": 8, "c64": 8, "c128": 16}
+# NB: tuple types embed /*index=N*/ comments (which contain '='), so the
+# type group must admit anything on the line up to the op name.
+_COLL_RE = re.compile(
+    r"= (\(?[^\n]{1,8000}?\)?) "
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Per-device bytes moved by each collective kind (result-shape sized),
+    parsed from post-optimization HLO."""
+    out: Dict[str, float] = {}
+    for m in _COLL_RE.finditer(hlo_text):
+        kind = m.group(2)
+        out[kind] = out.get(kind, 0.0) + _shape_bytes(m.group(1))
+    out["total"] = sum(v for k, v in out.items() if k != "total")
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Cell builders
+# ---------------------------------------------------------------------------
+
+def _shardings(planner, axes_tree, sds_tree):
+    specs = tree_specs(planner, axes_tree, sds_tree)
+    return jax.tree.map(
+        lambda s: NamedSharding(planner.mesh, s), specs,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def _per_device_bytes(sds_tree, sharding_tree, mesh) -> int:
+    """Per-device bytes of a (specs, shardings) tree — used to estimate
+    what buffer donation will alias on real TPUs (XLA:CPU does not
+    implement donation, so memory_analysis over-counts by this amount)."""
+    mesh_shape = dict(zip(mesh.axis_names, mesh.devices.shape))
+    total = 0
+    for sds, sh in zip(jax.tree.leaves(sds_tree), jax.tree.leaves(sharding_tree)):
+        n = 1
+        for d in sds.shape:
+            n *= d
+        shards = 1
+        for entry in (sh.spec or ()):
+            if entry is None:
+                continue
+            axes = (entry,) if isinstance(entry, str) else entry
+            for a in axes:
+                shards *= mesh_shape.get(a, 1)
+        total += n * sds.dtype.itemsize // max(shards, 1)
+    return total
+
+
+def build_train_cell(arch: str, shape_name: str, mesh, cfg=None):
+    cfg = cfg or get_config(arch)
+    model = build_model(cfg)
+    planner = Planner(mesh, rules_for_config(cfg))
+
+    params_sds = model.abstract()
+    params_sh = _shardings(planner, model.axes(), params_sds)
+
+    opt_init, opt_update, _ = make_optimizer(cfg.optimizer, 1e-4)
+    opt_sds = jax.eval_shape(opt_init, params_sds)
+    opt_axes = type(opt_sds)(step=(), inner=state_logical_axes(
+        cfg.optimizer, model.defs))
+    opt_sh = _shardings(planner, opt_axes, opt_sds)
+
+    batch_sds, batch_axes = input_specs(model, shape_name)
+    batch_sh = _shardings(planner, batch_axes, batch_sds)
+
+    def train_step(params, opt_state, batch):
+        from repro.optim import apply_updates, clip_by_global_norm
+        from repro.train.loop import compute_grads
+        loss, grads = compute_grads(model, planner, params, batch,
+                                    cfg.microbatch)
+        grads, gnorm = clip_by_global_norm(grads, 1.0)
+        params, opt_state = opt_update(grads, opt_state, params)
+        return params, opt_state, {"loss": loss, "grad_norm": gnorm}
+
+    jitted = jax.jit(train_step,
+                     in_shardings=(params_sh, opt_sh, batch_sh),
+                     out_shardings=(params_sh, opt_sh, None),
+                     donate_argnums=(0, 1))
+    donatable = (_per_device_bytes(params_sds, params_sh, mesh)
+                 + _per_device_bytes(opt_sds, opt_sh, mesh))
+    return jitted, (params_sds, opt_sds, batch_sds), donatable
+
+
+def build_serve_cell(arch: str, shape_name: str, mesh, cfg=None):
+    cfg = cfg or get_config(arch)
+    model = build_model(cfg)
+    planner = Planner(mesh, rules_for_config(cfg))
+    shape = SHAPES[shape_name]
+
+    params_sds = model.abstract()
+    params_sh = _shardings(planner, model.axes(), params_sds)
+
+    specs, axes = input_specs(model, shape_name)
+    extras_keys = tuple(k for k in specs
+                        if k in ("frames", "image_embeds"))
+    extras_sds = {k: specs[k] for k in extras_keys}
+    extras_sh = {k: _shardings(planner, axes[k], specs[k])
+                 for k in extras_keys}
+    cache_sh = _shardings(planner, axes["cache"], specs["cache"])
+    tok_sh = NamedSharding(mesh, planner.spec(axes["tokens"],
+                                              specs["tokens"].shape))
+    pos_sh = NamedSharding(mesh, P())
+    last_only = shape.kind == "prefill"
+
+    def serve_step(params, cache, tokens, pos, extras):
+        logits, new_cache = model.decode_step(
+            params, cache, tokens, pos, planner, extras,
+            last_only=last_only)
+        return logits, new_cache
+
+    jitted = jax.jit(serve_step,
+                     in_shardings=(params_sh, cache_sh, tok_sh, pos_sh,
+                                   extras_sh),
+                     out_shardings=(None, cache_sh),
+                     donate_argnums=(1,))  # cache updated in place
+    args = (params_sds, specs["cache"], specs["tokens"], specs["pos"],
+            extras_sds)
+    donatable = _per_device_bytes(specs["cache"], cache_sh, mesh)
+    return jitted, args, donatable
+
+
+def build_join3_cell(algorithm: str, mesh, cap: int = 4096,
+                     local_combine: bool = False, tight: bool = False):
+    """The paper's workload on the production mesh: the mesh IS the
+    k1×k2 reducer grid (k1 = pod·data, k2 = model)."""
+    from repro.core import (Relation, ShardGrid, cascade_three_way_agg,
+                            one_round_three_way_agg)
+
+    names = mesh.axis_names
+    if "pod" in names:
+        grid_axes = (("pod", "data"), "model")
+        lead = (P(("pod", "data"), "model", None))
+    else:
+        grid_axes = ("data", "model")
+        lead = P("data", "model", None)
+    grid = ShardGrid(mesh, grid_axes)
+    k1, k2 = grid.shape
+
+    def make_rel_specs(names3):
+        return {n: jax.ShapeDtypeStruct((k1, k2, cap),
+                                        jnp.int32 if n != names3[2] else jnp.float32)
+                for n in names3}
+
+    r_sds = {"cols": make_rel_specs(("a", "b", "v")),
+             "valid": jax.ShapeDtypeStruct((k1, k2, cap), jnp.bool_)}
+    s_sds = {"cols": make_rel_specs(("b", "c", "w")),
+             "valid": jax.ShapeDtypeStruct((k1, k2, cap), jnp.bool_)}
+    t_sds = {"cols": make_rel_specs(("c", "d", "x")),
+             "valid": jax.ShapeDtypeStruct((k1, k2, cap), jnp.bool_)}
+
+    caps = dict(recv=max(cap // 8, 64), local=cap, mid=4 * cap,
+                agg=2 * cap, join=8 * cap, out=4 * cap)
+    if tight:
+        # combiner-informed capacity plan: local pre-aggregation bounds
+        # each reducer's shuffle input, so the round-2 buffers shrink
+        # (static-shape engines realize combiner gains through capacity
+        # planning, not dynamic sizes).
+        caps.update(recv=max(cap // 16, 64), mid=2 * cap, agg=cap,
+                    out=2 * cap)
+
+    def body(grid_, R, S, T):
+        if algorithm == "1,3JA":
+            out, stats, ovf = one_round_three_way_agg(
+                grid_, R, S, T, recv_capacity=caps["recv"],
+                mid_capacity=caps["mid"], join_capacity=caps["join"],
+                out_capacity=caps["out"], local_capacity=caps["local"])
+        else:
+            out, stats, ovf = cascade_three_way_agg(
+                grid_, R, S, T, recv_capacity=caps["recv"],
+                mid_capacity=caps["mid"], agg_capacity=caps["agg"],
+                out_capacity=caps["out"], local_capacity=caps["local"],
+                local_combine=local_combine)
+        return out, stats, ovf
+
+    def step(r, s, t):
+        def shard_body(rc, rv, sc, sv, tc, tv):
+            sq = lambda c: jax.tree.map(lambda x: x.reshape(x.shape[2:]), c)
+            R = Relation(sq(rc), sq({"v": rv})["v"])
+            S = Relation(sq(sc), sq({"v": sv})["v"])
+            T = Relation(sq(tc), sq({"v": tv})["v"])
+            out, stats, ovf = body(grid, R, S, T)
+            ex = lambda x: x.reshape((1, 1) + x.shape)
+            return (jax.tree.map(ex, out.cols), ex(out.valid), stats,
+                    ovf.astype(jnp.int32))
+
+        return jax.shard_map(
+            shard_body, mesh=mesh,
+            in_specs=(lead, lead, lead, lead, lead, lead),
+            out_specs=(lead, lead, P(), P()),
+            check_vma=False)(r["cols"], r["valid"], s["cols"], s["valid"],
+                             t["cols"], t["valid"])
+
+    jitted = jax.jit(step)
+    return jitted, (r_sds, s_sds, t_sds)
+
+
+# ---------------------------------------------------------------------------
+# Runner
+# ---------------------------------------------------------------------------
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str) -> Dict:
+    rec: Dict = {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+                 "status": "ok"}
+    t0 = time.perf_counter()
+    try:
+        mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+        rec["mesh_shape"] = dict(zip(mesh.axis_names, mesh.devices.shape))
+        n_chips = int(mesh.devices.size)
+
+        donatable = 0
+        if arch.startswith("join3"):
+            algorithm = "1,3JA" if arch.endswith("1r") else "2,3JA"
+            jitted, args = build_join3_cell(
+                algorithm, mesh, local_combine=arch.endswith("2rc"))
+        else:
+            cfg = get_config(arch)
+            shape = SHAPES[shape_name]
+            ok, why = shape.applicable(cfg)
+            if not ok:
+                rec["status"] = "skipped"
+                rec["reason"] = why
+                return rec
+            if shape.kind == "train":
+                jitted, args, donatable = build_train_cell(arch, shape_name, mesh)
+            else:
+                jitted, args, donatable = build_serve_cell(arch, shape_name, mesh)
+
+        lowered = jitted.lower(*args)
+        rec["lower_s"] = time.perf_counter() - t0
+        t1 = time.perf_counter()
+        compiled = lowered.compile()
+        rec["compile_s"] = time.perf_counter() - t1
+
+        mem = compiled.memory_analysis()
+        for field in ("argument_size_in_bytes", "output_size_in_bytes",
+                      "temp_size_in_bytes", "generated_code_size_in_bytes",
+                      "alias_size_in_bytes"):
+            rec.setdefault("memory", {})[field] = int(
+                getattr(mem, field, 0) or 0)
+        args_b = rec["memory"]["argument_size_in_bytes"]
+        temp_b = rec["memory"]["temp_size_in_bytes"]
+        out_b = rec["memory"]["output_size_in_bytes"]
+        alias_b = rec["memory"]["alias_size_in_bytes"]
+        rec["memory"]["per_device_total_bytes"] = args_b + temp_b + out_b - alias_b
+        # XLA:CPU does not implement donation; on TPU the donated inputs
+        # alias their outputs, so the deployable footprint excludes them.
+        rec["memory"]["donatable_bytes"] = int(donatable)
+        rec["memory"]["tpu_estimate_bytes"] = max(
+            args_b + temp_b + out_b - alias_b - (donatable if alias_b == 0 else 0),
+            0)
+        rec["n_chips"] = n_chips
+
+        cost = compiled.cost_analysis()
+        if isinstance(cost, list):
+            cost = cost[0] if cost else {}
+        rec["cost"] = {k: float(v) for k, v in cost.items()
+                       if isinstance(v, (int, float)) and (
+                           k in ("flops", "bytes accessed", "transcendentals")
+                           or k.startswith("bytes accessed"))}
+
+        hlo = compiled.as_text()
+        rec["collectives"] = collective_bytes(hlo)
+        rec["hlo_ops"] = {
+            "all-reduce": hlo.count(" all-reduce("),
+            "all-gather": hlo.count(" all-gather("),
+            "reduce-scatter": hlo.count(" reduce-scatter("),
+            "all-to-all": hlo.count(" all-to-all("),
+            "collective-permute": hlo.count(" collective-permute("),
+        }
+    except Exception as e:  # a failing cell is a bug — record loudly
+        rec["status"] = "error"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-4000:]
+    return rec
+
+
+def all_cells(meshes):
+    cells = []
+    for arch in all_archs():
+        for shape_name in SHAPES:
+            for mesh_kind in meshes:
+                cells.append((arch, shape_name, mesh_kind))
+    for algo_arch in ("join3-1r", "join3-2r"):
+        for mesh_kind in meshes:
+            cells.append((algo_arch, "paper", mesh_kind))
+    return cells
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default="train_4k")
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="benchmarks/artifacts/dryrun")
+    args = ap.parse_args()
+
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    cells = all_cells(meshes) if args.all else [
+        (args.arch, args.shape, m) for m in meshes]
+
+    os.makedirs(args.out, exist_ok=True)
+    n_fail = 0
+    for arch, shape_name, mesh_kind in cells:
+        name = f"{arch}__{shape_name}__{mesh_kind}".replace("/", "_")
+        path = os.path.join(args.out, name + ".json")
+        if os.path.exists(path):
+            with open(path) as f:
+                prev = json.load(f)
+            if prev.get("status") == "ok":
+                print(f"[cached] {name}")
+                continue
+        print(f"[run    ] {name} ...", flush=True)
+        rec = run_cell(arch, shape_name, mesh_kind)
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=1)
+        status = rec["status"]
+        extra = ""
+        if status == "ok":
+            mem_gb = rec["memory"]["tpu_estimate_bytes"] / 2**30
+            extra = (f" mem/dev={mem_gb:.2f}GiB "
+                     f"flops={rec['cost'].get('flops', 0):.3g} "
+                     f"coll={rec['collectives'].get('total', 0):.3g}B "
+                     f"compile={rec['compile_s']:.0f}s")
+        if status == "error":
+            n_fail += 1
+            extra = " " + rec["error"][:200]
+        print(f"[{status:7s}] {name}{extra}", flush=True)
+    if n_fail:
+        raise SystemExit(f"{n_fail} cells failed")
+
+
+if __name__ == "__main__":
+    main()

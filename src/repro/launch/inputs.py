@@ -1,0 +1,69 @@
+"""input_specs(): ShapeDtypeStruct stand-ins for every model input.
+
+Weak-type-correct, shardable, no device allocation — consumed by the
+dry-run's .lower().  Logical axes accompany every spec so the sharding
+planner can produce in_shardings for any mesh.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..models.config import SHAPES, ModelConfig, ShapeConfig
+from ..models.lm import Model
+from ..models.params import abstract_params, axes_of
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeConfig) -> Tuple[Dict, Dict]:
+    """(ShapeDtypeStructs, logical-axes) for one train/prefill batch."""
+    B = shape.global_batch
+    S = shape.seq_len
+    specs = {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+    axes = {"tokens": ("batch", None)}
+    if cfg.family == "encdec":
+        specs["frames"] = jax.ShapeDtypeStruct(
+            (B, cfg.n_audio_frames, cfg.d_model), jnp.bfloat16)
+        axes["frames"] = ("batch", None, "act_embed")
+    if cfg.family == "vlm":
+        specs["image_embeds"] = jax.ShapeDtypeStruct(
+            (B, cfg.n_image_tokens, cfg.d_model), jnp.bfloat16)
+        axes["image_embeds"] = ("batch", None, "act_embed")
+    return specs, axes
+
+
+def decode_specs(model: Model, shape: ShapeConfig,
+                 token_len: int = 1) -> Tuple[Dict, Dict]:
+    """(specs, axes) for serve_step: ``token_len`` new tokens against a
+    seq_len-capacity KV cache (token_len=seq_len => prefill)."""
+    B = shape.global_batch
+    cache_defs = model.cache_defs(B, shape.seq_len)
+    specs = {
+        "cache": abstract_params(cache_defs, jnp.bfloat16),
+        "tokens": jax.ShapeDtypeStruct((B, token_len), jnp.int32),
+        "pos": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+    axes = {
+        "cache": axes_of(cache_defs),
+        "tokens": ("batch", None),
+        "pos": (),
+    }
+    return specs, axes
+
+
+def input_specs(model: Model, shape_name: str):
+    """The assignment-facing entry point: all inputs for (arch, shape)."""
+    shape = SHAPES[shape_name]
+    if shape.kind == "train":
+        return batch_specs(model.cfg, shape)
+    if shape.kind == "prefill":
+        # prefill: full-sequence forward writing the cache, last logits only
+        specs, axes = decode_specs(model, shape, token_len=shape.seq_len)
+        sp, ax = batch_specs(model.cfg, shape)
+        for k in sp:
+            if k != "tokens":
+                specs[k], axes[k] = sp[k], ax[k]
+        return specs, axes
+    return decode_specs(model, shape)

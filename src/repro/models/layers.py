@@ -1,0 +1,274 @@
+"""Shared neural layers: norms, RoPE, attention (train/decode/cross), MLPs.
+
+All functions are pure; parameters are plain dicts built from ParamDef
+trees.  Attention defaults to a chunked (flash-style, jnp) implementation
+whose HBM high-water mark is O(chunk·S) instead of O(S²) — the same
+blocking the Pallas kernel (repro/kernels/flash_attention.py) performs
+in VMEM on real TPUs; XLA-on-CPU compiles this path for the dry-run.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..distributed.sharding import Planner
+from .config import ModelConfig
+from .params import ParamDef
+
+
+# ---------------------------------------------------------------------------
+# Norms / embeddings / positions
+# ---------------------------------------------------------------------------
+
+def norm_defs(cfg: ModelConfig, d: int | None = None) -> Dict[str, ParamDef]:
+    d = d or cfg.d_model
+    out = {"scale": ParamDef((d,), ("embed",), init="ones")}
+    if cfg.norm == "ln":
+        out["bias"] = ParamDef((d,), ("embed",), init="zeros")
+    return out
+
+
+def apply_norm(p: Dict, x: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    if "bias" in p:  # LayerNorm
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + eps)
+        y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    else:  # RMSNorm
+        ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(ms + eps) * p["scale"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def sinusoidal_positions(n: int, d: int) -> jnp.ndarray:
+    pos = jnp.arange(n, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(d // 2, dtype=jnp.float32)[None, :]
+    ang = pos / jnp.power(10000.0, 2 * dim / d)
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: (B, S, H, D); positions: (B, S) int32."""
+    d = x.shape[-1]
+    freqs = jnp.power(theta, -jnp.arange(0, d, 2, dtype=jnp.float32) / d)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (B, S, D/2)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention
+# ---------------------------------------------------------------------------
+
+def attention_defs(cfg: ModelConfig, cross: bool = False) -> Dict[str, ParamDef]:
+    d, qd, kvd = cfg.d_model, cfg.q_dim, cfg.kv_dim
+    out = {
+        "wq": ParamDef((d, qd), ("embed", "q_features")),
+        "wk": ParamDef((d, kvd), ("embed", "kv_features")),
+        "wv": ParamDef((d, kvd), ("embed", "kv_features")),
+        "wo": ParamDef((qd, d), ("q_features", "embed")),
+    }
+    if cfg.qkv_bias:
+        out["bq"] = ParamDef((qd,), ("q_features",), init="zeros")
+        out["bk"] = ParamDef((kvd,), ("kv_features",), init="zeros")
+        out["bv"] = ParamDef((kvd,), ("kv_features",), init="zeros")
+    return out
+
+
+def _sdpa_block(q, k, v, mask, scale):
+    """q: (B,Hkv,G,Cq,D); k/v: (B,Hkv,Skv,D); mask: (Cq,Skv) or None."""
+    logits = jnp.einsum("bhgqd,bhkd->bhgqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    if mask is not None:
+        logits = jnp.where(mask[None, None, None], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhgqk,bhkd->bhgqd", probs, v.astype(jnp.float32))
+
+
+def multihead_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                        causal: bool, q_offset, kv_len: Optional[jnp.ndarray],
+                        cfg: ModelConfig) -> jnp.ndarray:
+    """q: (B,Sq,H,D); k/v: (B,Skv,Hkv,D).  Returns (B,Sq,H,D) in q.dtype.
+
+    q_offset: absolute position of q[0] (scalar; causal alignment).
+    kv_len:   valid kv length (scalar; masks cache tail), or None.
+    """
+    B, Sq, H, D = q.shape
+    _, Skv, Hkv, _ = k.shape
+    G = H // Hkv
+    scale = D ** -0.5
+    qg = q.reshape(B, Sq, Hkv, G, D).transpose(0, 2, 3, 1, 4)  # (B,Hkv,G,Sq,D)
+    kt = k.transpose(0, 2, 1, 3)                               # (B,Hkv,Skv,D)
+    vt = v.transpose(0, 2, 1, 3)
+
+    kpos = jnp.arange(Skv)
+    def mask_for(q_lo, cq):
+        qpos = q_lo + jnp.arange(cq)[:, None] + q_offset
+        m = jnp.ones((cq, Skv), bool)
+        if causal:
+            m &= qpos >= kpos[None, :]
+        if kv_len is not None:
+            m &= kpos[None, :] < kv_len
+        return m
+
+    chunk = cfg.attn_chunk
+    if cfg.attn_impl == "naive" or Sq <= chunk:
+        out = _sdpa_block(qg, kt, vt, mask_for(0, Sq), scale)
+    else:
+        pad = -Sq % chunk
+        qp = jnp.pad(qg, ((0, 0), (0, 0), (0, 0), (0, pad), (0, 0)))
+        n_chunks = (Sq + pad) // chunk
+
+        def body(ci):
+            qc = jax.lax.dynamic_slice_in_dim(qp, ci * chunk, chunk, axis=3)
+            return _sdpa_block(qc, kt, vt, mask_for(ci * chunk, chunk), scale)
+
+        out = jax.lax.map(body, jnp.arange(n_chunks))    # (n,B,Hkv,G,chunk,D)
+        out = jnp.moveaxis(out, 0, 3).reshape(B, Hkv, G, Sq + pad, D)[:, :, :, :Sq]
+    return out.transpose(0, 3, 1, 2, 4).reshape(B, Sq, H, D).astype(q.dtype)
+
+
+def attention_forward(p: Dict, x: jnp.ndarray, *, cfg: ModelConfig,
+                      planner: Planner, positions: jnp.ndarray,
+                      causal: bool = True, is_cross: bool = False,
+                      kv_src: Optional[jnp.ndarray] = None,
+                      cache: Optional[Dict[str, jnp.ndarray]] = None,
+                      cache_pos=None,
+                      ) -> Tuple[jnp.ndarray, Optional[Dict[str, jnp.ndarray]]]:
+    """Self- or cross-attention with optional KV cache.
+
+    x: (B, S, d).  kv_src: encoder/image states for cross-attention
+    (is_cross=True); at decode time kv_src may be None and the
+    precomputed cross cache is reused.
+    cache: {"k","v": (B, Smax, Hkv, D)}; cache_pos: write offset scalar.
+    Returns (output (B,S,d), updated cache or None).
+    """
+    B, S, d = x.shape
+    H, Hkv, D = cfg.padded_heads, cfg.n_kv_heads, cfg.head_dim
+
+    q = (x @ p["wq"] + p.get("bq", 0.0)).reshape(B, S, H, D)
+
+    if is_cross and kv_src is None:
+        # Cross-attention at decode time: reuse the precomputed cross cache
+        # (at prefill kv_src is provided and the cache is recomputed).
+        assert cache is not None, "cross-attention decode needs a cache"
+        k, v, new_cache, kv_len = cache["k"], cache["v"], cache, None
+    else:
+        kv_in = x if kv_src is None else kv_src
+        k = (kv_in @ p["wk"] + p.get("bk", 0.0)).reshape(B, -1, Hkv, D)
+        v = (kv_in @ p["wv"] + p.get("bv", 0.0)).reshape(B, -1, Hkv, D)
+        if cfg.pos == "rope" and not is_cross:
+            q = rope(q, positions, cfg.rope_theta)
+            k = rope(k, positions, cfg.rope_theta)
+        if is_cross:
+            # Fresh cross cache (prefill/train): REPLACES any cache given.
+            new_cache = {"k": k.astype(jnp.bfloat16),
+                         "v": v.astype(jnp.bfloat16)}
+            kv_len = None
+        elif cache is not None:
+            # Self-attention decode: append new kv at cache_pos.
+            ck = jax.lax.dynamic_update_slice_in_dim(
+                cache["k"], k.astype(cache["k"].dtype), cache_pos, axis=1)
+            cv = jax.lax.dynamic_update_slice_in_dim(
+                cache["v"], v.astype(cache["v"].dtype), cache_pos, axis=1)
+            new_cache = {"k": ck, "v": cv}
+            k, v = ck, cv
+            kv_len = cache_pos + S
+        else:
+            new_cache, kv_len = None, None
+
+    q = planner.constrain(q, ("batch", None, "act_heads", None))
+    out = multihead_attention(
+        q, k, v, causal=causal,
+        q_offset=(cache_pos if cache_pos is not None else 0),
+        kv_len=kv_len, cfg=cfg)
+    out = out.reshape(B, S, H * D) @ p["wo"]
+    return out.astype(x.dtype), new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def mlp_defs(cfg: ModelConfig, d_ff: int | None = None) -> Dict[str, ParamDef]:
+    d = cfg.d_model
+    f = d_ff or cfg.d_ff
+    if cfg.act == "swiglu":
+        return {"wg": ParamDef((d, f), ("embed", "ff")),
+                "wu": ParamDef((d, f), ("embed", "ff")),
+                "wd": ParamDef((f, d), ("ff", "embed"))}
+    return {"wu": ParamDef((d, f), ("embed", "ff")),
+            "bu": ParamDef((f,), ("ff",), init="zeros"),
+            "wd": ParamDef((f, d), ("ff", "embed")),
+            "bd": ParamDef((d,), ("embed",), init="zeros")}
+
+
+def mlp_forward(p: Dict, x: jnp.ndarray, cfg: ModelConfig,
+                planner: Planner) -> jnp.ndarray:
+    if "wg" in p:
+        h = jax.nn.silu(x @ p["wg"]) * (x @ p["wu"])
+        h = planner.constrain(h, ("batch", None, "act_ff"))
+        return (h @ p["wd"]).astype(x.dtype)
+    h = jax.nn.gelu((x @ p["wu"] + p["bu"]).astype(jnp.float32)).astype(x.dtype)
+    h = planner.constrain(h, ("batch", None, "act_ff"))
+    return (h @ p["wd"] + p["bd"]).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Loss
+# ---------------------------------------------------------------------------
+
+def cross_entropy(logits: jnp.ndarray, targets: jnp.ndarray,
+                  mask: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """logits (..., V) fp32-accumulated stable CE; targets int32."""
+    lf = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(lf, axis=-1)
+    gold = jnp.take_along_axis(lf, targets[..., None], axis=-1)[..., 0]
+    nll = lse - gold
+    if mask is not None:
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)
+
+
+def lm_loss(h: jnp.ndarray, head: jnp.ndarray, targets: jnp.ndarray,
+            mask: Optional[jnp.ndarray], cfg: ModelConfig,
+            planner: Planner) -> jnp.ndarray:
+    """Final-hidden -> CE loss, optionally chunked over the sequence so the
+    (B,S,V) logits tensor is never materialized (perf lever; §Perf)."""
+    if not cfg.logit_chunk or h.shape[1] <= cfg.logit_chunk:
+        logits = h @ head
+        logits = planner.constrain(logits, ("batch", None, "act_vocab"))
+        return cross_entropy(logits, targets, mask)
+
+    C = cfg.logit_chunk
+    B, S, d = h.shape
+    pad = -S % C
+    hp = jnp.pad(h, ((0, 0), (0, pad), (0, 0)))
+    tp = jnp.pad(targets, ((0, 0), (0, pad)))
+    mp = jnp.pad(mask if mask is not None else jnp.ones_like(targets, jnp.float32),
+                 ((0, 0), (0, pad)))
+    n = (S + pad) // C
+
+    def body(carry, ci):
+        tot, cnt = carry
+        hc = jax.lax.dynamic_slice_in_dim(hp, ci * C, C, axis=1)
+        tc = jax.lax.dynamic_slice_in_dim(tp, ci * C, C, axis=1)
+        mc = jax.lax.dynamic_slice_in_dim(mp, ci * C, C, axis=1)
+        logits = hc @ head
+        lf = logits.astype(jnp.float32)
+        lse = jax.scipy.special.logsumexp(lf, axis=-1)
+        gold = jnp.take_along_axis(lf, tc[..., None], axis=-1)[..., 0]
+        nll = (lse - gold) * mc
+        return (tot + jnp.sum(nll), cnt + jnp.sum(mc)), None
+
+    (tot, cnt), _ = jax.lax.scan(body, (jnp.zeros((), jnp.float32),) * 2,
+                                 jnp.arange(n))
+    return tot / jnp.maximum(cnt, 1.0)

@@ -1,0 +1,596 @@
+"""Model assembly: every assigned architecture behind one interface.
+
+A built model exposes:
+  defs / init / axes      — ParamDef tree, materializer, logical axes
+  loss(params, batch, planner)           -> scalar loss (train step core)
+  decode_step(params, cache, tokens, pos, planner) -> (logits, cache)
+  cache_defs(batch, max_len)             -> ParamDef tree for the KV/state
+                                            cache (dry-run: abstract specs)
+
+Layer stacks are lax.scan'd over stacked parameters (compact HLO — one
+layer body compiled once regardless of depth) with optional jax.checkpoint
+(remat).  Mixed stacks (xlstm, whisper) unroll in Python; periodic
+structures (zamba's shared attention, vlm's cross-attention) scan over
+super-blocks.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..distributed.sharding import Planner
+from .config import ModelConfig
+from . import layers as L
+from . import moe as MOE
+from . import ssm as SSM
+from . import xlstm as XL
+from .params import (ParamDef, abstract_params, axes_of, init_params,
+                     stack_layers, zeros_of)
+
+
+# ---------------------------------------------------------------------------
+# Block definitions
+# ---------------------------------------------------------------------------
+
+def _dense_block_defs(cfg: ModelConfig) -> Dict:
+    return {"ln1": L.norm_defs(cfg), "attn": L.attention_defs(cfg),
+            "ln2": L.norm_defs(cfg), "mlp": L.mlp_defs(cfg)}
+
+
+def _moe_block_defs(cfg: ModelConfig) -> Dict:
+    return {"ln1": L.norm_defs(cfg), "attn": L.attention_defs(cfg),
+            "ln2": L.norm_defs(cfg), "moe": MOE.moe_defs(cfg)}
+
+
+def _dense_block(p, x, cfg, planner, positions, cache, cache_pos):
+    h, new_cache = L.attention_forward(
+        p["attn"], L.apply_norm(p["ln1"], x), cfg=cfg, planner=planner,
+        positions=positions, causal=True, cache=cache, cache_pos=cache_pos)
+    x = x + h
+    x = x + L.mlp_forward(p["mlp"], L.apply_norm(p["ln2"], x), cfg, planner)
+    return x, new_cache, jnp.zeros((), jnp.float32)
+
+
+def _moe_block(p, x, cfg, planner, positions, cache, cache_pos):
+    h, new_cache = L.attention_forward(
+        p["attn"], L.apply_norm(p["ln1"], x), cfg=cfg, planner=planner,
+        positions=positions, causal=True, cache=cache, cache_pos=cache_pos)
+    x = x + h
+    m, aux = MOE.moe_forward(p["moe"], L.apply_norm(p["ln2"], x), cfg, planner)
+    return x + m, new_cache, aux
+
+
+# ---------------------------------------------------------------------------
+# Base decoder-only model (dense / moe), scan over layers
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class Model:
+    cfg: ModelConfig
+    defs: Any
+    _loss: Callable
+    _decode: Callable
+    _cache_defs: Callable
+    aux_weight: float = 0.01
+
+    def init(self, key, dtype=jnp.bfloat16):
+        return init_params(self.defs, key, dtype)
+
+    def abstract(self, dtype=jnp.bfloat16):
+        return abstract_params(self.defs, dtype)
+
+    def axes(self):
+        return axes_of(self.defs)
+
+    def loss(self, params, batch, planner: Planner):
+        return self._loss(params, batch, planner)
+
+    def decode_step(self, params, cache, tokens, pos, planner: Planner,
+                    extras: Optional[Dict] = None, last_only: bool = False):
+        return self._decode(params, cache, tokens, pos, planner,
+                            extras or {}, last_only)
+
+    def cache_defs(self, batch_size: int, max_len: int):
+        return self._cache_defs(batch_size, max_len)
+
+
+def _embed_defs(cfg: ModelConfig) -> Dict:
+    out = {"embedding": ParamDef((cfg.padded_vocab, cfg.d_model),
+                                 ("vocab", "embed"), scale=1.0),
+           "ln_f": L.norm_defs(cfg),
+           "lm_head": ParamDef((cfg.d_model, cfg.padded_vocab),
+                               ("embed", "vocab"))}
+    if cfg.pos == "learned":
+        out["pos_embedding"] = ParamDef((8192, cfg.d_model), (None, "embed"),
+                                        scale=0.02)
+    return out
+
+
+def _embed(params, tokens, cfg, planner, positions=None):
+    x = jnp.take(params["embedding"], tokens, axis=0)
+    if cfg.pos == "learned":
+        x = x + jnp.take(params["pos_embedding"],
+                         jnp.minimum(positions, 8191), axis=0)
+    elif cfg.pos == "sinusoidal":
+        x = x + L.sinusoidal_positions(tokens.shape[1], cfg.d_model
+                                       ).astype(x.dtype)[None]
+    return planner.constrain(x, ("batch", None, "act_embed"))
+
+
+def _shift_loss(hidden, params, tokens, cfg, planner):
+    h = L.apply_norm(params["ln_f"], hidden)
+    targets = tokens[:, 1:]
+    mask = jnp.ones_like(targets, jnp.float32)
+    return L.lm_loss(h[:, :-1], params["lm_head"], targets, mask, cfg, planner)
+
+
+def _kv_cache_defs(cfg: ModelConfig, n_layers: int, batch: int, max_len: int):
+    shape = (n_layers, batch, max_len, cfg.n_kv_heads, cfg.head_dim)
+    axes = ("layers", "batch", "seq", "kv_heads", None)
+    return {"k": ParamDef(shape, axes, init="zeros"),
+            "v": ParamDef(shape, axes, init="zeros")}
+
+
+def build_decoder_lm(cfg: ModelConfig) -> Model:
+    """Uniform decoder stacks: dense and moe families."""
+    block_defs = _moe_block_defs(cfg) if cfg.family == "moe" else _dense_block_defs(cfg)
+    block_fn = _moe_block if cfg.family == "moe" else _dense_block
+    defs = dict(_embed_defs(cfg), blocks=stack_layers(cfg.n_layers, block_defs))
+
+    def run_stack(params, x, planner, positions, caches=None, cache_pos=None):
+        def apply_block(p_l, h, cache_l):
+            return block_fn(p_l, h, cfg, planner, positions, cache_l, cache_pos)
+
+        fn = apply_block
+        if cfg.remat and caches is None:  # remat only on the train path
+            policy = (jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+                      if cfg.remat_policy == "dots" else None)
+            fn = jax.checkpoint(apply_block, policy=policy)
+
+        def body(carry, xs):
+            h, aux = carry
+            p_l, cache_l = (xs, None) if caches is None else xs
+            h2, new_cache, aux_l = fn(p_l, h, cache_l)
+            if cfg.seq_shard_activations:
+                # Megatron-SP analogue: the residual stream lives sharded
+                # over (batch x model-on-seq) between blocks; GSPMD turns
+                # the TP all-reduces into reduce-scatter + all-gather.
+                h2 = planner.constrain(h2, ("batch", "act_seq", None))
+            return (h2, aux + aux_l), new_cache
+
+        xs = params["blocks"] if caches is None else (params["blocks"], caches)
+        (h, aux), new_caches = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)), xs)
+        return h, aux, new_caches
+
+    def loss_fn(params, batch, planner):
+        tokens = batch["tokens"]
+        B, S = tokens.shape
+        positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+        x = _embed(params, tokens, cfg, planner, positions)
+        h, aux, _ = run_stack(params, x, planner, positions)
+        return _shift_loss(h, params, tokens, cfg, planner) + 0.01 * aux
+
+    def decode_fn(params, cache, tokens, pos, planner, extras, last_only=False):
+        B, S = tokens.shape
+        positions = pos + jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+        x = _embed(params, tokens, cfg, planner, positions)
+        h, _aux, new_cache = run_stack(params, x, planner, positions,
+                                       caches=cache, cache_pos=pos)
+        if last_only:
+            h = h[:, -1:]
+        h = L.apply_norm(params["ln_f"], h)
+        logits = h @ params["lm_head"]
+        return planner.constrain(logits, ("batch", None, "act_vocab")), new_cache
+
+    def cache_defs(batch, max_len):
+        return _kv_cache_defs(cfg, cfg.n_layers, batch, max_len)
+
+    return Model(cfg, defs, loss_fn, decode_fn, cache_defs)
+
+
+# ---------------------------------------------------------------------------
+# xLSTM (mixed mLSTM/sLSTM stack, unrolled — small models)
+# ---------------------------------------------------------------------------
+
+def _xlstm_layer_kinds(cfg: ModelConfig):
+    kinds = []
+    for i in range(cfg.n_layers):
+        if cfg.slstm_every and (i + 1) % cfg.slstm_every == 0:
+            kinds.append("slstm")
+        else:
+            kinds.append("mlstm")
+    return kinds
+
+
+def build_xlstm_lm(cfg: ModelConfig) -> Model:
+    kinds = _xlstm_layer_kinds(cfg)
+    blocks = []
+    for kind in kinds:
+        inner = XL.mlstm_defs(cfg) if kind == "mlstm" else XL.slstm_defs(cfg)
+        blocks.append({"ln": L.norm_defs(cfg), "cell": inner})
+    defs = dict(_embed_defs(cfg), blocks=tuple(blocks))
+
+    def run(params, x, planner, states=None):
+        new_states = []
+        for i, kind in enumerate(kinds):
+            p = params["blocks"][i]
+            st = None if states is None else states[i]
+            xin = L.apply_norm(p["ln"], x)
+            if kind == "mlstm":
+                if x.shape[1] == 1 and st is not None:
+                    h, ns = XL.mlstm_decode_step(p["cell"], xin, cfg, st)
+                else:
+                    h, ns = XL.mlstm_forward(p["cell"], xin, cfg, planner, st)
+            else:
+                if x.shape[1] == 1 and st is not None:
+                    h, ns = XL.slstm_decode_step(p["cell"], xin, cfg, st)
+                else:
+                    h, ns = XL.slstm_forward(p["cell"], xin, cfg, planner, st)
+            x = x + h
+            new_states.append(ns)
+        return x, tuple(new_states)
+
+    def loss_fn(params, batch, planner):
+        tokens = batch["tokens"]
+        x = _embed(params, tokens, cfg, planner)
+        h, _ = run(params, x, planner)
+        return _shift_loss(h, params, tokens, cfg, planner)
+
+    def decode_fn(params, cache, tokens, pos, planner, extras, last_only=False):
+        x = _embed(params, tokens, cfg, planner)
+        h, new_states = run(params, x, planner, states=cache)
+        if last_only:
+            h = h[:, -1:]
+        h = L.apply_norm(params["ln_f"], h)
+        return h @ params["lm_head"], new_states
+
+    def cache_defs(batch, max_len):
+        d_in, H, P = XL._dims(cfg)
+        out = []
+        for kind in kinds:
+            if kind == "mlstm":
+                out.append({"mlstm": ParamDef((batch, H, 1, P + 1, P),
+                                              ("batch", "ssm_heads", None, None, None),
+                                              init="zeros", dtype="float32")})
+            else:
+                d = cfg.d_model
+                out.append({"slstm": (
+                    ParamDef((batch, d), ("batch", None), init="zeros"),
+                    ParamDef((batch, d), ("batch", None), init="zeros", dtype="float32"),
+                    ParamDef((batch, d), ("batch", None), init="zeros", dtype="float32"),
+                    ParamDef((batch, d), ("batch", None), init="zeros", dtype="float32"))})
+        return tuple(out)
+
+    return Model(cfg, defs, loss_fn, decode_fn, cache_defs)
+
+
+# ---------------------------------------------------------------------------
+# Zamba-style hybrid: scanned mamba2 stack + one shared attention block
+# ---------------------------------------------------------------------------
+
+def build_hybrid_lm(cfg: ModelConfig) -> Model:
+    k = cfg.shared_attn_every
+    n_super = cfg.n_layers // k
+    tail = cfg.n_layers % k
+    mamba_defs_one = {"ln": L.norm_defs(cfg), "mix": SSM.mamba_defs(cfg)}
+    defs = dict(
+        _embed_defs(cfg),
+        super_blocks=stack_layers(n_super, stack_layers(k, mamba_defs_one)),
+        tail_blocks=stack_layers(tail, mamba_defs_one) if tail else {},
+        shared_attn={"ln": L.norm_defs(cfg), "attn": L.attention_defs(cfg),
+                     "ln2": L.norm_defs(cfg), "mlp": L.mlp_defs(cfg)},
+    )
+
+    def mamba_apply(p, x, planner, st, decode):
+        xin = L.apply_norm(p["ln"], x)
+        if decode:
+            h, ns = SSM.mamba_decode_step(p["mix"], xin, cfg, st)
+        else:
+            h, ns = SSM.mamba_forward(p["mix"], xin, cfg, planner, st)
+        return x + h, ns
+
+    def shared_apply(p, x, planner, positions, cache, cache_pos):
+        h, nc = L.attention_forward(
+            p["attn"], L.apply_norm(p["ln"], x), cfg=cfg, planner=planner,
+            positions=positions, causal=True, cache=cache, cache_pos=cache_pos)
+        x = x + h
+        x = x + L.mlp_forward(p["mlp"], L.apply_norm(p["ln2"], x), cfg, planner)
+        return x, nc
+
+    def mamba_state_defs(batch):
+        d_in, H, conv_dim = SSM.mamba_dims(cfg)
+        return {"ssd": ParamDef((batch, 1, H, cfg.ssm_head_dim, cfg.ssm_state),
+                                ("batch", None, "ssm_heads", None, None),
+                                init="zeros", dtype="float32"),
+                "conv": ParamDef((batch, cfg.ssm_conv - 1, conv_dim),
+                                 ("batch", None, "ff"), init="zeros")}
+
+    def run(params, x, planner, positions, states, attn_caches, cache_pos,
+            decode):
+        def super_body(carry, xs):
+            h = carry
+            p_sb, st_sb, ac = xs
+
+            def inner(carry2, xs2):
+                h2 = carry2
+                p_l, st_l = xs2
+                h2, ns = mamba_apply(p_l, h2, planner, st_l, decode)
+                return h2, ns
+
+            h, n_st = jax.lax.scan(inner, h, (p_sb, st_sb))
+            h, n_ac = shared_apply(params["shared_attn"], h, planner,
+                                   positions, ac, cache_pos)
+            return h, (n_st, n_ac)
+
+        h, (new_states, new_ac) = jax.lax.scan(
+            super_body, x,
+            (params["super_blocks"], states["mamba"], attn_caches))
+
+        new_tail = states.get("tail")
+        if tail:
+            def tail_body(carry, xs):
+                h2 = carry
+                p_l, st_l = xs
+                h2, ns = mamba_apply(p_l, h2, planner, st_l, decode)
+                return h2, ns
+            h, new_tail = jax.lax.scan(tail_body, h,
+                                       (params["tail_blocks"], states["tail"]))
+        return h, {"mamba": new_states, "tail": new_tail}, new_ac
+
+    def zero_states(batch):
+        one = mamba_state_defs(batch)
+        st = {"mamba": stack_layers(n_super, stack_layers(k, one)),
+              "tail": stack_layers(tail, one) if tail else {}}
+        return st
+
+    def loss_fn(params, batch_d, planner):
+        tokens = batch_d["tokens"]
+        B, S = tokens.shape
+        positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+        x = _embed(params, tokens, cfg, planner, positions)
+        states = zeros_of(zero_states(B))
+        h, _, _ = run(params, x, planner, positions, states, None, None,
+                      decode=False)
+        return _shift_loss(h, params, tokens, cfg, planner)
+
+    def decode_fn(params, cache, tokens, pos, planner, extras, last_only=False):
+        B, S = tokens.shape
+        positions = pos + jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+        x = _embed(params, tokens, cfg, planner, positions)
+        decode = S == 1  # full-sequence prefill uses the chunked scan
+        h, new_states, new_ac = run(params, x, planner, positions,
+                                    cache["states"], cache["attn"], pos,
+                                    decode=decode)
+        if last_only:
+            h = h[:, -1:]
+        h = L.apply_norm(params["ln_f"], h)
+        logits = h @ params["lm_head"]
+        return logits, {"states": new_states, "attn": new_ac}
+
+    def cache_defs(batch, max_len):
+        one = mamba_state_defs(batch)
+        return {
+            "states": {"mamba": stack_layers(n_super, stack_layers(k, one)),
+                       "tail": stack_layers(tail, one) if tail else {}},
+            "attn": {"k": ParamDef((n_super, batch, max_len, cfg.n_kv_heads,
+                                    cfg.head_dim),
+                                   ("layers", "batch", "seq", "kv_heads", None),
+                                   init="zeros"),
+                     "v": ParamDef((n_super, batch, max_len, cfg.n_kv_heads,
+                                    cfg.head_dim),
+                                   ("layers", "batch", "seq", "kv_heads", None),
+                                   init="zeros")},
+        }
+
+    return Model(cfg, defs, loss_fn, decode_fn, cache_defs)
+
+
+# ---------------------------------------------------------------------------
+# Whisper-style encoder-decoder (stub audio frontend)
+# ---------------------------------------------------------------------------
+
+def build_encdec_lm(cfg: ModelConfig) -> Model:
+    enc_block = {"ln1": L.norm_defs(cfg), "attn": L.attention_defs(cfg),
+                 "ln2": L.norm_defs(cfg), "mlp": L.mlp_defs(cfg)}
+    dec_block = {"ln1": L.norm_defs(cfg), "attn": L.attention_defs(cfg),
+                 "lnx": L.norm_defs(cfg), "xattn": L.attention_defs(cfg, cross=True),
+                 "ln2": L.norm_defs(cfg), "mlp": L.mlp_defs(cfg)}
+    defs = dict(
+        _embed_defs(cfg),
+        enc_blocks=stack_layers(cfg.n_encoder_layers, enc_block),
+        dec_blocks=stack_layers(cfg.n_layers, dec_block),
+        enc_ln_f=L.norm_defs(cfg),
+    )
+
+    def encode(params, frames, planner):
+        x = frames + L.sinusoidal_positions(
+            frames.shape[1], cfg.d_model).astype(frames.dtype)[None]
+        x = planner.constrain(x, ("batch", None, "act_embed"))
+        positions = jnp.broadcast_to(jnp.arange(x.shape[1])[None],
+                                     x.shape[:2])
+
+        def body(h, p_l):
+            a, _ = L.attention_forward(
+                p_l["attn"], L.apply_norm(p_l["ln1"], h), cfg=cfg,
+                planner=planner, positions=positions, causal=False)
+            h = h + a
+            h = h + L.mlp_forward(p_l["mlp"], L.apply_norm(p_l["ln2"], h),
+                                  cfg, planner)
+            return h, None
+
+        x, _ = jax.lax.scan(body, x, params["enc_blocks"])
+        return L.apply_norm(params["enc_ln_f"], x)
+
+    def dec_stack(params, x, enc_out, planner, positions, caches, cache_pos):
+        def body(carry, xs):
+            h = carry
+            p_l, cache_l = xs if caches is not None else (xs, None)
+            self_cache = None if cache_l is None else cache_l["self"]
+            a, nc_self = L.attention_forward(
+                p_l["attn"], L.apply_norm(p_l["ln1"], h), cfg=cfg,
+                planner=planner, positions=positions, causal=True,
+                cache=self_cache, cache_pos=cache_pos)
+            h = h + a
+            cross_cache = None if cache_l is None else cache_l["cross"]
+            xa, nc_cross = L.attention_forward(
+                p_l["xattn"], L.apply_norm(p_l["lnx"], h), cfg=cfg,
+                planner=planner, positions=positions, causal=False,
+                is_cross=True, kv_src=enc_out, cache=cross_cache)
+            h = h + xa
+            h = h + L.mlp_forward(p_l["mlp"], L.apply_norm(p_l["ln2"], h),
+                                  cfg, planner)
+            new_cache = None
+            if cache_l is not None:
+                new_cache = {"self": nc_self, "cross": nc_cross}
+            return h, new_cache
+
+        xs = params["dec_blocks"] if caches is None else (params["dec_blocks"], caches)
+        h, new_caches = jax.lax.scan(body, x, xs)
+        return h, new_caches
+
+    def loss_fn(params, batch, planner):
+        frames = batch["frames"]
+        tokens = batch["tokens"]
+        B, S = tokens.shape
+        enc_out = encode(params, frames, planner)
+        positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+        x = _embed(params, tokens, cfg, planner, positions)
+        h, _ = dec_stack(params, x, enc_out, planner, positions, None, None)
+        return _shift_loss(h, params, tokens, cfg, planner)
+
+    def decode_fn(params, cache, tokens, pos, planner, extras, last_only=False):
+        B, S = tokens.shape
+        positions = pos + jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+        x = _embed(params, tokens, cfg, planner, positions)
+        # prefill: frames provided -> run the encoder, recompute cross KV;
+        # decode: cross caches already hold enc KV.
+        enc_out = encode(params, extras["frames"], planner) \
+            if "frames" in extras else None
+        h, new_caches = dec_stack(params, x, enc_out, planner, positions,
+                                  cache, pos)
+        if last_only:
+            h = h[:, -1:]
+        h = L.apply_norm(params["ln_f"], h)
+        return h @ params["lm_head"], new_caches
+
+    def cache_defs(batch, max_len):
+        kv = _kv_cache_defs(cfg, cfg.n_layers, batch, max_len)
+        cross_shape = (cfg.n_layers, batch, cfg.n_audio_frames,
+                       cfg.n_kv_heads, cfg.head_dim)
+        return {"self": kv,
+                "cross": {"k": ParamDef(cross_shape,
+                                        ("layers", "batch", None, "kv_heads", None),
+                                        init="zeros"),
+                          "v": ParamDef(cross_shape,
+                                        ("layers", "batch", None, "kv_heads", None),
+                                        init="zeros")}}
+
+    return Model(cfg, defs, loss_fn, decode_fn, cache_defs)
+
+
+# ---------------------------------------------------------------------------
+# VLM: decoder LM with periodic gated cross-attention to image tokens
+# ---------------------------------------------------------------------------
+
+def build_vlm_lm(cfg: ModelConfig) -> Model:
+    k = cfg.cross_attn_every
+    n_super = cfg.n_layers // k
+    self_block = _dense_block_defs(cfg)
+    cross_block = {"lnx": L.norm_defs(cfg),
+                   "xattn": L.attention_defs(cfg, cross=True),
+                   "gate": ParamDef((1,), (None,), init="zeros")}
+    defs = dict(
+        _embed_defs(cfg),
+        super_blocks=stack_layers(n_super, {
+            "selfs": stack_layers(k, self_block), "cross": cross_block}),
+    )
+
+    def run(params, x, img, planner, positions, caches, cache_pos):
+        def super_body(carry, xs):
+            h = carry
+            p_sb, cache_sb = xs if caches is not None else (xs, None)
+
+            def inner(c2, xs2):
+                h2 = c2
+                p_l, cache_l = xs2 if caches is not None else (xs2, None)
+                h2, nc, _aux = _dense_block(p_l, h2, cfg, planner, positions,
+                                            cache_l, cache_pos)
+                return h2, nc
+
+            xs_inner = p_sb["selfs"] if caches is None else \
+                (p_sb["selfs"], cache_sb["self"])
+            h, n_self = jax.lax.scan(inner, h, xs_inner)
+
+            cross_cache = None if caches is None else cache_sb["cross"]
+            xa, n_cross = L.attention_forward(
+                p_sb["cross"]["xattn"],
+                L.apply_norm(p_sb["cross"]["lnx"], h), cfg=cfg,
+                planner=planner, positions=positions, causal=False,
+                is_cross=True, kv_src=img, cache=cross_cache)
+            gate = jnp.tanh(p_sb["cross"]["gate"].astype(jnp.float32)
+                            ).astype(h.dtype)
+            h = h + gate * xa
+            new_cache = None if caches is None else \
+                {"self": n_self, "cross": n_cross}
+            return h, new_cache
+
+        xs = params["super_blocks"] if caches is None else \
+            (params["super_blocks"], caches)
+        h, new_caches = jax.lax.scan(super_body, x, xs)
+        return h, new_caches
+
+    def loss_fn(params, batch, planner):
+        tokens = batch["tokens"]
+        img = batch["image_embeds"]
+        B, S = tokens.shape
+        positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+        x = _embed(params, tokens, cfg, planner, positions)
+        h, _ = run(params, x, img, planner, positions, None, None)
+        return _shift_loss(h, params, tokens, cfg, planner)
+
+    def decode_fn(params, cache, tokens, pos, planner, extras, last_only=False):
+        B, S = tokens.shape
+        positions = pos + jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+        x = _embed(params, tokens, cfg, planner, positions)
+        img = extras.get("image_embeds")  # provided at prefill only
+        h, new_caches = run(params, x, img, planner, positions, cache, pos)
+        if last_only:
+            h = h[:, -1:]
+        h = L.apply_norm(params["ln_f"], h)
+        return h @ params["lm_head"], new_caches
+
+    def cache_defs(batch, max_len):
+        self_shape = (n_super, k, batch, max_len, cfg.n_kv_heads, cfg.head_dim)
+        cross_shape = (n_super, batch, cfg.n_image_tokens, cfg.n_kv_heads,
+                       cfg.head_dim)
+        kv_axes_self = ("layers", None, "batch", "seq", "kv_heads", None)
+        kv_axes_cross = ("layers", "batch", None, "kv_heads", None)
+        return {"self": {"k": ParamDef(self_shape, kv_axes_self, init="zeros"),
+                         "v": ParamDef(self_shape, kv_axes_self, init="zeros")},
+                "cross": {"k": ParamDef(cross_shape, kv_axes_cross, init="zeros"),
+                          "v": ParamDef(cross_shape, kv_axes_cross, init="zeros")}}
+
+    return Model(cfg, defs, loss_fn, decode_fn, cache_defs)
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+def build_model(cfg: ModelConfig) -> Model:
+    if cfg.family in ("dense", "moe"):
+        return build_decoder_lm(cfg)
+    if cfg.family == "ssm":
+        return build_xlstm_lm(cfg)
+    if cfg.family == "hybrid":
+        return build_hybrid_lm(cfg)
+    if cfg.family == "encdec":
+        return build_encdec_lm(cfg)
+    if cfg.family == "vlm":
+        return build_vlm_lm(cfg)
+    raise ValueError(f"unknown family {cfg.family!r}")

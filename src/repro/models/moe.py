@@ -1,0 +1,347 @@
+"""Mixture-of-Experts layer built on the paper's join machinery.
+
+Token→expert dispatch IS a distributed join (DESIGN.md §3):
+
+  Tokens(tid, expert, weight) ⋈ Experts(expert, params)
+
+and the combine step is the paper's aggregation — a group-by-`tid`
+weighted SUM.  Concretely, the dispatch reuses the map-phase counting
+sort (`repro.core.local.partition_ranks`) to place each routed copy in
+its expert's capacity buffer, and the combine is a segment-sum
+scatter-add followed by one `psum` over the expert-parallel mesh axis.
+
+Two dispatch strategies (the paper's 1,3J-vs-2,3JA trade-off, reborn):
+
+* "replicated" (default): activations are replicated across the model
+  axis (they already are, post attention all-reduce), every shard
+  gathers the tokens its local experts need with NO collective, and one
+  all-reduce combines outputs.  This mirrors 1,3J's broadcast: the
+  replication cost is paid on the (cheap, already-required) activation
+  path, making the expert dispatch itself communication-free.
+* "a2a": tokens are routed point-to-point with all_to_all over the
+  model axis (2,3J-style: each tuple travels once) — lower collective
+  bytes at large expert counts; implemented for the §Perf comparison.
+
+Both run under shard_map so the collective schedule is explicit.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from ..distributed.sharding import Planner
+from .config import ModelConfig
+from .params import ParamDef
+
+
+def moe_defs(cfg: ModelConfig) -> Dict[str, ParamDef]:
+    d, E, f = cfg.d_model, cfg.n_experts, cfg.expert_d_ff
+    out = {
+        "router": ParamDef((d, E), ("embed", "experts"), scale=0.02),
+        "wg": ParamDef((E, d, f), ("experts", "embed", "expert_ff")),
+        "wu": ParamDef((E, d, f), ("experts", "embed", "expert_ff")),
+        "wd": ParamDef((E, f, d), ("experts", "expert_ff", "embed")),
+    }
+    if cfg.n_shared_experts:
+        fs = cfg.expert_d_ff * cfg.n_shared_experts
+        out["shared_wg"] = ParamDef((d, fs), ("embed", "ff"))
+        out["shared_wu"] = ParamDef((d, fs), ("embed", "ff"))
+        out["shared_wd"] = ParamDef((fs, d), ("ff", "embed"))
+    return out
+
+
+def _capacity(cfg: ModelConfig, n_tokens: int) -> int:
+    c = int(n_tokens * cfg.top_k * cfg.capacity_factor / max(cfg.n_experts, 1))
+    return max(8, -(-c // 8) * 8)
+
+
+def _route(p, x_flat, cfg: ModelConfig):
+    """Router: top-k expert ids + renormalized weights per token."""
+    logits = (x_flat @ p["router"]).astype(jnp.float32)      # (N, E)
+    gates = jax.nn.softmax(logits, axis=-1)
+    weights, ids = jax.lax.top_k(gates, cfg.top_k)           # (N, K)
+    weights = weights / jnp.maximum(
+        jnp.sum(weights, axis=-1, keepdims=True), 1e-9)
+    # load-balancing auxiliary loss (Switch-style)
+    density = jnp.mean(gates, axis=0)
+    onehot = jax.nn.one_hot(ids[:, 0], cfg.n_experts)
+    frac = jnp.mean(onehot, axis=0)
+    aux = cfg.n_experts * jnp.sum(density * frac)
+    return ids.astype(jnp.int32), weights.astype(jnp.float32), aux
+
+
+def _dispatch_plan(ids: jnp.ndarray, n_experts: int, capacity: int):
+    """Map-phase counting sort (paper §III): for each routed copy, its
+    slot in the destination expert's capacity buffer.
+
+    ids: (N, K) -> gather_idx (E, C) into the flat routed array, valid
+    mask (E, C), and per-copy keep mask (N*K,) for the combine."""
+    from ..core.local import partition_ranks
+    flat = ids.reshape(-1)                                    # (N*K,)
+    nk = flat.shape[0]
+    order, sorted_bucket, rank = partition_ranks(
+        flat, jnp.ones((nk,), jnp.bool_), n_experts)
+    keep = (rank < capacity) & (sorted_bucket < n_experts)
+    dest = jnp.where(keep, sorted_bucket * capacity + rank, n_experts * capacity)
+    gather = jnp.zeros((n_experts * capacity + 1,), jnp.int32
+                       ).at[dest].set(order.astype(jnp.int32), mode="drop")
+    validf = jnp.zeros((n_experts * capacity + 1,), jnp.bool_
+                       ).at[dest].set(keep, mode="drop")
+    return (gather[:-1].reshape(n_experts, capacity),
+            validf[:-1].reshape(n_experts, capacity))
+
+
+def _expert_ffn(wg, wu, wd, xin):
+    """xin: (E_local, C, d) -> (E_local, C, d); SwiGLU per expert."""
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xin, wg))
+    h = h * jnp.einsum("ecd,edf->ecf", xin, wu)
+    return jnp.einsum("ecf,efd->ecd", h, wd)
+
+
+def ep_axes_for(cfg: ModelConfig, mesh_shape: Dict[str, int]):
+    """The mesh axes the a2a dispatch routes over (experts sharded there).
+    Prefer the full DP extent (pod×data) so expert params divide by the
+    whole chip count; fall back to data-only, then to None (=> use the
+    replicated strategy)."""
+    for axes in (("pod", "data"), ("data",)):
+        if all(a in mesh_shape for a in axes):
+            n = 1
+            for a in axes:
+                n *= mesh_shape[a]
+            if n > 1 and cfg.n_experts % n == 0:
+                return axes, n
+    return None, 1
+
+
+def moe_forward(p: Dict, x: jnp.ndarray, cfg: ModelConfig,
+                planner: Planner) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (B, S, d) -> (out (B, S, d), aux_loss scalar).
+
+    Runs under shard_map over the full mesh.  Dispatch strategies
+    (DESIGN.md §3 — the paper's trade-off):
+
+    * replicated: tokens stay replicated across the model axis (1,3J's
+      broadcast); experts sharded on the model axis (or their ffn dim
+      TP-sharded when the count doesn't divide — grok's 8 experts).
+      Zero dispatch collectives, one psum to combine.
+    * a2a: experts sharded over the DP axes (pod·data), ffn dim over
+      model; each routed token copy travels point-to-point via
+      all_to_all and the results return the same way (2,3J: each tuple
+      moves once).  Collective bytes per layer drop from O(weights) /
+      O(replication) to O(tokens) — mandatory at the 1T tier.
+    """
+    mesh = planner.mesh
+    if mesh is None:
+        return _moe_local(p, x, cfg), jnp.zeros((), jnp.float32)
+
+    axis_names = mesh.axis_names
+    batch_axes = tuple(a for a in ("pod", "data") if a in axis_names)
+    model_axis = "model"
+    n_model = planner.mesh_shape.get(model_axis, 1)
+    xspec = P(batch_axes, None, None)
+
+    ep_axes, n_ep = ep_axes_for(cfg, planner.mesh_shape)
+    use_a2a = cfg.moe_dispatch == "a2a" and ep_axes is not None
+
+    if use_a2a:
+        # experts over DP axes, expert ffn TP over model.
+        wspec = P(ep_axes, None, model_axis)
+        wdspec = P(ep_axes, model_axis, None)
+    else:
+        shard_experts = cfg.n_experts % max(n_model, 1) == 0 and n_model > 1
+        if shard_experts:
+            wspec = wdspec = P(model_axis, None, None)
+        else:
+            wspec = P(None, None, model_axis)
+            wdspec = P(None, model_axis, None)
+
+    pspec = {
+        "router": P(None, None),
+        "wg": wspec, "wu": wspec, "wd": wdspec,
+    }
+    for k in ("shared_wg", "shared_wu", "shared_wd"):
+        if k in p:
+            pspec[k] = P(None, model_axis) if k != "shared_wd" else P(model_axis, None)
+
+    if use_a2a:
+        ep_sizes = tuple(planner.mesh_shape[a] for a in ep_axes)
+        body = functools.partial(_moe_a2a_body, cfg=cfg, ep_axes=ep_axes,
+                                 ep_sizes=ep_sizes, n_ep=n_ep,
+                                 model_axis=model_axis,
+                                 all_axes=tuple(axis_names))
+    else:
+        body = functools.partial(_moe_shard_body, cfg=cfg,
+                                 shard_experts=shard_experts,
+                                 model_axis=model_axis, n_model=n_model,
+                                 all_axes=tuple(axis_names))
+    out, aux = jax.shard_map(
+        body, mesh=mesh,
+        in_specs=({k: pspec[k] for k in p}, xspec),
+        out_specs=(xspec, P()),
+        check_vma=False)(p, x)
+    return out, aux
+
+
+def _moe_a2a_body(p, x, *, cfg: ModelConfig, ep_axes, ep_sizes, n_ep: int,
+                  model_axis: str, all_axes: tuple):
+    """all_to_all expert parallelism: route token copies to the DP shard
+    owning their expert, compute, route back, combine, psum over model
+    (the expert ffn is TP-sharded there)."""
+    from ..core.local import partition_ranks
+
+    B, S, d = x.shape
+    N = B * S
+    K = cfg.top_k
+    e_local = cfg.n_experts // n_ep
+    xf = x.reshape(N, d)
+    ids, weights, aux = _route(p, xf, cfg)                  # (N,K)
+
+    # ---- send plan: route copies by destination EP shard ------------------
+    flat_ids = ids.reshape(-1)                               # (N*K,)
+    dest = flat_ids // e_local
+    cap_send = max(8, -(-int(N * K * cfg.capacity_factor / n_ep) // 8) * 8)
+    order, sorted_dest, rank = partition_ranks(
+        dest, jnp.ones_like(dest, dtype=jnp.bool_), n_ep)
+    keep = (rank < cap_send) & (sorted_dest < n_ep)
+    slot = jnp.where(keep, sorted_dest * cap_send + rank, n_ep * cap_send)
+    total = n_ep * cap_send
+
+    def scatter_to_slots(v, fill=0):
+        out = jnp.full((total + 1,) + v.shape[1:], fill, v.dtype)
+        return out.at[slot].set(v[order], mode="drop")[:total]
+
+    copy_flat = scatter_to_slots(jnp.arange(N * K, dtype=jnp.int32))
+    copy_token = copy_flat // K                              # src token idx
+    copy_expert = scatter_to_slots(flat_ids)
+    copy_valid = (jnp.zeros((total + 1,), jnp.bool_)
+                  .at[slot].set(keep, mode="drop")[:total])
+    send_x = jnp.where(copy_valid[:, None],
+                       xf[copy_token], 0).astype(x.dtype)
+
+    # ---- exchange: copies travel to their expert's shard -------------------
+    shape2 = lambda a: a.reshape((n_ep, cap_send) + a.shape[1:])
+    a2a = lambda a: jax.lax.all_to_all(shape2(a), ep_axes, split_axis=0,
+                                       concat_axis=0, tiled=False)
+    recv_x = a2a(send_x)                                     # (n_ep, cap, d)
+    recv_expert = a2a(copy_expert)
+    recv_valid = a2a(copy_valid)
+
+    # ---- local expert grouping (map-phase counting sort again) ------------
+    my_idx = jnp.zeros((), jnp.int32)
+    for a, sz in zip(ep_axes, ep_sizes):
+        my_idx = my_idx * sz + jax.lax.axis_index(a)
+    my_base = my_idx * e_local
+    flat_recv_e = jnp.where(recv_valid.reshape(-1),
+                            recv_expert.reshape(-1) - my_base, e_local)
+    cap_loc = max(8, -(-int(n_ep * cap_send * cfg.capacity_factor
+                            / max(e_local, 1)) // 8) * 8)
+    g_idx, g_valid = _dispatch_plan_from_flat(flat_recv_e, e_local, cap_loc)
+    xin = jnp.where(g_valid[..., None],
+                    recv_x.reshape(-1, d)[g_idx], 0).astype(x.dtype)
+    yout = _expert_ffn(p["wg"], p["wu"], p["wd"], xin)       # partial (f TP'd)
+
+    # ---- return path: inverse scatter, reverse a2a -------------------------
+    back = jnp.zeros((n_ep * cap_send + 1, d), yout.dtype)
+    back = back.at[jnp.where(g_valid, g_idx, n_ep * cap_send)].add(
+        yout * g_valid[..., None], mode="drop")[:-1]
+    recv_back = jax.lax.all_to_all(back.reshape(n_ep, cap_send, d), ep_axes,
+                                   split_axis=0, concat_axis=0, tiled=False)
+    recv_back = recv_back.reshape(-1, d)                     # aligned w/ send slots
+
+    # ---- combine at source: group-by-token weighted sum --------------------
+    wcopy = weights.reshape(-1)[copy_flat]
+    contrib = recv_back.astype(jnp.float32) * (wcopy * copy_valid)[:, None]
+    out = jnp.zeros((N + 1, d), jnp.float32).at[
+        jnp.where(copy_valid, copy_token, N)].add(contrib, mode="drop")[:N]
+    out = jax.lax.psum(out, model_axis)
+
+    if "shared_wg" in p:
+        h = jax.nn.silu(xf @ p["shared_wg"]) * (xf @ p["shared_wu"])
+        out = out + jax.lax.psum((h @ p["shared_wd"]).astype(jnp.float32),
+                                 model_axis)
+
+    aux = jax.lax.pmean(aux, all_axes)
+    return out.reshape(B, S, d).astype(x.dtype), aux
+
+
+def _dispatch_plan_from_flat(flat_local_e: jnp.ndarray, n_experts: int,
+                             capacity: int):
+    """(E_local, C) gather plan from a flat local-expert-id array."""
+    from ..core.local import partition_ranks
+    nk = flat_local_e.shape[0]
+    order, sorted_bucket, rank = partition_ranks(
+        flat_local_e, jnp.ones((nk,), jnp.bool_), n_experts)
+    keep = (rank < capacity) & (sorted_bucket < n_experts)
+    dest = jnp.where(keep, sorted_bucket * capacity + rank,
+                     n_experts * capacity)
+    gather = jnp.zeros((n_experts * capacity + 1,), jnp.int32
+                       ).at[dest].set(order.astype(jnp.int32), mode="drop")
+    validf = jnp.zeros((n_experts * capacity + 1,), jnp.bool_
+                       ).at[dest].set(keep, mode="drop")
+    return (gather[:-1].reshape(n_experts, capacity),
+            validf[:-1].reshape(n_experts, capacity))
+
+
+def _moe_shard_body(p, x, *, cfg: ModelConfig, shard_experts: bool,
+                    model_axis: str, n_model: int, all_axes: tuple):
+    B, S, d = x.shape
+    N = B * S
+    xf = x.reshape(N, d)
+    ids, weights, aux = _route(p, xf, cfg)
+    cap = _capacity(cfg, N)
+    gather, valid = _dispatch_plan(ids, cfg.n_experts, cap)   # (E, C)
+
+    if shard_experts:
+        e_local = cfg.n_experts // n_model
+        my = jax.lax.axis_index(model_axis) * e_local
+        g_loc = jax.lax.dynamic_slice_in_dim(gather, my, e_local, axis=0)
+        v_loc = jax.lax.dynamic_slice_in_dim(valid, my, e_local, axis=0)
+    else:
+        g_loc, v_loc = gather, valid                          # all experts, TP'd ffn
+
+    tok_idx = g_loc // cfg.top_k                              # routed copy -> token
+    xin = jnp.where(v_loc[..., None], xf[tok_idx], 0.0).astype(x.dtype)
+    yout = _expert_ffn(p["wg"], p["wu"], p["wd"], xin)        # (E_l, C, d)
+
+    # Combine: group-by-token weighted sum (the paper's aggregation).
+    wflat = weights.reshape(-1)[g_loc]                        # (E_l, C)
+    contrib = yout.astype(jnp.float32) * (wflat * v_loc)[..., None]
+    out = jnp.zeros((N + 1, d), jnp.float32).at[
+        jnp.where(v_loc, tok_idx, N)].add(contrib, mode="drop")[:N]
+    out = jax.lax.psum(out, model_axis)
+
+    if "shared_wg" in p:
+        # Shared-expert ffn is TP-sharded on its ff dim -> partial sums.
+        h = jax.nn.silu(xf @ p["shared_wg"]) * (xf @ p["shared_wu"])
+        out = out + jax.lax.psum((h @ p["shared_wd"]).astype(jnp.float32),
+                                 model_axis)
+
+    # aux must be replicated for the P() out_spec: mean over every axis.
+    aux = jax.lax.pmean(aux, all_axes)
+    return out.reshape(B, S, d).astype(x.dtype), aux
+
+
+def _moe_local(p, x, cfg: ModelConfig) -> jnp.ndarray:
+    """Single-device reference path (CPU tests, no mesh)."""
+    B, S, d = x.shape
+    N = B * S
+    xf = x.reshape(N, d)
+    ids, weights, _ = _route(p, xf, cfg)
+    cap = _capacity(cfg, N)
+    gather, valid = _dispatch_plan(ids, cfg.n_experts, cap)
+    tok_idx = gather // cfg.top_k
+    xin = jnp.where(valid[..., None], xf[tok_idx], 0.0).astype(x.dtype)
+    yout = _expert_ffn(p["wg"], p["wu"], p["wd"], xin)
+    wflat = weights.reshape(-1)[gather]
+    contrib = yout.astype(jnp.float32) * (wflat * valid)[..., None]
+    out = jnp.zeros((N + 1, d), jnp.float32).at[
+        jnp.where(valid, tok_idx, N)].add(contrib, mode="drop")[:N]
+    if "shared_wg" in p:
+        h = jax.nn.silu(xf @ p["shared_wg"]) * (xf @ p["shared_wu"])
+        out = out + (h @ p["shared_wd"]).astype(jnp.float32)
+    return out.reshape(B, S, d).astype(x.dtype)

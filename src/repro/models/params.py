@@ -1,0 +1,81 @@
+"""Parameter definition system: shapes + logical sharding axes together.
+
+A model builds a pytree of ParamDef; `init_params` materializes arrays,
+`axes_of` extracts the logical-axes pytree consumed by the sharding
+planner (distributed/sharding.py).  Layer stacks are stacked along a
+leading "layers" axis (replicated) so the forward pass can lax.scan.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamDef:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]
+    init: str = "normal"             # normal | zeros | ones
+    scale: float = 1.0
+    dtype: Optional[str] = None      # None -> the model dtype
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+    def resolve_dtype(self, default):
+        return jnp.dtype(self.dtype) if self.dtype else default
+
+
+def _is_def(x) -> bool:
+    return isinstance(x, ParamDef)
+
+
+def init_params(defs, key: jax.Array, dtype=jnp.bfloat16):
+    leaves, treedef = jax.tree.flatten(defs, is_leaf=_is_def)
+    keys = jax.random.split(key, max(len(leaves), 1))
+
+    def make(d: ParamDef, k):
+        dt = d.resolve_dtype(dtype)
+        if d.init == "zeros":
+            return jnp.zeros(d.shape, dt)
+        if d.init == "ones":
+            return jnp.ones(d.shape, dt)
+        fan_in = d.shape[-2] if len(d.shape) >= 2 else d.shape[-1]
+        std = d.scale * (fan_in ** -0.5)
+        return (jax.random.normal(k, d.shape, jnp.float32) * std).astype(dt)
+
+    return jax.tree.unflatten(treedef, [make(d, k) for d, k in zip(leaves, keys)])
+
+
+def zeros_of(defs, dtype=jnp.bfloat16):
+    """Zero arrays matching a ParamDef tree (cache/state allocation)."""
+    return jax.tree.map(
+        lambda d: jnp.zeros(d.shape, d.resolve_dtype(dtype)), defs,
+        is_leaf=_is_def)
+
+
+def abstract_params(defs, dtype=jnp.bfloat16):
+    """ShapeDtypeStructs — for dry-run lowering without allocation."""
+    return jax.tree.map(
+        lambda d: jax.ShapeDtypeStruct(d.shape, d.resolve_dtype(dtype)), defs,
+        is_leaf=_is_def)
+
+
+def axes_of(defs):
+    """Pytree of logical-axes tuples, aligned with the param pytree."""
+    return jax.tree.map(lambda d: d.axes, defs, is_leaf=_is_def)
+
+
+def stack_layers(n: int, layer_defs):
+    """Prepend a 'layers' axis to every ParamDef (for scan-over-layers)."""
+    return jax.tree.map(
+        lambda d: ParamDef((n,) + d.shape, ("layers",) + d.axes, d.init, d.scale),
+        layer_defs, is_leaf=_is_def)
+
+
+def param_count(params) -> int:
+    return sum(p.size for p in jax.tree.leaves(params))

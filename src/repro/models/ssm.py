@@ -1,0 +1,216 @@
+"""State-space sequence mixing: Mamba2 (SSD) and the shared chunked scan.
+
+The chunked-parallel SSD form (Dao & Gu 2024) is implemented once and
+reused by both Mamba2 blocks (zamba2, standalone ssm) and xLSTM's mLSTM
+cells (same linear recurrence: state_t = exp(a_t)·state_{t-1} + b_t⊗u_t,
+y_t = c_t·state_t — mLSTM is SSD with per-head keys/queries as b/c).
+
+TPU adaptation: within-chunk terms are dense (L×L) MXU matmuls; the
+inter-chunk recurrence is a lax.scan over chunks carrying the (H,P,N)
+state — sequential but O(S/L) steps.  Sub-quadratic in S, which is what
+qualifies the ssm/hybrid archs for the long_500k shape.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..distributed.sharding import Planner
+from .config import ModelConfig
+from .params import ParamDef
+
+
+def ssd_chunked(u: jnp.ndarray, a: jnp.ndarray, b: jnp.ndarray,
+                c: jnp.ndarray, chunk: int,
+                init_state: Optional[jnp.ndarray] = None,
+                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Linear recurrence  st_t = exp(a_t)·st_{t-1} + b_t ⊗ u_t,
+                          y_t  = c_t · st_t.
+
+    u: (B,S,G,Hg,P) payload; a: (B,S,G,Hg) log-decay;
+    b, c: (B,S,G,N) (G groups share b/c across Hg heads-per-group).
+    Returns (y (B,S,G,Hg,P), final_state (B,G,Hg,P,N)).
+    """
+    Bsz, S, G, Hg, P = u.shape
+    N = b.shape[-1]
+    L = min(chunk, S)
+    pad = -S % L
+    if pad:
+        u = jnp.pad(u, ((0, 0), (0, pad)) + ((0, 0),) * 3)
+        a = jnp.pad(a, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        b = jnp.pad(b, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        c = jnp.pad(c, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    nc = (S + pad) // L
+
+    uf = u.astype(jnp.float32).reshape(Bsz, nc, L, G, Hg, P)
+    af = a.astype(jnp.float32).reshape(Bsz, nc, L, G, Hg)
+    bf = b.astype(jnp.float32).reshape(Bsz, nc, L, G, N)
+    cf = c.astype(jnp.float32).reshape(Bsz, nc, L, G, N)
+
+    cum = jnp.cumsum(af, axis=2)                      # (B,nc,L,G,Hg)
+    # intra-chunk: y_i += sum_{j<=i} exp(cum_i - cum_j) (c_i·b_j) u_j
+    gmat = jnp.einsum("bnigk,bnjgk->bnijg", cf, bf)   # (B,nc,L,L,G)
+    delta = cum[:, :, :, None] - cum[:, :, None]      # (B,nc,L,L,G,Hg)
+    tri = jnp.tril(jnp.ones((L, L), bool))
+    m = jnp.where(tri[None, None, :, :, None, None], jnp.exp(delta), 0.0)
+    y_intra = jnp.einsum("bnijg,bnijgh,bnjghp->bnighp", gmat, m, uf)
+
+    # chunk states: sum_j exp(cum_last - cum_j) u_j ⊗ b_j
+    decay_tail = jnp.exp(cum[:, :, -1:, :, :] - cum)  # (B,nc,L,G,Hg)
+    cstate = jnp.einsum("bnjgh,bnjghp,bnjgk->bnghpk", decay_tail, uf, bf)
+
+    # inter-chunk recurrence
+    total = jnp.exp(cum[:, :, -1])                    # (B,nc,G,Hg)
+
+    def step(st, inputs):
+        tot, cs = inputs                              # (B,G,Hg), (B,G,Hg,P,N)
+        st_new = tot[..., None, None] * st + cs
+        return st_new, st                             # emit state BEFORE chunk
+
+    init = (jnp.zeros((Bsz, G, Hg, P, N), jnp.float32)
+            if init_state is None else init_state.astype(jnp.float32))
+    final, prev_states = jax.lax.scan(
+        step, init, (jnp.moveaxis(total, 1, 0), jnp.moveaxis(cstate, 1, 0)))
+    prev_states = jnp.moveaxis(prev_states, 0, 1)     # (B,nc,G,Hg,P,N)
+
+    y_inter = jnp.einsum("bnigk,bnigh,bnghpk->bnighp",
+                         cf, jnp.exp(cum), prev_states)
+    y = (y_intra + y_inter).reshape(Bsz, nc * L, G, Hg, P)[:, :S]
+    return y.astype(u.dtype), final
+
+
+def ssd_decode_step(u, a, b, c, state):
+    """One-token recurrence.  u: (B,G,Hg,P); a: (B,G,Hg); b/c: (B,G,N);
+    state: (B,G,Hg,P,N).  Returns (y (B,G,Hg,P), new state)."""
+    st = jnp.exp(a.astype(jnp.float32))[..., None, None] * state \
+        + jnp.einsum("bghp,bgk->bghpk", u.astype(jnp.float32),
+                     b.astype(jnp.float32))
+    y = jnp.einsum("bgk,bghpk->bghp", c.astype(jnp.float32), st)
+    return y.astype(u.dtype), st
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 block
+# ---------------------------------------------------------------------------
+
+def mamba_dims(cfg: ModelConfig):
+    d_in = cfg.d_model * cfg.ssm_expand
+    heads = d_in // cfg.ssm_head_dim
+    conv_dim = d_in + 2 * cfg.ssm_state
+    return d_in, heads, conv_dim
+
+
+def mamba_defs(cfg: ModelConfig) -> Dict[str, ParamDef]:
+    d = cfg.d_model
+    d_in, H, conv_dim = mamba_dims(cfg)
+    N, W = cfg.ssm_state, cfg.ssm_conv
+    return {
+        "in_proj": ParamDef((d, 2 * d_in + 2 * N + H), ("embed", "ff")),
+        "conv_w": ParamDef((W, conv_dim), ("conv_width", "ff"), scale=0.5),
+        "conv_b": ParamDef((conv_dim,), ("ff",), init="zeros"),
+        "a_log": ParamDef((H,), ("ssm_heads",), init="zeros"),
+        "dt_bias": ParamDef((H,), ("ssm_heads",), init="zeros"),
+        "d_skip": ParamDef((H,), ("ssm_heads",), init="ones"),
+        "norm": ParamDef((d_in,), ("ff",), init="ones"),
+        "out_proj": ParamDef((d_in, d), ("ff", "embed")),
+    }
+
+
+def _split_in_proj(h, cfg: ModelConfig):
+    d_in, H, _ = mamba_dims(cfg)
+    N = cfg.ssm_state
+    z, xs, bb, cc, dt = jnp.split(
+        h, [d_in, 2 * d_in, 2 * d_in + N, 2 * d_in + 2 * N], axis=-1)
+    return z, xs, bb, cc, dt
+
+
+def _causal_conv(seq, w, bias):
+    """Depthwise causal conv.  seq: (B,S,C); w: (W,C)."""
+    W = w.shape[0]
+    padded = jnp.pad(seq, ((0, 0), (W - 1, 0), (0, 0)))
+    out = sum(padded[:, i:i + seq.shape[1]] * w[i] for i in range(W))
+    return out + bias
+
+
+def mamba_forward(p: Dict, x: jnp.ndarray, cfg: ModelConfig,
+                  planner: Planner,
+                  state: Optional[Dict] = None,
+                  ) -> Tuple[jnp.ndarray, Dict]:
+    """Full-sequence Mamba2 mixing.  x: (B,S,d).  Returns (y, new_state)
+    where state carries {ssd: (B,1,H,P,N), conv: (B,W-1,conv_dim)}."""
+    Bsz, S, d = x.shape
+    d_in, H, conv_dim = mamba_dims(cfg)
+    N, P, W = cfg.ssm_state, cfg.ssm_head_dim, cfg.ssm_conv
+
+    h = x @ p["in_proj"]
+    z, xs, bb, cc, dt = _split_in_proj(h, cfg)
+    conv_in = jnp.concatenate([xs, bb, cc], axis=-1)
+    conv_out = jax.nn.silu(_causal_conv(conv_in, p["conv_w"], p["conv_b"]))
+    xs, bb, cc = jnp.split(conv_out, [d_in, d_in + N], axis=-1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))   # (B,S,H)
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))               # (H,)
+    log_decay = dt * a                                         # (B,S,H)
+
+    u = (xs.reshape(Bsz, S, H, P).astype(jnp.float32)
+         * dt[..., None]).reshape(Bsz, S, 1, H, P)
+    y, final = ssd_chunked(
+        u, log_decay.reshape(Bsz, S, 1, H),
+        bb.reshape(Bsz, S, 1, N), cc.reshape(Bsz, S, 1, N),
+        cfg.ssm_chunk,
+        init_state=None if state is None else state["ssd"])
+    y = y.reshape(Bsz, S, H, P)
+    y = y + xs.reshape(Bsz, S, H, P) * p["d_skip"].astype(x.dtype)[None, None, :, None]
+    y = y.reshape(Bsz, S, d_in)
+
+    # gated RMSNorm then out-projection
+    g = y * jax.nn.silu(z)
+    ms = jnp.mean(jnp.square(g.astype(jnp.float32)), axis=-1, keepdims=True)
+    g = (g.astype(jnp.float32) * jax.lax.rsqrt(ms + 1e-6)
+         * p["norm"].astype(jnp.float32)).astype(x.dtype)
+    out = g @ p["out_proj"]
+
+    new_state = {"ssd": final,
+                 "conv": conv_in[:, -(W - 1):] if S >= W - 1 else
+                 jnp.pad(conv_in, ((0, 0), (W - 1 - S, 0), (0, 0)))}
+    return out, new_state
+
+
+def mamba_decode_step(p: Dict, x: jnp.ndarray, cfg: ModelConfig,
+                      state: Dict) -> Tuple[jnp.ndarray, Dict]:
+    """x: (B,1,d); state: {ssd (B,1,H,P,N), conv (B,W-1,conv_dim)}."""
+    Bsz, _, d = x.shape
+    d_in, H, conv_dim = mamba_dims(cfg)
+    N, P, W = cfg.ssm_state, cfg.ssm_head_dim, cfg.ssm_conv
+
+    h = x @ p["in_proj"]
+    z, xs, bb, cc, dt = _split_in_proj(h, cfg)
+    conv_in = jnp.concatenate([xs, bb, cc], axis=-1)       # (B,1,conv)
+    window = jnp.concatenate([state["conv"], conv_in], axis=1)  # (B,W,conv)
+    conv_out = jax.nn.silu(
+        jnp.sum(window * p["conv_w"][None], axis=1, keepdims=True)
+        + p["conv_b"])
+    xs, bb, cc = jnp.split(conv_out, [d_in, d_in + N], axis=-1)
+
+    dt = jax.nn.softplus(dt[:, 0].astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))  # (B,H)
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))
+    u = (xs[:, 0].reshape(Bsz, H, P).astype(jnp.float32)
+         * dt[..., None]).reshape(Bsz, 1, H, P)
+    y, st = ssd_decode_step(u, (dt * a).reshape(Bsz, 1, H),
+                            bb[:, 0].reshape(Bsz, 1, N),
+                            cc[:, 0].reshape(Bsz, 1, N), state["ssd"])
+    y = y.reshape(Bsz, H, P) + xs[:, 0].reshape(Bsz, H, P) \
+        * p["d_skip"].astype(x.dtype)[None, :, None]
+    y = y.reshape(Bsz, 1, d_in)
+
+    g = y * jax.nn.silu(z)
+    ms = jnp.mean(jnp.square(g.astype(jnp.float32)), axis=-1, keepdims=True)
+    g = (g.astype(jnp.float32) * jax.lax.rsqrt(ms + 1e-6)
+         * p["norm"].astype(jnp.float32)).astype(x.dtype)
+    out = g @ p["out_proj"]
+    return out, {"ssd": st, "conv": window[:, 1:]}

@@ -1,0 +1,181 @@
+"""xLSTM blocks: mLSTM (matrix memory) and sLSTM (scalar memory).
+
+mLSTM's recurrence  C_t = f_t·C_{t-1} + i_t·v_t k_tᵀ,  h_t = (C_t q_t)/max(|n_t q_t|,1)
+is the same linear form as SSD, so the chunked scan in ssm.py is reused
+with (b,c) = (k,q) per head and the normalizer n tracked as an extra
+payload column (u augmented with a constant-1 channel).
+
+sLSTM is inherently sequential (its recurrent gate depends on h_{t-1});
+it runs as a lax.scan over time — O(S) steps with tiny state, compiled
+once.  Exponential gating is stabilized with the max-state m_t as in
+the paper.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..distributed.sharding import Planner
+from .config import ModelConfig
+from .params import ParamDef
+from .ssm import ssd_chunked, ssd_decode_step
+
+
+def _dims(cfg: ModelConfig):
+    d_in = int(cfg.d_model * cfg.xlstm_proj_factor)
+    H = cfg.n_heads
+    P = d_in // H
+    return d_in, H, P
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+def mlstm_defs(cfg: ModelConfig) -> Dict[str, ParamDef]:
+    d = cfg.d_model
+    d_in, H, P = _dims(cfg)
+    return {
+        "up_proj": ParamDef((d, 2 * d_in), ("embed", "ff")),
+        "wq": ParamDef((d_in, d_in), ("ff", "q_features")),
+        "wk": ParamDef((d_in, d_in), ("ff", "q_features")),
+        "wv": ParamDef((d_in, d_in), ("ff", "q_features")),
+        "wi": ParamDef((d_in, H), ("ff", "ssm_heads"), scale=0.1),
+        "wf": ParamDef((d_in, H), ("ff", "ssm_heads"), scale=0.1),
+        "bi": ParamDef((H,), ("ssm_heads",), init="zeros"),
+        "bf": ParamDef((H,), ("ssm_heads",), init="ones"),
+        "norm": ParamDef((d_in,), ("ff",), init="ones"),
+        "down_proj": ParamDef((d_in, d), ("ff", "embed")),
+    }
+
+
+def _mlstm_gates_qkv(p, xs, cfg):
+    Bsz, S, _ = xs.shape
+    d_in, H, P = _dims(cfg)
+    q = (xs @ p["wq"]).reshape(Bsz, S, H, P)
+    k = (xs @ p["wk"]).reshape(Bsz, S, H, P) * (P ** -0.5)
+    v = (xs @ p["wv"]).reshape(Bsz, S, H, P)
+    # log-sigmoid forget gate + exponential input gate (stabilized by
+    # folding i into the payload magnitude; simplification noted in DESIGN).
+    logf = jax.nn.log_sigmoid((xs @ p["wf"]).astype(jnp.float32)
+                              + p["bf"].astype(jnp.float32))     # (B,S,H)
+    i = jnp.exp(jnp.minimum((xs @ p["wi"]).astype(jnp.float32)
+                            + p["bi"].astype(jnp.float32), 8.0))
+    return q, k, v, logf, i
+
+
+def mlstm_forward(p: Dict, x: jnp.ndarray, cfg: ModelConfig,
+                  planner: Planner, state: Optional[Dict] = None,
+                  ) -> Tuple[jnp.ndarray, Dict]:
+    Bsz, S, d = x.shape
+    d_in, H, P = _dims(cfg)
+    up = x @ p["up_proj"]
+    xs, z = jnp.split(up, 2, axis=-1)
+    q, k, v, logf, i = _mlstm_gates_qkv(p, xs, cfg)
+
+    # payload = [i·v ; i·1]: the extra channel accumulates the normalizer n.
+    u = jnp.concatenate([v * i[..., None], i[..., None]], axis=-1)  # (B,S,H,P+1)
+    y, final = ssd_chunked(
+        u.reshape(Bsz, S, H, 1, P + 1),
+        logf.reshape(Bsz, S, H, 1),
+        k.reshape(Bsz, S, H, P), q.reshape(Bsz, S, H, P),
+        cfg.ssm_chunk,
+        init_state=None if state is None else state["mlstm"])
+    y = y.reshape(Bsz, S, H, P + 1)
+    num, den = y[..., :P], y[..., P:]
+    h = num / jnp.maximum(jnp.abs(den), 1.0)
+    h = h.reshape(Bsz, S, d_in)
+
+    g = h * jax.nn.silu(z)
+    ms = jnp.mean(jnp.square(g.astype(jnp.float32)), axis=-1, keepdims=True)
+    g = (g.astype(jnp.float32) * jax.lax.rsqrt(ms + 1e-6)
+         * p["norm"].astype(jnp.float32)).astype(x.dtype)
+    return g @ p["down_proj"], {"mlstm": final}
+
+
+def mlstm_decode_step(p: Dict, x: jnp.ndarray, cfg: ModelConfig,
+                      state: Dict) -> Tuple[jnp.ndarray, Dict]:
+    Bsz, _, d = x.shape
+    d_in, H, P = _dims(cfg)
+    up = x @ p["up_proj"]
+    xs, z = jnp.split(up, 2, axis=-1)
+    q, k, v, logf, i = _mlstm_gates_qkv(p, xs, cfg)
+    u = jnp.concatenate([v * i[..., None], i[..., None]], axis=-1)
+    y, st = ssd_decode_step(
+        u[:, 0].reshape(Bsz, H, 1, P + 1), logf[:, 0].reshape(Bsz, H, 1),
+        k[:, 0].reshape(Bsz, H, P), q[:, 0].reshape(Bsz, H, P),
+        state["mlstm"])
+    y = y.reshape(Bsz, 1, H, P + 1)
+    h = (y[..., :P] / jnp.maximum(jnp.abs(y[..., P:]), 1.0)).reshape(Bsz, 1, d_in)
+    g = h * jax.nn.silu(z)
+    ms = jnp.mean(jnp.square(g.astype(jnp.float32)), axis=-1, keepdims=True)
+    g = (g.astype(jnp.float32) * jax.lax.rsqrt(ms + 1e-6)
+         * p["norm"].astype(jnp.float32)).astype(x.dtype)
+    return g @ p["down_proj"], {"mlstm": st}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+def slstm_defs(cfg: ModelConfig) -> Dict[str, ParamDef]:
+    d = cfg.d_model
+    return {
+        "wx": ParamDef((d, 4 * d), ("embed", "ff")),
+        "wh": ParamDef((d, 4 * d), ("embed", "ff"), scale=0.5),
+        "b": ParamDef((4 * d,), ("ff",), init="zeros"),
+        "norm": ParamDef((d,), ("embed",), init="ones"),
+    }
+
+
+def _slstm_cell(p, xt, carry):
+    """One sLSTM step with stabilizer state m.  xt: (B, d)."""
+    h, cst, nst, m = carry
+    gates = xt @ p["wx"] + h @ p["wh"] + p["b"]
+    zt, it, ft, ot = jnp.split(gates.astype(jnp.float32), 4, axis=-1)
+    logf = jax.nn.log_sigmoid(ft)
+    m_new = jnp.maximum(logf + m, it)
+    i_s = jnp.exp(it - m_new)
+    f_s = jnp.exp(logf + m - m_new)
+    c_new = f_s * cst + i_s * jnp.tanh(zt)
+    n_new = f_s * nst + i_s
+    h_new = (jax.nn.sigmoid(ot) * c_new
+             / jnp.maximum(n_new, 1.0)).astype(xt.dtype)
+    return h_new, c_new, n_new, m_new
+
+
+def slstm_forward(p: Dict, x: jnp.ndarray, cfg: ModelConfig,
+                  planner: Planner, state: Optional[Dict] = None,
+                  ) -> Tuple[jnp.ndarray, Dict]:
+    Bsz, S, d = x.shape
+    if state is None:
+        carry = (jnp.zeros((Bsz, d), x.dtype),
+                 jnp.zeros((Bsz, d), jnp.float32),
+                 jnp.zeros((Bsz, d), jnp.float32),
+                 jnp.full((Bsz, d), -1e30, jnp.float32))
+    else:
+        carry = state["slstm"]
+
+    def step(carry, xt):
+        carry = _slstm_cell(p, xt, carry)
+        return carry, carry[0]
+
+    carry, hs = jax.lax.scan(step, carry, jnp.moveaxis(x, 1, 0))
+    hs = jnp.moveaxis(hs, 0, 1)  # (B,S,d)
+    ms = jnp.mean(jnp.square(hs.astype(jnp.float32)), axis=-1, keepdims=True)
+    out = (hs.astype(jnp.float32) * jax.lax.rsqrt(ms + 1e-6)
+           * p["norm"].astype(jnp.float32)).astype(x.dtype)
+    return out, {"slstm": carry}
+
+
+def slstm_decode_step(p: Dict, x: jnp.ndarray, cfg: ModelConfig,
+                      state: Dict) -> Tuple[jnp.ndarray, Dict]:
+    carry = _slstm_cell(p, x[:, 0], state["slstm"])
+    h = carry[0]
+    ms = jnp.mean(jnp.square(h.astype(jnp.float32)), axis=-1, keepdims=True)
+    out = (h.astype(jnp.float32) * jax.lax.rsqrt(ms + 1e-6)
+           * p["norm"].astype(jnp.float32)).astype(x.dtype)
+    return out[:, None], {"slstm": carry}

@@ -1,0 +1,7 @@
+from .optimizers import (OptState, adafactor, adamw, apply_updates,
+                         clip_by_global_norm, make_optimizer)
+from .schedules import cosine_with_warmup, linear_warmup
+
+__all__ = ["OptState", "adamw", "adafactor", "apply_updates",
+           "clip_by_global_norm", "make_optimizer", "cosine_with_warmup",
+           "linear_warmup"]

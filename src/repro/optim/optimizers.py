@@ -1,0 +1,207 @@
+"""Optimizers as pure pytree transforms (no external deps).
+
+Interface: ``update(grads, state, params) -> (new_params, new_state)`` —
+the parameter application is FUSED into the (layer-streamed) update so
+a full-size fp32 update tree never materializes (at the 1T tier that
+tree alone would be ~8 GB/chip).
+
+AdamW for ≤~30B-param models; Adafactor (factored second moment, no
+first moment by default) for the 100B–1T tier where fp32 Adam states
+would exceed per-chip HBM even fully sharded (see DESIGN.md §5: kimi-k2
+at 1T params × 16 B/param = 16 TB ≫ 512 × 16 GB).
+
+State sharding: every state leaf inherits its parameter's logical axes,
+so TP-sharded params get TP-sharded states for free; ZeRO-1 extension
+maps the first replicated dim of large states onto the "data" axis
+(distributed/sharding.py rules).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class OptState(NamedTuple):
+    step: jnp.ndarray
+    inner: Any
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    leaves = jax.tree.leaves(grads)
+    gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                      for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-12))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype),
+                        grads), gn
+
+
+def apply_updates(params, updates):
+    def one(p, u):
+        add = lambda pu: (pu[0].astype(jnp.float32) + pu[1]).astype(p.dtype)
+        if p.ndim >= 3 and p.shape[0] <= 512:
+            return jax.lax.map(add, (p, u))  # stream big stacked tensors
+        return add((p, u))
+    return jax.tree.map(one, params, updates)
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+def adamw(lr: Callable[[jnp.ndarray], jnp.ndarray] | float,
+          b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.1):
+    lr_fn = lr if callable(lr) else (lambda _step: jnp.asarray(lr, jnp.float32))
+
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return OptState(step=jnp.zeros((), jnp.int32),
+                        inner={"m": jax.tree.map(zeros, params),
+                               "v": jax.tree.map(zeros, params)})
+
+    def update(grads, state: OptState, params):
+        step = state.step + 1
+        lr_t = lr_fn(step)
+        b1c = 1.0 - b1 ** step.astype(jnp.float32)
+        b2c = 1.0 - b2 ** step.astype(jnp.float32)
+
+        def one(g, m, v, p):
+            g = g.astype(jnp.float32)
+            m = b1 * m + (1 - b1) * g
+            v = b2 * v + (1 - b2) * jnp.square(g)
+            mh = m / b1c
+            vh = v / b2c
+            u = -lr_t * (mh / (jnp.sqrt(vh) + eps)
+                         + weight_decay * p.astype(jnp.float32))
+            new_p = (p.astype(jnp.float32) + u).astype(p.dtype)
+            return new_p, m, v
+
+        def one_leaf(g, m, v, p):
+            # Stream over the stacked-layers axis of big tensors so fp32
+            # temporaries cover one layer slice at a time.
+            if p.ndim >= 3 and p.shape[0] <= 512:
+                return jax.lax.map(lambda a: one(*a), (g, m, v, p))
+            return one(g, m, v, p)
+
+        flat_p, tdef = jax.tree.flatten(params)
+        flat_g = tdef.flatten_up_to(grads)
+        flat_m = tdef.flatten_up_to(state.inner["m"])
+        flat_v = tdef.flatten_up_to(state.inner["v"])
+        outs = [one_leaf(g, m, v, p)
+                for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+        new_p = tdef.unflatten([o[0] for o in outs])
+        new_m = tdef.unflatten([o[1] for o in outs])
+        new_v = tdef.unflatten([o[2] for o in outs])
+        return new_p, OptState(step, {"m": new_m, "v": new_v})
+
+    def state_axes(param_axes):
+        """Logical axes for each state leaf (mirrors the param's)."""
+        return {"m": param_axes, "v": param_axes}
+
+    return init, update, state_axes
+
+
+# ---------------------------------------------------------------------------
+# Adafactor (Shazeer & Stern 2018), factored second moment
+# ---------------------------------------------------------------------------
+
+def adafactor(lr: Callable[[jnp.ndarray], jnp.ndarray] | float,
+              decay: float = 0.8, eps: float = 1e-30,
+              clip_threshold: float = 1.0, weight_decay: float = 0.0):
+    lr_fn = lr if callable(lr) else (lambda _step: jnp.asarray(lr, jnp.float32))
+
+    def _factored(shape) -> bool:
+        return len(shape) >= 2 and shape[-1] > 1 and shape[-2] > 1
+
+    def init(params):
+        def one(p):
+            if _factored(p.shape):
+                return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                        "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)}
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+        return OptState(step=jnp.zeros((), jnp.int32),
+                        inner=jax.tree.map(one, params,
+                                           is_leaf=lambda x: isinstance(x, jnp.ndarray)))
+
+    def update(grads, state: OptState, params):
+        step = state.step + 1
+        t = step.astype(jnp.float32)
+        beta = 1.0 - t ** (-decay)
+        lr_t = lr_fn(step)
+
+        def one(g, s, p):
+            g = g.astype(jnp.float32)
+            g2 = jnp.square(g) + eps
+            if "vr" in s:
+                vr = beta * s["vr"] + (1 - beta) * jnp.mean(g2, axis=-1)
+                vc = beta * s["vc"] + (1 - beta) * jnp.mean(g2, axis=-2)
+                rfac = jax.lax.rsqrt(
+                    vr / jnp.maximum(jnp.mean(vr, axis=-1, keepdims=True), eps))
+                cfac = jax.lax.rsqrt(vc)
+                u = g * rfac[..., None] * cfac[..., None, :]
+                new_s = {"vr": vr, "vc": vc}
+            else:
+                v = beta * s["v"] + (1 - beta) * g2
+                u = g * jax.lax.rsqrt(v)
+                new_s = {"v": v}
+            # update clipping (RMS <= clip_threshold)
+            rms = jnp.sqrt(jnp.mean(jnp.square(u)) + 1e-30)
+            u = u / jnp.maximum(1.0, rms / clip_threshold)
+            u = -lr_t * (u + weight_decay * p.astype(jnp.float32))
+            new_p = (p.astype(jnp.float32) + u).astype(p.dtype)
+            return new_p, new_s
+
+        def one_leaf(g, s, p):
+            # Stream the update over the leading (stacked-layers) axis of
+            # big tensors: the fp32 elementwise temporaries then cover one
+            # layer slice at a time instead of the full 100B-scale stack.
+            # Per-slice RMS clipping also matches unstacked Adafactor
+            # semantics (clipping is per logical parameter tensor).
+            if p.ndim >= 3 and p.shape[0] <= 512:
+                return jax.lax.map(lambda args: one(*args), (g, s, p))
+            return one(g, s, p)
+
+        flat_p, tdef = jax.tree.flatten(params)
+        flat_g = tdef.flatten_up_to(grads)
+        flat_s = tdef.flatten_up_to(state.inner)
+        outs = [one_leaf(g, s, p) for g, s, p in zip(flat_g, flat_s, flat_p)]
+        updates = tdef.unflatten([o[0] for o in outs])
+        new_inner = tdef.unflatten([o[1] for o in outs])
+        return updates, OptState(step, new_inner)
+
+    def state_axes(param_axes):
+        # vr drops the last dim's axis; vc drops the second-to-last.
+        return None  # resolved dynamically by the launcher (shape-driven)
+
+    return init, update, state_axes
+
+
+def make_optimizer(name: str, lr, **kw):
+    if name == "adamw":
+        return adamw(lr, **kw)
+    if name == "adafactor":
+        return adafactor(lr, **kw)
+    raise ValueError(f"unknown optimizer {name!r}")
+
+
+def state_logical_axes(name: str, defs):
+    """Logical sharding axes for an optimizer state tree, derived from the
+    model's ParamDef tree (states inherit their parameter's axes; the
+    factored Adafactor moments drop the reduced dim's axis)."""
+    from ..models.params import ParamDef, axes_of
+
+    is_def = lambda x: isinstance(x, ParamDef)
+    if name == "adamw":
+        ax = axes_of(defs)
+        return {"m": ax, "v": ax}
+    if name == "adafactor":
+        def one(d: ParamDef):
+            if len(d.shape) >= 2 and d.shape[-1] > 1 and d.shape[-2] > 1:
+                return {"vr": d.axes[:-1], "vc": d.axes[:-2] + d.axes[-1:]}
+            return {"v": d.axes}
+        return jax.tree.map(one, defs, is_leaf=is_def)
+    raise ValueError(f"unknown optimizer {name!r}")

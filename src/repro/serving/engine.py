@@ -1,0 +1,71 @@
+"""Batched serving: prefill + decode with a static KV cache.
+
+``decode_step`` (models/lm.py) handles both phases: prefill is a call
+with S=prompt_len at pos=0 (it writes the cache and returns logits for
+every position); decode is S=1 calls at advancing pos.  Sampling is
+greedy or temperature-based, batched.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..distributed.sharding import Planner
+from ..models.params import zeros_of
+
+
+@dataclasses.dataclass
+class ServeConfig:
+    max_len: int = 512
+    temperature: float = 0.0       # 0 => greedy
+    seed: int = 0
+
+
+class Engine:
+    def __init__(self, model, params, serve_cfg: ServeConfig,
+                 planner: Optional[Planner] = None):
+        self.model = model
+        self.params = params
+        self.cfg = serve_cfg
+        self.planner = planner or Planner.null()
+
+        def _step(params, cache, tokens, pos):
+            return model.decode_step(params, cache, tokens, pos, self.planner)
+
+        self._step = jax.jit(_step)
+
+    def _sample(self, logits: jnp.ndarray, key) -> jnp.ndarray:
+        logits = logits[:, -1, :self.model.cfg.vocab_size].astype(jnp.float32)
+        if self.cfg.temperature <= 0.0:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return jax.random.categorical(
+            key, logits / self.cfg.temperature, axis=-1).astype(jnp.int32)
+
+    def generate(self, prompts: np.ndarray, n_new: int,
+                 ) -> Tuple[np.ndarray, Dict[str, float]]:
+        """prompts: (B, P) int32.  Returns (B, n_new) generated tokens."""
+        B, P = prompts.shape
+        cache = zeros_of(self.model.cache_defs(B, self.cfg.max_len))
+        key = jax.random.PRNGKey(self.cfg.seed)
+
+        logits, cache = self._step(self.params, cache,
+                                   jnp.asarray(prompts, jnp.int32),
+                                   jnp.zeros((), jnp.int32))
+        key, k = jax.random.split(key)
+        tok = self._sample(logits, k)
+        out = [tok]
+        pos = P
+        for _ in range(n_new - 1):
+            logits, cache = self._step(self.params, cache, tok[:, None],
+                                       jnp.asarray(pos, jnp.int32))
+            key, k = jax.random.split(key)
+            tok = self._sample(logits, k)
+            out.append(tok)
+            pos += 1
+        gen = np.stack([np.asarray(t) for t in out], axis=1)
+        return gen, {"prompt_len": float(P), "generated": float(n_new)}

@@ -1,0 +1,174 @@
+"""Fault-tolerant training loop.
+
+Scale-out behaviours implemented here (DESIGN.md §6):
+  * checkpoint/restart — atomic manager, deterministic data resume
+    (step -> batch is a pure function, so a restarted run replays the
+    exact stream; asserted bitwise in tests/test_fault_tolerance.py);
+  * preemption handling — SIGTERM sets a flag, the loop checkpoints and
+    exits cleanly at the next step boundary;
+  * straggler watchdog — per-step wall time tracked; steps slower than
+    ``watchdog_factor``× the running median are logged as stragglers
+    (on real pods: the signal to checkpoint-and-exclude);
+  * elastic restart — the data shard mapping is recomputed from the
+    new world size at restore (nothing in the checkpoint binds it);
+  * optional int8 error-feedback gradient compression for the cross-pod
+    all-reduce (distributed/compression.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import signal
+import time
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..checkpoint import CheckpointManager
+from ..data.tokens import DataConfig, shard_batch
+from ..distributed.compression import ef_compress, ef_init
+from ..distributed.sharding import Planner
+from ..optim import apply_updates, clip_by_global_norm, make_optimizer
+
+
+@dataclasses.dataclass
+class TrainConfig:
+    steps: int = 100
+    lr: float = 3e-4
+    warmup: int = 20
+    clip_norm: float = 1.0
+    checkpoint_every: int = 50
+    checkpoint_dir: str = "/tmp/repro_ckpt"
+    log_every: int = 10
+    watchdog_factor: float = 3.0
+    grad_compression: bool = False
+
+
+def compute_grads(model, planner: Planner, params, batch, microbatch: int = 1):
+    """value_and_grad with optional gradient-accumulation microbatching:
+    the batch is split on its leading axis and scanned, so activation
+    memory scales with B/microbatch while the math is identical (grads
+    are averaged)."""
+    if microbatch <= 1:
+        return jax.value_and_grad(lambda p: model.loss(p, batch, planner))(params)
+
+    def slice_mb(x):
+        b = x.shape[0]
+        assert b % microbatch == 0, (b, microbatch)
+        return x.reshape((microbatch, b // microbatch) + x.shape[1:])
+
+    mbatches = jax.tree.map(slice_mb, batch)
+    acc_dtype = jnp.dtype(getattr(model.cfg, "grad_acc_dtype", "float32"))
+    g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, acc_dtype), params)
+
+    def body(carry, mb):
+        loss_acc, g_acc = carry
+        loss, grads = jax.value_and_grad(
+            lambda p: model.loss(p, mb, planner))(params)
+        g_acc = jax.tree.map(
+            lambda a, g: a + g.astype(acc_dtype) / microbatch, g_acc, grads)
+        return (loss_acc + loss / microbatch, g_acc), None
+
+    (loss, grads), _ = jax.lax.scan(body, (jnp.zeros((), jnp.float32), g0),
+                                    mbatches)
+    return loss, grads
+
+
+def make_train_step(model, planner: Planner, opt_update,
+                    clip_norm: float = 1.0, grad_compression: bool = False):
+    """Build the jitted train step: loss -> grads -> clip -> update."""
+    microbatch = model.cfg.microbatch
+
+    def step_fn(params, opt_state, batch, ef_state):
+        loss, grads = compute_grads(model, planner, params, batch, microbatch)
+        if grad_compression:
+            grads, ef_state = ef_compress(grads, ef_state)
+        grads, gnorm = clip_by_global_norm(grads, clip_norm)
+        params, opt_state = opt_update(grads, opt_state, params)
+        return params, opt_state, ef_state, {"loss": loss, "grad_norm": gnorm}
+
+    return step_fn
+
+
+class Trainer:
+    def __init__(self, model, data_cfg: DataConfig, train_cfg: TrainConfig,
+                 planner: Optional[Planner] = None, shard: int = 0,
+                 n_shards: int = 1):
+        from ..optim.schedules import cosine_with_warmup
+        self.model = model
+        self.data_cfg = data_cfg
+        self.cfg = train_cfg
+        self.planner = planner or Planner.null()
+        self.shard, self.n_shards = shard, n_shards
+
+        lr = cosine_with_warmup(train_cfg.lr, train_cfg.warmup, train_cfg.steps)
+        opt_init, opt_update, _ = make_optimizer(model.cfg.optimizer, lr)
+        self.opt_init = opt_init
+        self.step_fn = jax.jit(make_train_step(
+            model, self.planner, opt_update, train_cfg.clip_norm,
+            train_cfg.grad_compression))
+        self.ckpt = CheckpointManager(train_cfg.checkpoint_dir)
+        self._preempted = False
+        self.metrics: list = []
+
+    def request_preemption(self, *_args):
+        self._preempted = True
+
+    def install_signal_handler(self):
+        signal.signal(signal.SIGTERM, self.request_preemption)
+
+    def run(self, init_params=None, resume: bool = True,
+            fail_at_step: Optional[int] = None) -> Dict[str, Any]:
+        """Run to cfg.steps.  fail_at_step simulates a hard node failure
+        (raises) for the fault-tolerance tests."""
+        params = init_params if init_params is not None else \
+            self.model.init(jax.random.PRNGKey(0))
+        opt_state = self.opt_init(params)
+        ef_state = ef_init(params) if self.cfg.grad_compression else \
+            jax.tree.map(lambda p: jnp.zeros((1,), jnp.float32), params)
+        start = 0
+
+        if resume:
+            got = self.ckpt.restore_latest((params, opt_state))
+            if got[0] is not None:
+                start, (params, opt_state), extra = got
+                start += 1  # checkpoint stores a completed step
+
+        times: list = []
+        for step in range(start, self.cfg.steps):
+            if self._preempted:
+                self.ckpt.save(step - 1, (params, opt_state),
+                               {"reason": "preempt"}, block=True)
+                return {"params": params, "opt_state": opt_state,
+                        "stopped_at": step, "preempted": True,
+                        "metrics": self.metrics}
+            if fail_at_step is not None and step == fail_at_step:
+                raise RuntimeError(f"simulated node failure at step {step}")
+
+            t0 = time.perf_counter()
+            batch_np = shard_batch(self.data_cfg, step, self.shard,
+                                   self.n_shards)
+            batch = {k: jnp.asarray(v) for k, v in batch_np.items()}
+            params, opt_state, ef_state, m = self.step_fn(
+                params, opt_state, batch, ef_state)
+            dt = time.perf_counter() - t0
+            times.append(dt)
+            med = float(np.median(times[-21:]))
+            straggler = len(times) > 5 and dt > self.cfg.watchdog_factor * med
+            rec = {"step": step, "loss": float(m["loss"]),
+                   "grad_norm": float(m["grad_norm"]), "time_s": dt,
+                   "straggler": bool(straggler)}
+            self.metrics.append(rec)
+            if step % self.cfg.log_every == 0:
+                print(f"step {step:5d} loss {rec['loss']:.4f} "
+                      f"gnorm {rec['grad_norm']:.3f} {dt*1e3:.0f} ms"
+                      + ("  [STRAGGLER]" if straggler else ""))
+            if (step + 1) % self.cfg.checkpoint_every == 0:
+                self.ckpt.save(step, (params, opt_state), {"loss": rec["loss"]})
+
+        self.ckpt.save(self.cfg.steps - 1, (params, opt_state), {}, block=True)
+        return {"params": params, "opt_state": opt_state,
+                "stopped_at": self.cfg.steps, "preempted": False,
+                "metrics": self.metrics}

@@ -1,0 +1,128 @@
+"""Fault tolerance: checkpoint/restart must reproduce the uninterrupted
+run exactly (deterministic data pipeline + deterministic CPU compute)."""
+
+import os
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import CheckpointManager, latest_step, restore, save
+from repro.configs import get_config
+from repro.data.tokens import DataConfig, shard_batch
+from repro.models.lm import build_model
+from repro.train.loop import TrainConfig, Trainer
+
+
+def tiny_setup(tmp, steps=12, ckpt_every=5):
+    cfg = get_config("qwen2.5-3b", smoke=True)
+    model = build_model(cfg)
+    data_cfg = DataConfig(vocab_size=cfg.vocab_size, seq_len=16,
+                          global_batch=4, seed=7)
+    train_cfg = TrainConfig(steps=steps, lr=1e-3, warmup=2,
+                            checkpoint_every=ckpt_every,
+                            checkpoint_dir=tmp, log_every=100)
+    return model, data_cfg, train_cfg
+
+
+class TestCheckpointStore:
+    def test_roundtrip(self, tmp_path):
+        tree = {"a": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+                "b": (jnp.ones((4,), jnp.bfloat16), jnp.zeros((), jnp.int32))}
+        save(str(tmp_path), 3, tree, {"note": "x"})
+        assert latest_step(str(tmp_path)) == 3
+        got, extra = restore(str(tmp_path), 3, tree)
+        assert extra == {"note": "x"}
+        for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(got)):
+            np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                          np.asarray(b, np.float32))
+
+    def test_corruption_detected(self, tmp_path):
+        tree = {"a": jnp.ones((8,), jnp.float32)}
+        path = save(str(tmp_path), 0, tree)
+        npz = os.path.join(path, "arrays.npz")
+        raw = bytearray(open(npz, "rb").read())
+        raw[-5] ^= 0xFF  # flip a bit inside the stored array data
+        open(npz, "wb").write(bytes(raw))
+        with pytest.raises(Exception):
+            restore(str(tmp_path), 0, tree)
+
+    def test_keep_n_gc(self, tmp_path):
+        mgr = CheckpointManager(str(tmp_path), keep_n=2, async_write=False)
+        tree = {"a": jnp.zeros((2,), jnp.float32)}
+        for s in range(5):
+            mgr.save(s, tree)
+        steps = sorted(int(n.split("_")[1]) for n in os.listdir(tmp_path))
+        assert steps == [3, 4]
+
+
+class TestDataDeterminism:
+    def test_pure_function_of_step_and_shard(self):
+        cfg = DataConfig(vocab_size=100, seq_len=8, global_batch=4, seed=1)
+        a = shard_batch(cfg, 5, 0, 2)["tokens"]
+        b = shard_batch(cfg, 5, 0, 2)["tokens"]
+        np.testing.assert_array_equal(a, b)
+        assert not np.array_equal(a, shard_batch(cfg, 6, 0, 2)["tokens"])
+        assert not np.array_equal(a, shard_batch(cfg, 5, 1, 2)["tokens"])
+
+    def test_elastic_resharding_covers_same_global_batch(self):
+        """Re-sharding at a new world size keeps per-shard batch shape."""
+        cfg = DataConfig(vocab_size=100, seq_len=8, global_batch=8)
+        b2 = [shard_batch(cfg, 3, i, 2)["tokens"] for i in range(2)]
+        b4 = [shard_batch(cfg, 3, i, 4)["tokens"] for i in range(4)]
+        assert b2[0].shape == (4, 8) and b4[0].shape == (2, 8)
+
+
+class TestRestartExactness:
+    def test_killed_run_resumes_bitwise(self, tmp_path):
+        model, data_cfg, cfg_a = tiny_setup(str(tmp_path / "a"))
+        params0 = model.init(jax.random.PRNGKey(5))
+
+        # Uninterrupted reference run.
+        tr_a = Trainer(model, data_cfg, cfg_a)
+        out_a = tr_a.run(init_params=params0, resume=False)
+        losses_a = [m["loss"] for m in out_a["metrics"]]
+
+        # Run B: dies at step 7 (after checkpoint at step 4).
+        model_b, _, cfg_b = tiny_setup(str(tmp_path / "b"))
+        tr_b = Trainer(model, data_cfg, cfg_b)
+        with pytest.raises(RuntimeError, match="simulated node failure"):
+            tr_b.run(init_params=params0, resume=False, fail_at_step=7)
+        losses_b = [m["loss"] for m in tr_b.metrics]
+        assert len(losses_b) == 7
+        # the dead node's async write either completed its atomic rename or
+        # left nothing; the restart below sees stable storage (much later
+        # in real deployments) — flush the writer to model that.
+        tr_b.ckpt.wait()
+
+        # Run C: restarts from B's checkpoint dir, resumes at step 5.
+        tr_c = Trainer(model, data_cfg, cfg_b)
+        out_c = tr_c.run(init_params=params0, resume=True)
+        losses_c = [m["loss"] for m in out_c["metrics"]]
+        assert out_c["metrics"][0]["step"] == 5
+
+        stitched = losses_b[:5] + losses_c
+        np.testing.assert_allclose(stitched, losses_a, rtol=0, atol=0)
+
+    def test_preemption_checkpoint(self, tmp_path):
+        model, data_cfg, cfg = tiny_setup(str(tmp_path / "p"), steps=50)
+        tr = Trainer(model, data_cfg, cfg)
+        # Preempt after construction: loop should save and exit at once.
+        tr.request_preemption()
+        out = tr.run(resume=False)
+        assert out["preempted"] is True
+        assert latest_step(cfg.checkpoint_dir) is not None
+
+
+class TestTrainingLearns:
+    def test_loss_decreases(self, tmp_path):
+        model, data_cfg, cfg = tiny_setup(str(tmp_path / "l"), steps=30,
+                                          ckpt_every=1000)
+        tr = Trainer(model, data_cfg, cfg)
+        out = tr.run(resume=False)
+        losses = [m["loss"] for m in out["metrics"]]
+        first = np.mean(losses[:5])
+        last = np.mean(losses[-5:])
+        assert last < first - 0.3, (first, last)

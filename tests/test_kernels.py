@@ -1,0 +1,113 @@
+"""Pallas kernels vs pure-jnp oracles (interpret mode on CPU).
+
+Per instructions: sweep shapes/dtypes, assert_allclose against ref.py.
+"""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.hash_partition import hash_histogram, partition_offsets
+from repro.kernels.segment_sum import segment_sum
+
+
+class TestSegmentSum:
+    @pytest.mark.parametrize("n,num_segments", [(128, 16), (1000, 64),
+                                                (4096, 512), (300, 700)])
+    @pytest.mark.parametrize("sorted_ids", [True, False])
+    def test_matches_ref(self, n, num_segments, sorted_ids):
+        rng = np.random.default_rng(n + num_segments)
+        ids = rng.integers(0, num_segments, n).astype(np.int32)
+        if sorted_ids:
+            ids = np.sort(ids)
+        vals = rng.normal(size=n).astype(np.float32)
+        got = segment_sum(jnp.array(vals), jnp.array(ids), num_segments,
+                          interpret=True, seg_tile=128, block=256)
+        want = ref.segment_sum(jnp.array(vals), jnp.array(ids), num_segments)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-5, atol=1e-5)
+
+    def test_out_of_range_dropped(self):
+        ids = jnp.array([-1, 0, 1, 5, 99], jnp.int32)
+        vals = jnp.ones(5, jnp.float32)
+        got = segment_sum(vals, ids, 4, interpret=True, seg_tile=128, block=128)
+        np.testing.assert_allclose(np.asarray(got), [1, 1, 0, 0])
+
+
+class TestHashHistogram:
+    @pytest.mark.parametrize("n,k", [(256, 4), (1024, 16), (777, 130), (64, 3)])
+    @pytest.mark.parametrize("salt", [0, 1])
+    def test_matches_ref(self, n, k, salt):
+        rng = np.random.default_rng(n * k + salt)
+        keys = rng.integers(0, 1 << 30, n).astype(np.int32)
+        valid = rng.random(n) < 0.8
+        block = 256
+        got = hash_histogram(jnp.array(keys), jnp.array(valid), k, salt=salt,
+                             block=block, interpret=True)
+        pad = -n % min(block, max(128, 1 << (n - 1).bit_length()))
+        want = ref.masked_hash_histogram(
+            jnp.pad(jnp.array(keys), (0, pad)),
+            jnp.pad(jnp.array(valid), (0, pad)), k, salt=salt,
+            block=min(block, max(128, 1 << (n - 1).bit_length())))
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+        # Totals: every valid key lands in exactly one bucket.
+        assert int(np.asarray(got).sum()) == int(valid.sum())
+
+    def test_partition_offsets_disjoint(self):
+        rng = np.random.default_rng(0)
+        keys = rng.integers(0, 1 << 30, 512).astype(np.int32)
+        valid = jnp.ones(512, bool)
+        hist = hash_histogram(jnp.array(keys), valid, 8, block=128,
+                              interpret=True)
+        offs = partition_offsets(hist)
+        h = np.asarray(hist)
+        o = np.asarray(offs)
+        # Runs [offset, offset+count) must tile [0, total) without overlap.
+        runs = sorted((int(o[i, j]), int(o[i, j] + h[i, j]))
+                      for i in range(h.shape[0]) for j in range(h.shape[1]))
+        pos = 0
+        for lo, hi in runs:
+            assert lo == pos
+            pos = hi
+        assert pos == int(h.sum())
+
+
+class TestFlashAttention:
+    @pytest.mark.parametrize("b,hq,hkv,sq,skv,d", [
+        (1, 4, 4, 128, 128, 64),     # MHA square
+        (2, 8, 2, 64, 64, 64),       # GQA
+        (1, 4, 1, 32, 32, 128),      # MQA, ragged block
+        (1, 8, 2, 1, 256, 64),       # single-token decode vs KV cache
+        (1, 4, 2, 17, 40, 64),       # non-pow2 shapes exercise padding
+    ])
+    @pytest.mark.parametrize("causal", [True, False])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_matches_ref(self, b, hq, hkv, sq, skv, d, causal, dtype):
+        rng = np.random.default_rng(hash((b, hq, sq, skv, causal)) % (1 << 31))
+        q = jnp.array(rng.normal(size=(b, hq, sq, d)), dtype)
+        k = jnp.array(rng.normal(size=(b, hkv, skv, d)), dtype)
+        v = jnp.array(rng.normal(size=(b, hkv, skv, d)), dtype)
+        got = flash_attention(q, k, v, causal=causal, interpret=True,
+                              block_q=64, block_kv=128)
+        want = ref.attention(q, k, v, causal=causal)
+        tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+        np.testing.assert_allclose(
+            np.asarray(got, np.float32), np.asarray(want, np.float32),
+            rtol=tol, atol=tol)
+
+    def test_decode_equals_full_last_row(self):
+        """Decoding one token against a cache == last row of full attention."""
+        rng = np.random.default_rng(7)
+        d, h, s = 64, 4, 96
+        q = jnp.array(rng.normal(size=(1, h, s, d)), jnp.float32)
+        k = jnp.array(rng.normal(size=(1, h, s, d)), jnp.float32)
+        v = jnp.array(rng.normal(size=(1, h, s, d)), jnp.float32)
+        full = flash_attention(q, k, v, causal=True, interpret=True)
+        one = flash_attention(q[:, :, -1:], k, v, causal=True, interpret=True)
+        np.testing.assert_allclose(np.asarray(one[0, :, 0]),
+                                   np.asarray(full[0, :, -1]),
+                                   rtol=1e-5, atol=1e-5)

@@ -1,0 +1,13 @@
+"""MoE dispatch strategies on a real multi-device mesh (subprocess: the
+main pytest process must keep its single CPU device)."""
+
+import subprocess
+import sys
+
+
+def test_dispatch_strategies_match_reference():
+    out = subprocess.run(
+        [sys.executable, "tests/_moe_dist_check.py"],
+        capture_output=True, text=True, timeout=600)
+    assert out.returncode == 0, out.stdout + out.stderr
+    assert "OK" in out.stdout

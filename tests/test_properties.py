@@ -1,0 +1,168 @@
+"""Property-based tests (hypothesis) on the system's invariants.
+
+The paper's core identities must hold for ARBITRARY relations and grid
+shapes, not just the curated cases:
+
+  P1  distributed join == oracle join (any keys, any grid)
+  P2  measured communication == the paper's cost formula, exactly
+  P3  1,3J and 2,3JA compute the same aggregated answer
+  P4  crossover k* is exactly where the analytic costs cross
+  P5  segment-sum kernel == oracle for any ids/values
+  P6  error-feedback compression: per-block error bounded by scale/2,
+      and the residual carries exactly what was lost
+  P7  bucket hash: deterministic, in-range, salt-decorrelated
+"""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import (SimGrid, cascade_three_way_agg, edge_relation,
+                        one_round_three_way_agg, oracle_a3, two_way_join)
+from repro.core.cost_model import (cost_cascade, cost_one_round,
+                                   crossover_reducers)
+from repro.core.hashing import bucket_hash
+from repro.distributed.compression import BLOCK, ef_compress, ef_init
+
+SETTINGS = dict(max_examples=20, deadline=None)
+
+
+def scatter(rel, shape):
+    n_dev = int(np.prod(shape))
+    cap = rel.capacity
+    per = -(-cap // n_dev)
+    pad = per * n_dev - cap
+    cols = {k: jnp.pad(c, (0, pad)).reshape(tuple(shape) + (per,))
+            for k, c in rel.cols.items()}
+    valid = jnp.pad(rel.valid, (0, pad)).reshape(tuple(shape) + (per,))
+    return type(rel)(cols, valid)
+
+
+edges = st.integers(min_value=5, max_value=60)
+nodes = st.integers(min_value=2, max_value=12)
+grids = st.sampled_from([(2,), (4,), (2, 2), (2, 3)])
+
+
+@settings(**SETTINGS)
+@given(n_edges=edges, n_nodes=nodes, grid_shape=grids, seed=st.integers(0, 99))
+def test_p1_p2_two_way_join(n_edges, n_nodes, grid_shape, seed):
+    rng = np.random.default_rng(seed)
+    a, b = (rng.integers(0, n_nodes, n_edges).astype(np.int32) for _ in "ab")
+    c, d = (rng.integers(0, n_nodes, n_edges).astype(np.int32) for _ in "cd")
+    R = scatter(edge_relation(a, b, names=("a", "b", "v")), grid_shape)
+    S = scatter(edge_relation(c, d, names=("b", "c", "w")), grid_shape)
+    grid = SimGrid(grid_shape)
+    out, stats, ovf = two_way_join(grid, R, S, "b", "b",
+                                   recv_capacity=256, out_capacity=4096)
+    assert not bool(ovf)
+    expect = {(int(x), int(y), int(z)) for x, y in zip(a, b)
+              for y2, z in zip(c, d) if y == y2}
+    got = set()
+    flat = jax.tree.map(
+        lambda x: x.reshape((-1,) + x.shape[len(grid_shape):]), out)
+    for dev in range(flat.valid.shape[0]):
+        sub = type(out)({k: v[dev] for k, v in flat.cols.items()},
+                        flat.valid[dev])
+        got |= sub.to_tuple_set(("a", "b", "c"))
+    assert got == expect                       # P1
+    assert float(stats["read"]) == 2 * n_edges     # P2
+    assert float(stats["shuffled"]) == 2 * n_edges
+
+
+@settings(max_examples=8, deadline=None)
+@given(n_edges=st.integers(10, 40), n_nodes=st.integers(3, 8),
+       seed=st.integers(0, 99))
+def test_p3_agg_algorithms_agree(n_edges, n_nodes, seed):
+    rng = np.random.default_rng(seed)
+    src = rng.integers(0, n_nodes, n_edges).astype(np.int32)
+    dst = rng.integers(0, n_nodes, n_edges).astype(np.int32)
+    grid = SimGrid((2, 2))
+    R = scatter(edge_relation(src, dst, names=("a", "b", "v")), (2, 2))
+    S = scatter(edge_relation(src, dst, names=("b", "c", "w")), (2, 2))
+    T = scatter(edge_relation(src, dst, names=("c", "d", "x")), (2, 2))
+    kw = dict(recv_capacity=256, mid_capacity=4096, local_capacity=256)
+    o1, _, ovf1 = one_round_three_way_agg(grid, R, S, T, join_capacity=32768,
+                                          out_capacity=8192, **kw)
+    o2, _, ovf2 = cascade_three_way_agg(grid, R, S, T, agg_capacity=4096,
+                                        out_capacity=32768, **kw)
+    assert not bool(ovf1) and not bool(ovf2)
+    expect = oracle_a3(src, dst)
+
+    def collect(out):
+        got = {}
+        flat = jax.tree.map(lambda x: x.reshape((-1,) + x.shape[2:]), out)
+        for dev in range(flat.valid.shape[0]):
+            sub = type(out)({k: v[dev] for k, v in flat.cols.items()},
+                            flat.valid[dev])
+            dd = sub.to_numpy()
+            for aa, d2, p in zip(dd["a"], dd["d"], dd["p"]):
+                got[(int(aa), int(d2))] = got.get((int(aa), int(d2)), 0.0) + float(p)
+        return got
+
+    g1, g2 = collect(o1), collect(o2)
+    assert set(g1) == set(g2) == set(expect)
+    for k in expect:
+        np.testing.assert_allclose(g1[k], expect[k], rtol=1e-5)
+        np.testing.assert_allclose(g2[k], expect[k], rtol=1e-5)
+
+
+@settings(max_examples=50, deadline=None)
+@given(r=st.floats(10, 1e7), j1_factor=st.floats(1.1, 500.0))
+def test_p4_crossover_is_exact(r, j1_factor):
+    j1 = r * j1_factor
+    k_star = crossover_reducers(r, r, r, j1)
+    below = cost_one_round(r, r, r, max(int(k_star * 0.96), 1))
+    above = cost_one_round(r, r, r, int(k_star * 1.04) + 1)
+    c23 = cost_cascade(r, r, r, j1)
+    assert below <= c23 * (1 + 1e-6)
+    assert above >= c23 * (1 - 1e-6)
+
+
+@settings(max_examples=15, deadline=None)
+@given(n=st.integers(1, 2000), n_seg=st.integers(1, 300),
+       seed=st.integers(0, 99))
+def test_p5_segment_sum_kernel(n, n_seg, seed):
+    from repro.kernels import ref
+    from repro.kernels.segment_sum import segment_sum
+    rng = np.random.default_rng(seed)
+    ids = rng.integers(-2, n_seg + 2, n).astype(np.int32)  # incl. out-of-range
+    vals = rng.normal(size=n).astype(np.float32)
+    got = segment_sum(jnp.array(vals), jnp.array(ids), n_seg,
+                      interpret=True, seg_tile=128, block=128)
+    want = ref.segment_sum(jnp.array(vals), jnp.array(ids), n_seg)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(n=st.integers(1, 1000), scale=st.floats(1e-3, 1e3),
+       seed=st.integers(0, 99))
+def test_p6_compression_error_feedback(n, scale, seed):
+    rng = np.random.default_rng(seed)
+    g = {"w": jnp.array(rng.normal(size=n) * scale, jnp.float32)}
+    res = ef_init(g)
+    gc, res2 = ef_compress(g, res)
+    err = np.asarray(g["w"]) - np.asarray(gc["w"])
+    # residual must equal exactly what quantization lost
+    np.testing.assert_allclose(np.asarray(res2["w"]), err, rtol=1e-5,
+                               atol=1e-6 * scale)
+    # per-block error bound: half a quantization step
+    flat = np.abs(np.asarray(g["w"]))
+    pad = -n % BLOCK
+    blocks = np.pad(flat, (0, pad)).reshape(-1, BLOCK)
+    step = blocks.max(axis=1) / 127.0
+    bound = np.repeat(step / 2 + 1e-6, BLOCK)[:n] + 1e-5 * scale
+    assert np.all(np.abs(err) <= bound + 1e-6)
+
+
+@settings(max_examples=30, deadline=None)
+@given(keys=st.lists(st.integers(-2**31, 2**31 - 1), min_size=1, max_size=64),
+       k=st.integers(1, 97), salt=st.integers(0, 3))
+def test_p7_bucket_hash(keys, k, salt):
+    x = jnp.array(np.array(keys, np.int64).astype(np.int32))
+    h1 = np.asarray(bucket_hash(x, k, salt))
+    h2 = np.asarray(bucket_hash(x, k, salt))
+    np.testing.assert_array_equal(h1, h2)          # deterministic
+    assert h1.min() >= 0 and h1.max() < k          # in-range
