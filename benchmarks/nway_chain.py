@@ -1,0 +1,150 @@
+"""N-way chain-join benchmark: one-round Shares vs cascade(+pushdown).
+
+For each chain length N ∈ {3, 4, 5}:
+
+* generate a chain of random edge relations,
+* compute EXACT chain statistics on the host (prefix joins, aggregated
+  intermediates, pushdown round sizes),
+* sweep the analytic cost model over cluster sizes k,
+* execute all three strategies through the planner/executor on a
+  SimGrid and check measured communication == analytic, exactly,
+* record what the planner picks for enumeration and aggregation.
+
+Emits ``BENCH_nway.json`` (``--out`` to override).
+
+  PYTHONPATH=src python benchmarks/nway_chain.py [--edges 120] [--out BENCH_nway.json]
+"""
+
+import argparse
+import json
+import sys
+
+sys.path.insert(0, "src")
+
+import numpy as np
+
+from repro.core import (ChainQuery, SimGrid, chain_edge_inputs,
+                        chain_replications, chain_stats_exact,
+                        default_chain_caps, execute_chain, integer_shares,
+                        plan_chain)
+
+SWEEP_K = (16, 64, 256, 1024, 4096)
+EXEC_K = 8                    # executable grid size for the measured runs
+
+
+def measured_run(strategy, query, edge_lists, stats, grid_shape):
+    grid = SimGrid(grid_shape)
+    rels = chain_edge_inputs(query, edge_lists, grid_shape)
+    out, st, ovf = execute_chain(grid, query, rels, strategy=strategy,
+                                 caps=default_chain_caps(stats, grid_shape,
+                                                         slack=4),
+                                 measure_skew=True)
+    assert not bool(ovf), f"{strategy} overflow — capacities undersized"
+    st = {k: float(v) for k, v in st.items()}
+    st.setdefault("total", st["read"] + st["shuffled"])
+    return out, st
+
+
+def bench_chain(n: int, n_edges: int, rng) -> dict:
+    # Average degree ~2 keeps intermediate sizes (and the all-pairs
+    # local-join buffers, quadratic in capacity) CPU-friendly while the
+    # chain still fans out ~2x per hop.
+    nodes = max(8, n_edges // 2)
+    edges = [(rng.integers(0, nodes, n_edges).astype(np.int32),
+              rng.integers(0, nodes, n_edges).astype(np.int32))
+             for _ in range(n)]
+    stats = chain_stats_exact(edges)
+    sizes = stats.sizes
+
+    analytic = {str(k): stats.costs(k, aggregate=True) for k in SWEEP_K}
+    plans = {
+        "enumeration": plan_chain(stats, EXEC_K, aggregate=False).algorithm,
+        "aggregation": plan_chain(stats, EXEC_K, aggregate=True).algorithm,
+    }
+
+    # --- measured runs at EXEC_K ------------------------------------------
+    shares = integer_shares(sizes, EXEC_K)
+    query = ChainQuery.chain(n)
+    query_agg = ChainQuery.chain(n, aggregate=True)
+    cascade_shape = (EXEC_K // 2, 2)
+
+    _, st_one = measured_run("one_round", query, edges, stats, shares)
+    repl = chain_replications(sizes, shares)
+    one_analytic = {
+        "read": sum(sizes),
+        "shuffled": sum(r * f for r, f in zip(sizes, repl)),
+    }
+    _, st_casc = measured_run("cascade", query, edges, stats, cascade_shape)
+    _, st_push = measured_run("cascade_pushdown", query_agg, edges, stats,
+                              cascade_shape)
+    from repro.core import cost_chain_cascade, cost_chain_cascade_pushdown
+    casc_analytic = cost_chain_cascade(sizes, stats.prefix_joins)
+    push_analytic = cost_chain_cascade_pushdown(
+        sizes, stats.prefix_joins, stats.prefix_aggs, stats.pushdown_joins)
+
+    measured = {
+        "k": EXEC_K,
+        "one_round": {
+            "grid_shape": list(shares), **st_one,
+            "analytic_shuffled": one_analytic["shuffled"],
+            "match": st_one["read"] == one_analytic["read"]
+            and st_one["shuffled"] == one_analytic["shuffled"],
+        },
+        "cascade": {
+            "grid_shape": list(cascade_shape), **st_casc,
+            "analytic_total": casc_analytic,
+            "match": st_casc["total"] == casc_analytic,
+        },
+        "cascade_pushdown": {
+            "grid_shape": list(cascade_shape), **st_push,
+            "analytic_total": push_analytic,
+            "match": st_push["total"] == push_analytic,
+        },
+    }
+    return {
+        "n_relations": n,
+        "sizes": list(sizes),
+        "prefix_joins": list(stats.prefix_joins),
+        "prefix_aggs": list(stats.prefix_aggs or ()),
+        "pushdown_joins": list(stats.pushdown_joins or ()),
+        "analytic_costs": analytic,
+        "planner_choice": plans,
+        "measured": measured,
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--edges", type=int, default=120)
+    ap.add_argument("--seed", type=int, default=7)
+    ap.add_argument("--out", default="BENCH_nway.json")
+    args = ap.parse_args()
+
+    rng = np.random.default_rng(args.seed)
+    report = {
+        "benchmark": "nway_chain",
+        "sweep_k": list(SWEEP_K),
+        "exec_k": EXEC_K,
+        "chains": {},
+    }
+    for n in (3, 4, 5):
+        row = bench_chain(n, args.edges, rng)
+        report["chains"][str(n)] = row
+        m = row["measured"]
+        ok = all(m[s]["match"] for s in ("one_round", "cascade",
+                                         "cascade_pushdown"))
+        print(f"N={n}: planner enum={row['planner_choice']['enumeration']} "
+              f"agg={row['planner_choice']['aggregation']}; "
+              f"measured==analytic: {'MATCH' if ok else 'MISMATCH'}")
+        for s in ("one_round", "cascade", "cascade_pushdown"):
+            print(f"   {s:17s} total={m[s]['total']:.0f} "
+                  f"max_load={m[s]['max_bucket_load']:.0f} "
+                  f"grid={m[s]['grid_shape']}")
+
+    with open(args.out, "w") as f:
+        json.dump(report, f, indent=2)
+    print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

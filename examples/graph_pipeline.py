@@ -1,11 +1,16 @@
-"""End-to-end driver of the paper's kind: distributed graph analytics.
+"""End-to-end driver of the paper's kind: distributed graph analytics,
+now phrased through the plan-IR → executor stack.
 
 For each synthetic SNAP-like dataset: generate the graph, compute exact
-join statistics, let the planner choose 1,3J(A) vs 2,3J(A) for both an
-enumeration job and an aggregation job (friend-of-friend counting /
-triangles), execute the chosen aggregated pipeline on a simulated
-reducer grid, and report measured communication costs vs the paper's
-formulas.
+chain statistics, let the cost-based planner choose a physical plan for
+both an enumeration query and an aggregation query (friend-of-friend
+counting / triangles), execute the chosen plan on a simulated reducer
+grid, and report measured communication vs the analytic model.
+
+A workload here is a :class:`ChainQuery`, not an algorithm: the same
+code also plans and runs a FOUR-hop path-counting query (N=4 self-join
+chain) — the kind of workload that previously needed a hand-written
+extension of the engine.
 
   PYTHONPATH=src python examples/graph_pipeline.py [--datasets amazon,twitter]
 """
@@ -14,85 +19,106 @@ import argparse
 import sys
 sys.path.insert(0, "src")
 
-import numpy as np
-
-from repro.core import (SimGrid, a_cubed, plan_three_way,
-                        triangle_count_from_a3, Relation)
-from repro.core.cost_model import JoinStats
+from repro.core import (ChainQuery, Relation, SimGrid, chain_edge_inputs,
+                        chain_stats_exact, default_chain_caps, execute_chain,
+                        oracle_triangles, plan_chain, triangle_count_from_a3)
 from repro.data.graphs import DATASETS, GraphSpec, rmat_edges
 
+import jax
 
-def downscale(spec: GraphSpec) -> GraphSpec:
+
+def downscale(spec: GraphSpec, scale_cap: int = 9,
+              factor_cap: float = 6.0) -> GraphSpec:
     """Engine-executable sizes (the full stats run in benchmarks/)."""
-    return GraphSpec(spec.name, min(spec.scale, 9),
-                     min(spec.edge_factor, 6.0), spec.a)
+    return GraphSpec(spec.name, min(spec.scale, scale_cap),
+                     min(spec.edge_factor, factor_cap), spec.a)
+
+
+def run_query(query, stats, src, dst, k, cascade_shape):
+    plan = plan_chain(stats, k=k, aggregate=query.aggregate is not None)
+    grid_shape = plan.grid_shape \
+        if plan.strategy == "one_round" else cascade_shape
+    grid = SimGrid(grid_shape)
+    edge_lists = [(src, dst)] * query.n_relations
+    rels = chain_edge_inputs(query, edge_lists, grid_shape)
+    out, mstats, ovf = execute_chain(
+        grid, query, rels, strategy=plan.strategy,
+        caps=default_chain_caps(stats, grid_shape), measure_skew=True)
+    assert not bool(ovf), "overflow — capacities undersized"
+    return plan, out, mstats, grid_shape
+
+
+def collect_value_sum(out: Relation, grid_rank: int, value="p"):
+    flat = jax.tree.map(lambda x: x.reshape((-1,) + x.shape[grid_rank:]), out)
+    total, n_out, tri = 0.0, 0, 0.0
+    for dev in range(flat.valid.shape[0]):
+        sub = Relation({k: v[dev] for k, v in flat.cols.items()},
+                       flat.valid[dev])
+        d = sub.to_numpy()
+        total += float(d[value].sum()) if value in d else 0.0
+        n_out += int(sub.count())
+        if {"a", "d", "p"} <= set(d):
+            tri += float(triangle_count_from_a3(sub))
+    return total, n_out, tri
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--datasets", default="amazon,wikitalk,twitter")
     ap.add_argument("--k", type=int, default=16)
+    ap.add_argument("--fourhop-scale", type=int, default=7,
+                    help="log2 nodes for the 4-hop demo (paths explode fast)")
     args = ap.parse_args()
 
-    sys.path.insert(0, ".")
-    from benchmarks.sparse_stats import self_join_stats
-
-    grid_shape = (4, args.k // 4)
-    grid = SimGrid(grid_shape)
+    cascade_shape = (4, args.k // 4)
 
     for name in args.datasets.split(","):
+        # ------------------------------------------------ three-way (paper)
         spec = downscale(DATASETS[name])
         src, dst = rmat_edges(spec, seed=1)
-        st = self_join_stats(src, dst)
-        stats = JoinStats(r=st["r"], s=st["r"], t=st["r"], j1=st["j1"],
-                          a1=st["a1"], j3=st["j3"])
+        stats3 = chain_stats_exact([(src, dst)] * 3)
+        j1_over_r = stats3.prefix_joins[0] / stats3.sizes[0]
+        print(f"\n=== {name}-like: {stats3.sizes[0]:.0f} edges, "
+              f"j1/r={j1_over_r:.1f} ===")
 
-        plan_enum = plan_three_way(stats, k=args.k, aggregate=False)
-        plan_agg = plan_three_way(stats, k=args.k, aggregate=True)
-        print(f"\n=== {name}-like: {st['r']:.0f} edges, "
-              f"j1/r={st['j1_over_r']:.1f} ===")
+        plan_enum = plan_chain(stats3, k=args.k, aggregate=False)
         print(f" enumeration: planner picks {plan_enum.algorithm} "
               f"(crossover k*={plan_enum.crossover_k:.0f})")
-        print(f" aggregation: planner picks {plan_agg.algorithm} "
-              f"(2,3JA={plan_agg.costs['2,3JA']:.3g} vs "
-              f"1,3JA={plan_agg.costs['1,3JA']:.3g} tuples)")
 
-        # capacities are PER-DEVICE: expected share of each intermediate
-        # (from the exact stats) times a skew-slack factor.
-        n_dev = args.k
+        query3 = ChainQuery.three_way(aggregate=True)
+        plan3, out3, mstats, gshape = run_query(query3, stats3, src, dst,
+                                                args.k, cascade_shape)
+        print(f" aggregation: planner picks {plan3.algorithm} "
+              f"({plan3.algorithm}={plan3.predicted_cost:.3g} tuples)")
+        paths3, n_out, tri = collect_value_sum(out3, len(gshape))
+        exact3 = stats3.prefix_joins[-1]
+        measured = mstats["read"] + mstats["shuffled"]
+        print(f" executed {plan3.algorithm} on {gshape} grid: {n_out} output "
+              f"pairs, 3-paths={paths3:.0f} (exact {exact3:.0f}), "
+              f"triangles={tri:.0f}")
+        print(f" measured comm cost {measured:.0f} tuples; formula "
+              f"{plan3.predicted_cost:.0f} "
+              f"({'MATCH' if abs(measured - plan3.predicted_cost) < 1e-3 * plan3.predicted_cost + 1 else 'MISMATCH'}); "
+              f"peak reducer load {mstats['max_bucket_load']:.0f}")
+        assert abs(paths3 - exact3) < 1e-3 * max(exact3, 1)
+        exact_tri = oracle_triangles(src, dst)
+        assert abs(tri - exact_tri) < 1e-3 * max(exact_tri, 1)
 
-        def per_dev(total, slack=6):
-            return int(total * slack / n_dev) + 256
-
-        cap_in = len(src)
-        caps = dict(input=cap_in, recv=per_dev(cap_in, 4),
-                    local=per_dev(cap_in, 8),
-                    mid=per_dev(st["j1"]),
-                    agg=per_dev(st["a1"]),
-                    join=per_dev(st["j3"]),
-                    out=per_dev(st["nnz_a3"]))
-        out, mstats, ovf = a_cubed(grid, src, dst,
-                                   algorithm=plan_agg.algorithm, caps=caps)
-        assert not bool(ovf), "overflow — capacities undersized"
-
-        import jax
-        flat = jax.tree.map(lambda x: x.reshape((-1,) + x.shape[2:]), out)
-        tri = 0.0
-        n_out = 0
-        for dev in range(flat.valid.shape[0]):
-            sub = Relation({k: v[dev] for k, v in flat.cols.items()},
-                           flat.valid[dev])
-            tri += float(triangle_count_from_a3(sub))
-            n_out += int(sub.count())
-        measured = float(mstats["read"] + mstats["shuffled"])
-        predicted = plan_agg.predicted_cost
-        print(f" executed {plan_agg.algorithm} on {grid_shape} grid: "
-              f"{n_out} output pairs, triangles={tri:.0f} "
-              f"(exact {st['triangles']:.0f})")
-        print(f" measured comm cost {measured:.0f} tuples; "
-              f"formula {predicted:.0f} "
-              f"({'MATCH' if abs(measured - predicted) < 1e-3 * predicted + 1 else 'MISMATCH'})")
-        assert abs(tri - st["triangles"]) < 1e-3 * max(st["triangles"], 1)
+        # ------------------------------------------------ four-hop chain
+        spec4 = downscale(DATASETS[name], scale_cap=args.fourhop_scale,
+                          factor_cap=4.0)
+        src4, dst4 = rmat_edges(spec4, seed=2)
+        stats4 = chain_stats_exact([(src4, dst4)] * 4)
+        query4 = ChainQuery.chain(4, aggregate=True)
+        plan4, out4, mstats4, gshape4 = run_query(query4, stats4, src4, dst4,
+                                                  args.k, cascade_shape)
+        paths4, n_out4, _ = collect_value_sum(out4, len(gshape4))
+        exact4 = stats4.prefix_joins[-1]
+        print(f" 4-hop ({spec4.n_edges} edges): planner picks "
+              f"{plan4.algorithm}, executed on {gshape4}: "
+              f"{n_out4} endpoint pairs, 4-paths={paths4:.0f} "
+              f"(exact {exact4:.0f})")
+        assert abs(paths4 - exact4) < 1e-3 * max(exact4, 1)
 
 
 if __name__ == "__main__":

@@ -1,39 +1,61 @@
-"""The paper's primary contribution: distributed three-way joins.
+"""The paper's primary contribution: distributed chain joins.
 
 Public API:
   Relation, SimGrid, ShardGrid — data model + reducer-grid backends
+  ChainQuery / ChainAggregate  — logical plan IR for N-way chain joins
+  execute_chain / one_round_chain / cascade_chain — the executor
   two_way_join                 — one MapReduce join round
-  one_round_three_way          — Afrati–Ullman 1,3J on a k1×k2 grid
+  one_round_three_way          — Afrati–Ullman 1,3J on a k1×k2 grid (N=3)
   cascade_three_way[_agg]      — 2,3J / 2,3JA cascade (aggregation pushdown)
   one_round_three_way_agg      — 1,3JA
   distributed_groupby_sum      — the aggregator round
-  cost model + planner         — paper formulas, crossover k*, algorithm choice
+  cost model + planner         — paper formulas generalized to N-way
+                                 chains, crossover k*, plan choice
   spmm / a_cubed / triangles   — join-based matrix multiply & graph analytics
 """
 
 from .relation import Relation, concat, flatten_leading
 from .shuffle import Grid, ShardGrid, SimGrid, broadcast_along, shuffle_by_bucket
+from .plan import ChainAggregate, ChainQuery
 from .two_way import two_way_join
+from .executor import (ChainCaps, cascade_chain, chain_edge_inputs,
+                       default_chain_caps, execute_chain, one_round_chain,
+                       scatter_to_grid)
 from .one_round import one_round_three_way
 from .cascade import cascade_three_way, cascade_three_way_agg, one_round_three_way_agg
 from .aggregation import distributed_groupby_sum, project_product
-from .cost_model import (JoinStats, cost_cascade, cost_cascade_agg,
+from .cost_model import (ChainStats, JoinStats, chain_replications,
+                         cost_cascade, cost_cascade_agg,
+                         cost_chain_cascade, cost_chain_cascade_pushdown,
+                         cost_chain_one_round, cost_chain_one_round_agg,
                          cost_one_round, cost_one_round_agg, cost_two_way,
-                         crossover_reducers, estimate_join_size, optimal_k1_k2)
-from .planner import Plan, plan_three_way, self_join_stats, self_join_stats_exact
+                         crossover_reducers, estimate_join_size,
+                         integer_shares, optimal_k1_k2, optimal_shares_chain)
+from .planner import (ChainPlan, Plan, chain_stats_exact,
+                      chain_stats_from_three_way, crossover_reducers_chain,
+                      plan_chain, plan_three_way, self_join_stats,
+                      self_join_stats_exact)
 from .matmul import (a_cubed, edge_relation, oracle_a3, oracle_triangles,
                      spmm, triangle_count_from_a3)
 
 __all__ = [
     "Relation", "concat", "flatten_leading",
     "Grid", "SimGrid", "ShardGrid", "broadcast_along", "shuffle_by_bucket",
+    "ChainQuery", "ChainAggregate", "ChainCaps",
+    "execute_chain", "one_round_chain", "cascade_chain",
+    "scatter_to_grid", "chain_edge_inputs", "default_chain_caps",
     "two_way_join", "one_round_three_way",
     "cascade_three_way", "cascade_three_way_agg", "one_round_three_way_agg",
     "distributed_groupby_sum", "project_product",
-    "JoinStats", "cost_two_way", "cost_one_round", "cost_cascade",
-    "cost_cascade_agg", "cost_one_round_agg", "crossover_reducers",
-    "estimate_join_size", "optimal_k1_k2",
-    "Plan", "plan_three_way", "self_join_stats", "self_join_stats_exact",
+    "JoinStats", "ChainStats", "cost_two_way", "cost_one_round",
+    "cost_cascade", "cost_cascade_agg", "cost_one_round_agg",
+    "cost_chain_one_round", "cost_chain_one_round_agg",
+    "cost_chain_cascade", "cost_chain_cascade_pushdown",
+    "chain_replications", "optimal_shares_chain", "integer_shares",
+    "crossover_reducers", "estimate_join_size", "optimal_k1_k2",
+    "Plan", "ChainPlan", "plan_three_way", "plan_chain",
+    "chain_stats_from_three_way", "chain_stats_exact", "crossover_reducers_chain",
+    "self_join_stats", "self_join_stats_exact",
     "spmm", "a_cubed", "edge_relation", "triangle_count_from_a3",
     "oracle_a3", "oracle_triangles",
 ]

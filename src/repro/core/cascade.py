@@ -11,27 +11,22 @@ aggregating the intermediate result shrinks everything downstream.
 Cost accounting (paper-faithful): every round charges read+shuffle; the
 *final* output (and, matching the paper's formula 6r+2r'+2r'', the final
 aggregator of 2,3JA) is not charged unless ``include_final_agg=True``.
+
+These are the N=3 entry points into the generalized chain-join engine
+(:mod:`repro.core.executor`): the cascade with greedy pushdown runs for
+any chain length; here we pin the paper's query shape and capacities.
 """
 
 from __future__ import annotations
 
-from typing import Dict, Optional, Tuple
+from typing import Dict, Tuple
 
 import jax.numpy as jnp
 
-from .aggregation import distributed_groupby_sum, project_product
+from .executor import ChainCaps, cascade_chain, one_round_chain
+from .plan import ChainQuery
 from .relation import Relation
 from .shuffle import Grid
-from .two_way import two_way_join
-
-
-def _merge_stats(*stats: Dict[str, jnp.ndarray]) -> Dict[str, jnp.ndarray]:
-    out: Dict[str, jnp.ndarray] = {}
-    for s in stats:
-        for k, v in s.items():
-            out[k] = out.get(k, jnp.zeros((), jnp.float32)) + v
-    out["total"] = out.get("read", 0.0) + out.get("shuffled", 0.0)
-    return out
 
 
 def cascade_three_way(grid: Grid, R: Relation, S: Relation, T: Relation, *,
@@ -39,15 +34,11 @@ def cascade_three_way(grid: Grid, R: Relation, S: Relation, T: Relation, *,
                       local_capacity: int | None = None,
                       ) -> Tuple[Relation, Dict[str, jnp.ndarray], jnp.ndarray]:
     """2,3J: plain cascade, enumerating the raw three-way join."""
-    j1, st1, ovf1 = two_way_join(
-        grid, R, S, "b", "b",
-        recv_capacity=recv_capacity, out_capacity=mid_capacity,
-        local_capacity=local_capacity, salt=0)
-    j2, st2, ovf2 = two_way_join(
-        grid, j1, T, "c", "c",
-        recv_capacity=mid_capacity, out_capacity=out_capacity,
-        local_capacity=mid_capacity, salt=1)
-    return j2, _merge_stats(st1, st2), ovf1 | ovf2
+    return cascade_chain(
+        grid, ChainQuery.three_way(), (R, S, T),
+        caps=ChainCaps(recv=recv_capacity, mid=mid_capacity,
+                       out=out_capacity, local=local_capacity),
+        pushdown=False)
 
 
 def cascade_three_way_agg(grid: Grid, R: Relation, S: Relation, T: Relation, *,
@@ -63,37 +54,13 @@ def cascade_three_way_agg(grid: Grid, R: Relation, S: Relation, T: Relation, *,
     join-based matrix multiplication A·B·C restricted to the tuples
     present (paper §II).  Returns the aggregated relation (a, d, p).
     """
-    # Round 1: R ⋈ S on b.
-    j1, st1, ovf1 = two_way_join(
-        grid, R, S, "b", "b",
-        recv_capacity=recv_capacity, out_capacity=mid_capacity,
-        local_capacity=local_capacity, salt=0)
-
-    # Aggregation round: Γ_{a,c; sum v·w}. This is the pushdown.
-    proj = project_product(grid, j1, keys=("a", "c"), value_cols=("v", "w"))
-    agg1, st_a, ovf_a = distributed_groupby_sum(
-        grid, proj, keys=("a", "c"), value="p",
-        recv_capacity=mid_capacity, out_capacity=agg_capacity,
-        local_capacity=mid_capacity, local_combine=local_combine)
-
-    # Round 2: AGG1(a, c, p) ⋈ T(c, d, x) on c.
-    j2, st2, ovf2 = two_way_join(
-        grid, agg1, T, "c", "c",
-        recv_capacity=max(agg_capacity, recv_capacity),
-        out_capacity=out_capacity,
-        local_capacity=max(agg_capacity, recv_capacity), salt=1)
-
-    # Final aggregation Γ_{a,d; sum p·x} — produces the output; the paper's
-    # formula (6r+2r'+2r'') does NOT charge this round, so by default we
-    # run it but keep its cost out of the stats.
-    proj2 = project_product(grid, j2, keys=("a", "d"), value_cols=("p", "x"))
-    out, st_f, ovf_f = distributed_groupby_sum(
-        grid, proj2, keys=("a", "d"), value="p",
-        recv_capacity=out_capacity, out_capacity=out_capacity,
-        local_capacity=out_capacity, local_combine=local_combine)
-
-    charged = [st1, st_a, st2] + ([st_f] if include_final_agg else [])
-    return out, _merge_stats(*charged), ovf1 | ovf_a | ovf2 | ovf_f
+    return cascade_chain(
+        grid, ChainQuery.three_way(aggregate=True), (R, S, T),
+        caps=ChainCaps(recv=recv_capacity, mid=mid_capacity,
+                       out=out_capacity, local=local_capacity,
+                       agg=agg_capacity),
+        pushdown=True, local_combine=local_combine,
+        include_final_agg=include_final_agg)
 
 
 def one_round_three_way_agg(grid: Grid, R: Relation, S: Relation, T: Relation, *,
@@ -107,16 +74,8 @@ def one_round_three_way_agg(grid: Grid, R: Relation, S: Relation, T: Relation, *
     r''') and ship it to the aggregator — cost +2·r''' — whereas 2,3JA
     shrank the data before round 2.
     """
-    from .one_round import one_round_three_way  # local import, avoids cycle
-
-    j, st_j, ovf_j = one_round_three_way(
-        grid, R, S, T, recv_capacity=recv_capacity,
-        mid_capacity=mid_capacity, out_capacity=join_capacity,
-        local_capacity=local_capacity)
-
-    proj = project_product(grid, j, keys=("a", "d"), value_cols=("v", "w", "x"))
-    out, st_a, ovf_a = distributed_groupby_sum(
-        grid, proj, keys=("a", "d"), value="p",
-        recv_capacity=join_capacity, out_capacity=out_capacity,
-        local_capacity=join_capacity)
-    return out, _merge_stats(st_j, st_a), ovf_j | ovf_a
+    return one_round_chain(
+        grid, ChainQuery.three_way(aggregate=True), (R, S, T),
+        caps=ChainCaps(recv=recv_capacity, mid=mid_capacity,
+                       out=out_capacity, local=local_capacity,
+                       join=join_capacity))

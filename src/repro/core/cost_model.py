@@ -1,4 +1,6 @@
-"""Analytic communication-cost model (paper §IV–V) + crossover analysis.
+"""Analytic communication-cost model (paper §IV–V) + crossover analysis,
+extended to N-way chains (Afrati–Ullman Shares on a rank-(N−1) hypercube
+vs. the cascade of two-way rounds, with or without aggregation pushdown).
 
 All costs are in TUPLES (the paper's unit; multiply by tuple width for
 bytes).  ``r, s, t`` are input sizes; ``j1 = |R ⋈ S|``; ``a1 =
@@ -12,7 +14,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Dict, Optional
+from typing import Dict, Optional, Sequence, Tuple
 
 
 # ---------------------------------------------------------------------------
@@ -65,6 +67,264 @@ def crossover_reducers(r: float, s: float, t: float, j1: float) -> float:
     den = 2 * math.sqrt(r * t)
     root = num / den
     return root * root
+
+
+# ---------------------------------------------------------------------------
+# N-way chain formulas (Shares hypercube vs. cascade)
+# ---------------------------------------------------------------------------
+#
+# Chain of n relations R_1..R_n with sizes r_j; hypercube dims d=1..n−1,
+# share k_d on join attribute A_{d+1}.  R_j pins the dims of its own
+# join attributes — m_j := ∏ of its pinned shares (m_1=k_1,
+# m_j=k_{j−1}k_j, m_n=k_{n−1}) — and is replicated K/m_j times,
+# K = ∏ k_d.  One-round communication: read Σ r_j, shuffle Σ r_j·K/m_j.
+
+def _hashed_dims(j: int, n: int) -> Tuple[int, ...]:
+    """0-based dims pinned by 0-based relation j in an n-chain."""
+    return tuple(d for d in (j - 1, j) if 0 <= d <= n - 2)
+
+
+def chain_replications(sizes: Sequence[float],
+                       shares: Sequence[float]) -> Tuple[float, ...]:
+    """Per-relation replication factor K/m_j for explicit shares."""
+    n = len(sizes)
+    K = math.prod(shares)
+    out = []
+    for j in range(n):
+        m = math.prod(shares[d] for d in _hashed_dims(j, n))
+        out.append(K / m)
+    return tuple(out)
+
+
+def cost_chain_one_round(sizes: Sequence[float], k: int,
+                         shares: Optional[Sequence[float]] = None) -> float:
+    """1,NJ cost: Σ r_j + Σ r_j · K/m_j.  With ``shares`` omitted, the
+    optimal (real-valued) share vector is used.  n=3 at the optimum is
+    the paper's r + 2s + t + 2√(k·r·t)."""
+    if shares is None:
+        shares = optimal_shares_chain(sizes, k)
+    repl = chain_replications(sizes, shares)
+    return sum(sizes) + sum(r * f for r, f in zip(sizes, repl))
+
+
+def optimal_shares_chain(sizes: Sequence[float], k: int) -> Tuple[float, ...]:
+    """Optimal share vector for a chain join — Lagrangean closed form.
+
+    The KKT conditions of  min Σ r_j K/m_j  s.t. ∏ k_d = K  say that for
+    every dim d the total communication of the two relations pinning it
+    is the same multiplier λ:  t_d + t_{d+1} = λ with t_j = r_j K/m_j.
+    Hence t_{j+2} = t_j: the per-relation terms ALTERNATE, t_odd = α,
+    t_even = β.  Substituting m_j = r_j K/t_j and eliminating through
+    k_1 = m_1, k_d = m_d/k_{d−1} leaves two log-linear closure
+    equations — ∏ k_d = K and k_{n−1} = m_n — in (ln α, ln β): a 2×2
+    solve.  n=3 recovers k_1 = √(Kr/t), k_2 = √(Kt/r).
+
+    If the interior solution violates k_d ≥ 1 (a share wants to drop
+    below one device), it is refined by projected gradient on the
+    (convex) problem with the k_d ≥ 1 constraints active.
+    """
+    n = len(sizes)
+    if n < 2:
+        raise ValueError("need at least 2 relations")
+    if n == 2:
+        return (float(max(k, 1)),)   # a plain two-way join: no replication
+    if k <= 1:
+        return (1.0,) * (n - 1)      # single reducer: nothing to split
+    shares = _chain_shares_interior(sizes, k)
+    if min(shares) >= 1.0 - 1e-9:
+        return tuple(max(s, 1.0) for s in shares)
+    return _chain_shares_projected(sizes, k)
+
+
+def _chain_shares_interior(sizes: Sequence[float], k: int) -> Tuple[float, ...]:
+    """Solve the alternation closed form (all shares assumed ≥ 1)."""
+    n = len(sizes)
+    lnK = math.log(k)
+    lnr = [math.log(s) for s in sizes]
+    # ln m_j = lnr_j + lnK − (A if j odd else B), 1-based j.
+    # ln k_d = Σ_{i≤d} (−1)^{d−i} ln m_i  =  P_d − u_d·A − w_d·B.
+    P, U, W = [], [], []
+    for d in range(1, n):              # 1-based dims 1..n−1
+        p = u = w = 0.0
+        for i in range(1, d + 1):
+            sign = (-1.0) ** (d - i)
+            p += sign * (lnr[i - 1] + lnK)
+            if i % 2 == 1:
+                u += sign
+            else:
+                w += sign
+        P.append(p)
+        U.append(u)
+        W.append(w)
+    # Closure 1: Σ_d ln k_d = lnK.
+    a1, b1 = sum(U), sum(W)
+    c1 = sum(P) - lnK
+    # Closure 2: ln k_{n−1} = ln m_n = lnr_n + lnK − (A if n odd else B).
+    a2, b2 = U[-1], W[-1]
+    c2 = P[-1] - (lnr[n - 1] + lnK)
+    if n % 2 == 1:
+        a2 -= 1.0
+    else:
+        b2 -= 1.0
+    det = a1 * b2 - a2 * b1
+    A = (c1 * b2 - c2 * b1) / det
+    B = (a1 * c2 - a2 * c1) / det
+    return tuple(math.exp(P[d] - U[d] * A - W[d] * B) for d in range(n - 1))
+
+
+def _chain_shares_projected(sizes: Sequence[float], k: int,
+                            iters: int = 4000) -> Tuple[float, ...]:
+    """Projected gradient on x_d = ln k_d over the simplex
+    {x ≥ 0, Σ x = ln K} — the clamped (boundary) case the closed form
+    cannot express.  The objective Σ r_j exp(−Σ_{d∈D_j} x_d) is convex
+    in x, so this converges to the constrained optimum."""
+    import numpy as np
+    n = len(sizes)
+    dims = n - 1
+    L = math.log(k)
+    r = np.asarray(sizes, np.float64) / max(sizes)
+    Dj = [_hashed_dims(j, n) for j in range(n)]
+    x = np.full(dims, L / dims)
+
+    def project(y):
+        # Euclidean projection onto {x >= 0, sum x = L}.
+        u = np.sort(y)[::-1]
+        css = np.cumsum(u)
+        rho = np.nonzero(u + (L - css) / (np.arange(dims) + 1) > 0)[0][-1]
+        theta = (css[rho] - L) / (rho + 1.0)
+        return np.maximum(y - theta, 0.0)
+
+    last = math.inf
+    for it in range(iters):
+        terms = np.array([rj * math.exp(-sum(x[d] for d in D))
+                          for rj, D in zip(r, Dj)])
+        grad = np.zeros(dims)
+        for t_j, D in zip(terms, Dj):
+            for d in D:
+                grad[d] -= t_j
+        step = 0.5 / (np.abs(grad).max() + 1e-12) / math.sqrt(it + 1.0)
+        x = project(x - step * grad)
+        if it % 50 == 49:
+            cost = float(terms.sum())
+            if last - cost <= 1e-12 * max(abs(last), 1.0):
+                break
+            last = cost
+    return tuple(math.exp(v) for v in x)
+
+
+def integer_shares(sizes: Sequence[float], k: int) -> Tuple[int, ...]:
+    """Executable share vector: greedy factor-2 refinement of (1,..,1)
+    towards the real-valued optimum, keeping ∏ shares ≤ k.  (Reducer
+    grids in practice are powers of two per dim.)"""
+    n = len(sizes)
+    if n == 2:
+        return (max(1, k),)
+    shares = [1] * (n - 1)
+    while math.prod(shares) * 2 <= k:
+        best_d, best_cost = None, None
+        for d in range(n - 1):
+            trial = list(shares)
+            trial[d] *= 2
+            c = cost_chain_one_round(sizes, math.prod(trial), shares=trial)
+            if best_cost is None or c < best_cost:
+                best_d, best_cost = d, c
+        shares[best_d] *= 2
+    return tuple(shares)
+
+
+def cost_chain_cascade(sizes: Sequence[float],
+                       prefix_joins: Sequence[float]) -> float:
+    """(N−1),NJ cost: Σ_{rounds} 2·(left input + right input), left-deep.
+    ``prefix_joins[i]`` = |R_1 ⋈ .. ⋈ R_{i+2}| (the last entry, the full
+    join, is output — never charged).  n=3 is 2r+2s+2t+2j1."""
+    n = len(sizes)
+    cost, left = 0.0, sizes[0]
+    for j in range(1, n):
+        cost += 2.0 * (left + sizes[j])
+        left = prefix_joins[j - 1]
+    return cost
+
+
+def cost_chain_cascade_pushdown(sizes: Sequence[float],
+                                prefix_joins: Sequence[float],
+                                prefix_aggs: Sequence[float],
+                                pushdown_joins: Optional[Sequence[float]] = None,
+                                ) -> float:
+    """(N−1),NJA cost: each non-final round is followed by a charged
+    aggregation that shrinks the next round's left input to the
+    aggregated size ``prefix_aggs[j−1]``.  The final aggregator is
+    uncharged (the paper's 6r + 2r' + 2r'' convention).
+
+    Because round j ≥ 2 joins the *aggregated* prefix, its output —
+    the input shipped to the next aggregator — is |Γ(J_j) ⋈ R_{j+1}|
+    (``pushdown_joins[j−2]``), not the raw prefix join |J_{j+1}|;
+    only the first round's aggregation reads the raw |J_2|.  N=3 needs
+    no ``pushdown_joins`` and reduces to 2r+2s+2t+2j1+2a1."""
+    n = len(sizes)
+    if n > 3 and pushdown_joins is None:
+        raise ValueError("pushdown cascades beyond N=3 need pushdown_joins "
+                         "(|Γ(J_j) ⋈ R_{j+1}| sizes)")
+    cost, left = 0.0, sizes[0]
+    for j in range(1, n):
+        cost += 2.0 * (left + sizes[j])
+        if j < n - 1:
+            agg_in = prefix_joins[0] if j == 1 else pushdown_joins[j - 2]
+            cost += 2.0 * agg_in                   # ship round output to Γ
+            left = prefix_aggs[j - 1]
+    return cost
+
+
+def cost_chain_one_round_agg(sizes: Sequence[float], k: int,
+                             full_join: float,
+                             shares: Optional[Sequence[float]] = None) -> float:
+    """1,NJA cost: the one-round join + 2·|full join| — the raw result
+    must be materialized and shipped to the aggregators."""
+    return cost_chain_one_round(sizes, k, shares) + 2.0 * full_join
+
+
+@dataclasses.dataclass(frozen=True)
+class ChainStats:
+    """Cardinality statistics for an N-way chain.
+
+    sizes:          (r_1, .., r_N).
+    prefix_joins:   (|J_2|, .., |J_N|) — left-deep prefix join sizes;
+                    the last entry is the full join (the paper's r''').
+    prefix_aggs:    (|Γ(J_2)|, .., |Γ(J_{N−1})|) — aggregated
+                    intermediate sizes; needed only for aggregated plans.
+    pushdown_joins: (|Γ(J_2) ⋈ R_3|, .., |Γ(J_{N−1}) ⋈ R_N|) — round
+                    outputs of the pushdown cascade beyond round 1;
+                    needed for aggregated plans with N > 3.
+    """
+    sizes: Tuple[float, ...]
+    prefix_joins: Tuple[float, ...]
+    prefix_aggs: Optional[Tuple[float, ...]] = None
+    pushdown_joins: Optional[Tuple[float, ...]] = None
+
+    @property
+    def n_relations(self) -> int:
+        return len(self.sizes)
+
+    def costs(self, k: int, aggregate: bool,
+              shares: Optional[Sequence[float]] = None) -> Dict[str, float]:
+        """All candidate plan costs, keyed by paper-style names:
+        1,NJ[A] (one round on K=k reducers) and N−1,NJ[A] (cascade)."""
+        n = self.n_relations
+        out = {
+            f"1,{n}J": cost_chain_one_round(self.sizes, k, shares),
+            f"{n - 1},{n}J": cost_chain_cascade(self.sizes, self.prefix_joins),
+        }
+        if aggregate:
+            if self.prefix_aggs is None or any(
+                    math.isnan(v) for v in self.prefix_joins):
+                raise ValueError("aggregated planning needs a1 and j3 "
+                                 "estimates (prefix_aggs and the full-join "
+                                 "size)")
+            out[f"{n - 1},{n}JA"] = cost_chain_cascade_pushdown(
+                self.sizes, self.prefix_joins, self.prefix_aggs,
+                self.pushdown_joins)
+            out[f"1,{n}JA"] = cost_chain_one_round_agg(
+                self.sizes, k, self.prefix_joins[-1], shares)
+        return out
 
 
 # ---------------------------------------------------------------------------

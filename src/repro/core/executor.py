@@ -1,0 +1,361 @@
+"""Physical executor: lower a :class:`ChainQuery` onto a reducer Grid.
+
+Two lowering strategies, both written once for any chain length N and
+any grid backend (SimGrid / ShardGrid):
+
+* :func:`one_round_chain` — the Afrati–Ullman *Shares* join on an
+  (N−1)-dimensional hypercube.  Dim d hashes join attribute A_{d+2};
+  relation R_j pins the dims of its own join attributes and is
+  replicated (``broadcast_along``) over every other dim — the
+  generalization of 1,3J's "S to one device, R to its row, T to its
+  column".  For N=3 on a k1×k2 grid this is exactly ``one_round.py``.
+
+* :func:`cascade_chain` — the left-deep cascade of ``two_way_join``
+  rounds, with the paper's aggregation *pushdown* applied greedily
+  after every non-final round (Γ over the running endpoint attribute
+  pair shrinks each intermediate before it is shuffled again).  For
+  N=3 this is exactly 2,3J / 2,3JA.
+
+Cost accounting is paper-faithful and identical to the three-way
+implementations: each round charges read + shuffled tuples; the final
+aggregator of a pushdown cascade is uncharged unless requested.
+
+Map-phase bucket histograms (per-reducer load, the skew diagnostic)
+are routed through the Pallas ``hash_histogram`` kernel on TPU and a
+jnp scatter-add elsewhere — see ``repro.kernels.hash_partition
+.bucket_counts``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax.numpy as jnp
+
+from ..kernels.hash_partition import bucket_counts
+from . import hashing
+from .aggregation import distributed_groupby_sum, project_product
+from .cost_model import ChainStats, chain_replications
+from .local import local_join
+from .plan import ChainQuery
+from .relation import Relation
+from .shuffle import Grid, broadcast_along, shuffle_by_bucket
+from .two_way import two_way_join
+
+Stats = Dict[str, jnp.ndarray]
+
+
+@dataclasses.dataclass(frozen=True)
+class ChainCaps:
+    """Static buffer budgets for one chain-query execution.
+
+    recv:  per-(device, source) slot capacity of every shuffle hop.
+    mid:   capacity of each intermediate join result.
+    out:   capacity of the final result shard.
+    local: per-device resident-shard budget after placement.
+    agg:   capacity of each pushed-down aggregate (cascade + pushdown).
+    join:  capacity of the raw N-way join when the one-round plan must
+           materialize it before aggregating (the paper's r''' term).
+    """
+
+    recv: int
+    mid: int
+    out: int
+    local: Optional[int] = None
+    agg: Optional[int] = None
+    join: Optional[int] = None
+
+
+def merge_stats(*stats: Stats) -> Stats:
+    """Sum read/shuffled across rounds; ``max_bucket_load`` maxes."""
+    out: Stats = {}
+    for s in stats:
+        for k, v in s.items():
+            if k == "max_bucket_load":
+                prev = out.get(k, jnp.zeros((), jnp.float32))
+                out[k] = jnp.maximum(prev, v)
+            elif k != "total":
+                out[k] = out.get(k, jnp.zeros((), jnp.float32)) + v
+    out["total"] = out.get("read", 0.0) + out.get("shuffled", 0.0)
+    return out
+
+
+def _count(grid: Grid, rel: Relation) -> jnp.ndarray:
+    return grid.reduce_sum(grid.map_devices(lambda r: r.count(), rel))
+
+
+def _hop_load(grid: Grid, rel: Relation, key: str, n_buckets: int,
+              salt: int) -> jnp.ndarray:
+    """Peak per-reducer load of one map-phase hop (skew diagnostic):
+    the global bucket histogram of this hop's hash, via the Pallas
+    kernel on TPU / jnp elsewhere."""
+    hist = grid.map_devices(
+        lambda r: bucket_counts(r.col(key), r.valid, n_buckets, salt=salt), rel)
+    return jnp.max(grid.reduce_sum(hist)).astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# One-round Shares join on the (N-1)-dim hypercube
+# ---------------------------------------------------------------------------
+
+def one_round_chain(grid: Grid, query: ChainQuery, rels: Sequence[Relation], *,
+                    caps: ChainCaps, measure_skew: bool = False,
+                    ) -> Tuple[Relation, Stats, jnp.ndarray]:
+    """One MapReduce round: place every relation on the hypercube, then
+    join locally.  Shuffled cost is Σ_j r_j · K / (∏ shares R_j pins) —
+    the N-way Shares communication charge, measured exactly."""
+    n = query.n_relations
+    query.check_relations(rels)
+    if len(grid.shape) != n - 1:
+        raise ValueError(f"a {n}-way chain needs a rank-{n - 1} grid, "
+                         f"got shape {grid.shape}")
+
+    read = sum(_count(grid, r) for r in rels)
+    overflow = jnp.zeros((), jnp.bool_)
+    skew = jnp.zeros((), jnp.float32)
+
+    placed: List[Relation] = []
+    for j, rel in enumerate(rels):
+        cur = rel
+        hashed = query.hashed_dims(j)
+        for d in hashed:                     # route to the pinned dims
+            attr = query.dim_attr(d)
+            if measure_skew:
+                skew = jnp.maximum(
+                    skew, _hop_load(grid, cur, attr, grid.shape[d], salt=d))
+            bucket = grid.map_devices(
+                lambda r, _d=d, _a=attr: hashing.bucket_hash(
+                    r.col(_a), grid.shape[_d], salt=_d), cur)
+            cur, ovf, _ = shuffle_by_bucket(grid, cur, bucket, d, caps.recv,
+                                            local_capacity=caps.local)
+            overflow = overflow | ovf
+        for d in range(n - 1):               # replicate over the rest
+            if d in hashed:
+                continue
+            cur, ovf = broadcast_along(grid, cur, d, caps.local)
+            overflow = overflow | ovf
+        placed.append(cur)
+
+    # Reduce side: left-deep chain of local joins (pure per-device work).
+    out_caps = [caps.mid] * (n - 2) + [caps.join if (query.aggregate and
+                                                     caps.join) else caps.out]
+
+    def reduce_side(*shards: Relation):
+        acc = shards[0]
+        ovf = jnp.zeros((), jnp.bool_)
+        for j in range(1, n):
+            key = query.attrs[j]
+            acc, o = local_join(acc, shards[j], key, key, out_caps[j - 1])
+            ovf = ovf | o
+        return acc, ovf
+
+    joined, ovf_j = grid.map_devices(reduce_side, *placed)
+    overflow = overflow | jnp.any(grid.reduce_any(ovf_j))
+
+    # Measured shuffle = tuples resident at reducers after placement
+    # (each relation counted with its replication factor).
+    received = sum(_count(grid, p) for p in placed)
+    stats: Stats = {
+        "read": read.astype(jnp.float32),
+        "shuffled": received.astype(jnp.float32),
+    }
+    if measure_skew:
+        stats["max_bucket_load"] = skew
+
+    if query.aggregate is None:
+        return joined, stats, overflow
+
+    # 1,NJA: the raw join (size r''') must be shipped to the aggregator —
+    # a charged round, the cost the pushdown cascade avoids.
+    agg = query.aggregate
+    join_cap = caps.join if caps.join else caps.out
+    proj = project_product(grid, joined, keys=agg.keys,
+                           value_cols=[v for v in query.values], out_name=agg.out)
+    out, st_a, ovf_a = distributed_groupby_sum(
+        grid, proj, keys=agg.keys, value=agg.out,
+        recv_capacity=join_cap, out_capacity=caps.out,
+        local_capacity=join_cap)
+    return out, merge_stats(stats, st_a), overflow | ovf_a
+
+
+# ---------------------------------------------------------------------------
+# Left-deep cascade with greedy aggregation pushdown
+# ---------------------------------------------------------------------------
+
+def cascade_chain(grid: Grid, query: ChainQuery, rels: Sequence[Relation], *,
+                  caps: ChainCaps, pushdown: bool = True,
+                  local_combine: bool = False,
+                  include_final_agg: bool = False,
+                  measure_skew: bool = False,
+                  ) -> Tuple[Relation, Stats, jnp.ndarray]:
+    """N−1 rounds of two-way joins, left-deep in query order.
+
+    With an aggregation and ``pushdown=True``, every non-final round is
+    followed by Γ_{A_1, A_{j+2}; SUM} of the running value product —
+    the paper's 2,3JA generalized (intermediates shrink to the
+    aggregated size before the next shuffle).  Without pushdown the
+    aggregation runs once at the end and is charged (the 1,3JA
+    convention applied to the cascade).
+    """
+    n = query.n_relations
+    query.check_relations(rels)
+    agg = query.aggregate
+    if agg is None:
+        pushdown = False
+
+    k_flat = 1
+    for s in grid.shape:
+        k_flat *= s
+
+    all_stats: List[Stats] = []
+    overflow = jnp.zeros((), jnp.bool_)
+    skew = jnp.zeros((), jnp.float32)
+
+    left = rels[0]
+    left_cap = None                       # None => first round uses caps.recv
+    value_cols: List[str] = [query.values[0]] if query.values[0] else []
+
+    for j in range(1, n):
+        key = query.attrs[j]
+        recv = caps.recv if left_cap is None else max(left_cap, caps.recv)
+        local = caps.local if left_cap is None else max(left_cap, caps.recv)
+        out_cap = caps.out if j == n - 1 else caps.mid
+        if measure_skew:
+            skew = jnp.maximum(skew, _hop_load(grid, left, key, k_flat,
+                                               salt=j - 1))
+            skew = jnp.maximum(skew, _hop_load(grid, rels[j], key, k_flat,
+                                               salt=j - 1))
+        left, st, ovf = two_way_join(
+            grid, left, rels[j], key, key,
+            recv_capacity=recv, out_capacity=out_cap,
+            local_capacity=local, salt=j - 1)
+        all_stats.append(st)
+        overflow = overflow | ovf
+        left_cap = out_cap
+        if query.values[j]:
+            value_cols.append(query.values[j])
+
+        if pushdown and j < n - 1:
+            # Γ_{A_1, A_{j+2}; SUM prod} — the pushdown round (charged).
+            keys = (query.attrs[0], query.attrs[j + 1])
+            proj = project_product(grid, left, keys=keys,
+                                   value_cols=value_cols, out_name=agg.out)
+            agg_cap = caps.agg if caps.agg else caps.mid
+            left, st_a, ovf_a = distributed_groupby_sum(
+                grid, proj, keys=keys, value=agg.out,
+                recv_capacity=left_cap, out_capacity=agg_cap,
+                local_capacity=left_cap, local_combine=local_combine)
+            all_stats.append(st_a)
+            overflow = overflow | ovf_a
+            left_cap = agg_cap
+            value_cols = [agg.out]
+
+    if agg is not None:
+        # Final Γ_{A_1, A_{N+1}; SUM}.  Under pushdown this matches the
+        # paper's uncharged final aggregator (formula 6r+2r'+2r'');
+        # without pushdown it is the (charged) aggregation round.
+        proj = project_product(grid, left, keys=tuple(agg.keys),
+                               value_cols=value_cols, out_name=agg.out)
+        fin_cap = caps.out
+        left, st_f, ovf_f = distributed_groupby_sum(
+            grid, proj, keys=tuple(agg.keys), value=agg.out,
+            recv_capacity=fin_cap, out_capacity=fin_cap,
+            local_capacity=fin_cap, local_combine=local_combine)
+        overflow = overflow | ovf_f
+        if include_final_agg or not pushdown:
+            all_stats.append(st_f)
+
+    stats = merge_stats(*all_stats)
+    if measure_skew:
+        stats["max_bucket_load"] = skew
+    return left, stats, overflow
+
+
+# ---------------------------------------------------------------------------
+# Entry point: run a logical plan
+# ---------------------------------------------------------------------------
+
+def execute_chain(grid: Grid, query: ChainQuery, rels: Sequence[Relation], *,
+                  strategy: str, caps: ChainCaps,
+                  measure_skew: bool = False, local_combine: bool = False,
+                  include_final_agg: bool = False,
+                  ) -> Tuple[Relation, Stats, jnp.ndarray]:
+    """Execute ``query`` with a planner-chosen strategy:
+
+    * ``"one_round"``          — Shares hypercube (1,NJ / 1,NJA)
+    * ``"cascade"``            — plain left-deep cascade (N−1,NJ)
+    * ``"cascade_pushdown"``   — cascade with aggregation pushdown (N−1,NJA)
+    """
+    if strategy == "one_round":
+        return one_round_chain(grid, query, rels, caps=caps,
+                               measure_skew=measure_skew)
+    if strategy == "cascade":
+        return cascade_chain(grid, query, rels, caps=caps, pushdown=False,
+                             measure_skew=measure_skew,
+                             local_combine=local_combine)
+    if strategy == "cascade_pushdown":
+        if query.aggregate is None:
+            raise ValueError("cascade_pushdown needs an aggregated query")
+        return cascade_chain(grid, query, rels, caps=caps, pushdown=True,
+                             measure_skew=measure_skew,
+                             local_combine=local_combine,
+                             include_final_agg=include_final_agg)
+    raise ValueError(f"unknown strategy {strategy!r}")
+
+
+# ---------------------------------------------------------------------------
+# Driver helpers: input placement and capacity sizing
+# ---------------------------------------------------------------------------
+
+def scatter_to_grid(rel: Relation, grid_shape: Sequence[int]) -> Relation:
+    """Round-robin a host relation over grid devices (mapper placement):
+    every column reshapes to (*grid_shape, rows_per_device)."""
+    shape = tuple(grid_shape)
+    n_dev = 1
+    for s in shape:
+        n_dev *= s
+    per = -(-rel.capacity // n_dev)
+    pad = per * n_dev - rel.capacity
+    cols = {k: jnp.pad(c, (0, pad)).reshape(shape + (per,))
+            for k, c in rel.cols.items()}
+    valid = jnp.pad(rel.valid, (0, pad)).reshape(shape + (per,))
+    return Relation(cols, valid)
+
+
+def chain_edge_inputs(query: ChainQuery, edge_lists,
+                      grid_shape: Sequence[int]) -> List[Relation]:
+    """Edge lists -> scattered per-relation inputs named by the query
+    schema (requires a value column on every relation)."""
+    from .matmul import edge_relation  # local import: matmul uses the wrappers
+    rels = []
+    for j, (src, dst) in enumerate(edge_lists):
+        a, b, v = query.schema(j)
+        rels.append(scatter_to_grid(
+            edge_relation(src, dst, names=(a, b, v)), grid_shape))
+    return rels
+
+
+def default_chain_caps(stats: ChainStats, grid_shape: Sequence[int],
+                       slack: int = 6) -> ChainCaps:
+    """Size ChainCaps from exact statistics: each buffer gets its
+    expected per-device share times a skew-slack factor.  ``slack``
+    trades memory for overflow headroom (``local_join`` buffers are
+    quadratic in capacity — keep it small on big intermediates)."""
+    n_dev = 1
+    for s in grid_shape:
+        n_dev *= s
+
+    def per(total):
+        return int(total * slack / n_dev) + 256
+
+    repl = max(chain_replications(stats.sizes, grid_shape)) \
+        if len(grid_shape) == len(stats.sizes) - 1 else 1.0
+    biggest = max(max(stats.sizes), max(stats.prefix_joins),
+                  max(stats.pushdown_joins or (0.0,)))
+    return ChainCaps(
+        recv=per(max(stats.sizes) * repl),
+        mid=per(biggest), out=per(biggest),
+        local=per(max(stats.sizes) * repl),
+        agg=per(max(stats.prefix_aggs or (256.0,))),
+        join=per(stats.prefix_joins[-1]))

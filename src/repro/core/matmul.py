@@ -52,23 +52,14 @@ def a_cubed(grid: Grid, src, dst, *, algorithm: str, caps: Dict[str, int],
             ) -> Tuple[Relation, Dict[str, jnp.ndarray], jnp.ndarray]:
     """Path-counting A³ over edge list A via the chosen algorithm
     ("2,3JA" cascade-with-pushdown or "1,3JA" one-round)."""
+    from .executor import scatter_to_grid  # local import, avoids cycle
+
     cap_in = caps["input"]
     R = edge_relation(src, dst, capacity=cap_in, names=("a", "b", "v"))
     S = edge_relation(src, dst, capacity=cap_in, names=("b", "c", "w"))
     T = edge_relation(src, dst, capacity=cap_in, names=("c", "d", "x"))
 
-    def scatter_inputs(rel: Relation) -> Relation:
-        """Round-robin the input chunks over the grid (mapper placement)."""
-        n_dev = int(np.prod(grid.shape))
-        cap = rel.capacity
-        per = -(-cap // n_dev)
-        pad = per * n_dev - cap
-        cols = {k: jnp.pad(c, (0, pad)).reshape(grid.shape + (per,))
-                for k, c in rel.cols.items()}
-        valid = jnp.pad(rel.valid, (0, pad)).reshape(grid.shape + (per,))
-        return Relation(cols, valid)
-
-    R, S, T = scatter_inputs(R), scatter_inputs(S), scatter_inputs(T)
+    R, S, T = (scatter_to_grid(rel, grid.shape) for rel in (R, S, T))
     local = caps.get("local")
     if algorithm == "2,3JA":
         return cascade_three_way_agg(

@@ -6,12 +6,13 @@ R(A,B,V) ⋈ S(B,C,W) ⋈ T(C,D,X):
 * R tuples go to the whole row    ``(h(b), *)``               (cost k2·r)
 * T tuples go to the whole column ``(*, g(c))``               (cost k1·t)
 
-On the TPU mesh the row/column replication is an ``all_gather`` along a
-mesh axis after an ``all_to_all`` that places tuples on the correct
-row/column — the gather *is* the k2·r / k1·t communication charge.
-
 Total paper cost: (r+s+t) reads + (s + k1·t + k2·r) shuffled; minimized
 at k1=√(kr/t), k2=√(kt/r) giving r+2s+t+2√(k·r·t).
+
+This module is the N=3 entry point into the generalized chain-join
+engine: :func:`repro.core.executor.one_round_chain` runs the same
+placement for any chain length on a hypercube of rank N−1; here we
+pin the paper's query shape and capacity conventions.
 """
 
 from __future__ import annotations
@@ -20,10 +21,10 @@ from typing import Dict, Tuple
 
 import jax.numpy as jnp
 
-from . import hashing
-from .local import local_join
+from .executor import ChainCaps, one_round_chain
+from .plan import ChainQuery
 from .relation import Relation
-from .shuffle import Grid, broadcast_along, shuffle_by_bucket
+from .shuffle import Grid
 
 
 def one_round_three_way(grid: Grid, R: Relation, S: Relation, T: Relation, *,
@@ -42,52 +43,7 @@ def one_round_three_way(grid: Grid, R: Relation, S: Relation, T: Relation, *,
     """
     if len(grid.shape) != 2:
         raise ValueError("1,3J requires a 2-D (k1, k2) grid")
-    k1, k2 = grid.shape
-
-    n_r = grid.reduce_sum(grid.map_devices(lambda r: r.count(), R))
-    n_s = grid.reduce_sum(grid.map_devices(lambda r: r.count(), S))
-    n_t = grid.reduce_sum(grid.map_devices(lambda r: r.count(), T))
-
-    # --- S -> (h(b), g(c)): two hops, one per axis --------------------------
-    hb = grid.map_devices(lambda r: hashing.h(r.col("b"), k1), S)
-    S1, ovf_s1, _ = shuffle_by_bucket(grid, S, hb, 0, recv_capacity,
-                                      local_capacity=local_capacity)
-    gc = grid.map_devices(lambda r: hashing.g(r.col("c"), k2), S1)
-    S2, ovf_s2, _ = shuffle_by_bucket(grid, S1, gc, 1, recv_capacity,
-                                      local_capacity=local_capacity)
-
-    # --- R -> row h(b), replicated across columns ---------------------------
-    hb_r = grid.map_devices(lambda r: hashing.h(r.col("b"), k1), R)
-    R1, ovf_r, _ = shuffle_by_bucket(grid, R, hb_r, 0, recv_capacity,
-                                     local_capacity=local_capacity)
-    R2, ovf_rb = broadcast_along(grid, R1, 1, local_capacity)  # the k2·r replication
-
-    # --- T -> column g(c), replicated across rows ---------------------------
-    gc_t = grid.map_devices(lambda r: hashing.g(r.col("c"), k2), T)
-    T1, ovf_t, _ = shuffle_by_bucket(grid, T, gc_t, 1, recv_capacity,
-                                     local_capacity=local_capacity)
-    T2, ovf_tb = broadcast_along(grid, T1, 0, local_capacity)  # the k1·t replication
-
-    # --- reduce side: match on b then on c (pure local work) ----------------
-    def reduce_side(r: Relation, s: Relation, t: Relation):
-        rs, ovf1 = local_join(r, s, "b", "b", mid_capacity)
-        rst, ovf2 = local_join(rs, t, "c", "c", out_capacity)
-        return rst, ovf1 | ovf2
-
-    joined, ovf_j = grid.map_devices(reduce_side, R2, S2, T2)
-
-    overflow = (ovf_s1 | ovf_s2 | ovf_r | ovf_t | ovf_rb | ovf_tb
-                | jnp.any(grid.reduce_any(ovf_j)))
-
-    # Measured shuffle = tuples resident at reducers after placement:
-    # S contributes s, R contributes k2·r, T contributes k1·t.
-    received = (
-        grid.reduce_sum(grid.map_devices(lambda x: x.count(), S2))
-        + grid.reduce_sum(grid.map_devices(lambda x: x.count(), R2))
-        + grid.reduce_sum(grid.map_devices(lambda x: x.count(), T2))
-    )
-    stats = {
-        "read": (n_r + n_s + n_t).astype(jnp.float32),
-        "shuffled": received.astype(jnp.float32),
-    }
-    return joined, stats, overflow
+    return one_round_chain(
+        grid, ChainQuery.three_way(), (R, S, T),
+        caps=ChainCaps(recv=recv_capacity, mid=mid_capacity,
+                       out=out_capacity, local=local_capacity))

@@ -1,0 +1,146 @@
+"""Logical plan IR: chain joins as data, not as hand-written algorithms.
+
+The paper's R(A,B) ⋈ S(B,C) ⋈ T(C,D) is the N=3 instance of a *chain
+query*
+
+    R_1(A_1, A_2) ⋈ R_2(A_2, A_3) ⋈ ... ⋈ R_N(A_N, A_{N+1})
+
+optionally followed by the endpoint aggregation
+
+    Γ_{A_1, A_{N+1}; SUM prod(values)}          (join-defined matmul chain)
+
+A :class:`ChainQuery` names the N+1 attributes, the per-relation value
+columns, and the aggregation.  ``core.executor`` lowers a query to
+either the one-round Shares join (hypercube of rank N−1) or the
+left-deep cascade of two-way joins with greedy aggregation pushdown;
+``core.planner`` picks between them by analytic cost.  Adding a new
+chain workload is writing a query, not an algorithm.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import string
+from typing import Optional, Sequence, Tuple
+
+from .relation import Relation
+
+
+@dataclasses.dataclass(frozen=True)
+class ChainAggregate:
+    """Γ_{keys; SUM prod(value columns)} over the chain-join result.
+
+    ``keys`` must be the chain's endpoint attributes (A_1, A_{N+1}) —
+    the configuration under which SUM-of-products commutes with the
+    remaining joins, which is what makes pushdown sound (paper §V).
+    ``out`` names the produced value column.
+    """
+
+    keys: Tuple[str, str]
+    out: str = "p"
+
+
+@dataclasses.dataclass(frozen=True)
+class ChainQuery:
+    """An N-way chain join over relations R_j(attrs[j], attrs[j+1], values[j]).
+
+    attrs:     N+1 attribute names A_1..A_{N+1}; R_j joins R_{j+1} on
+               attrs[j+1].  All names must be distinct (a chain, not a
+               cycle — self-joins are expressed by feeding the same
+               edge data as distinct relations, as the paper does).
+    values:    per-relation value column name, or None for key-only
+               relations.  Aggregated queries need a value on every
+               relation, with distinct names.
+    aggregate: optional endpoint aggregation.
+    """
+
+    attrs: Tuple[str, ...]
+    values: Tuple[Optional[str], ...]
+    aggregate: Optional[ChainAggregate] = None
+
+    def __post_init__(self):
+        if len(self.attrs) < 3:
+            raise ValueError("a chain query needs >= 2 relations (>= 3 attributes)")
+        if len(self.values) != self.n_relations:
+            raise ValueError(
+                f"{self.n_relations} relations need {self.n_relations} value "
+                f"entries, got {len(self.values)}")
+        named = [n for n in self.attrs + tuple(v for v in self.values if v)]
+        if len(set(named)) != len(named):
+            raise ValueError(f"attribute/value names must be distinct: {named}")
+        if self.aggregate is not None:
+            if any(v is None for v in self.values):
+                raise ValueError("aggregated queries need a value column on "
+                                 "every relation")
+            want = (self.attrs[0], self.attrs[-1])
+            if tuple(self.aggregate.keys) != want:
+                raise ValueError(
+                    f"aggregation keys must be the chain endpoints {want}, "
+                    f"got {self.aggregate.keys}")
+            if self.aggregate.out in named:
+                raise ValueError(
+                    f"aggregation output column {self.aggregate.out!r} "
+                    f"collides with an attribute/value name")
+
+    # -- shape ------------------------------------------------------------
+    @property
+    def n_relations(self) -> int:
+        return len(self.attrs) - 1
+
+    @property
+    def join_attrs(self) -> Tuple[str, ...]:
+        """The N−1 shared attributes A_2..A_N — one hypercube dim each."""
+        return self.attrs[1:-1]
+
+    def schema(self, j: int) -> Tuple[str, ...]:
+        """Column names of relation j (0-based)."""
+        cols = [self.attrs[j], self.attrs[j + 1]]
+        if self.values[j] is not None:
+            cols.append(self.values[j])
+        return tuple(cols)
+
+    def hashed_dims(self, j: int) -> Tuple[int, ...]:
+        """Hypercube dims relation j hashes (Shares): the dims of its own
+        join attributes.  Interior relations pin two dims, the two end
+        relations one; remaining dims are broadcast (replication)."""
+        dims = []
+        if j > 0:
+            dims.append(j - 1)          # its left attr attrs[j]
+        if j < self.n_relations - 1:
+            dims.append(j)              # its right attr attrs[j+1]
+        return tuple(dims)
+
+    def dim_attr(self, d: int) -> str:
+        """The join attribute hashed along hypercube dim d."""
+        return self.attrs[d + 1]
+
+    # -- validation against physical inputs -------------------------------
+    def check_relations(self, rels: Sequence[Relation]) -> None:
+        if len(rels) != self.n_relations:
+            raise ValueError(f"query has {self.n_relations} relations, "
+                             f"got {len(rels)}")
+        for j, rel in enumerate(rels):
+            missing = set(self.schema(j)) - set(rel.names)
+            if missing:
+                raise ValueError(f"relation {j} is missing columns {missing}; "
+                                 f"has {rel.names}")
+
+    # -- constructors ------------------------------------------------------
+    @classmethod
+    def chain(cls, n: int, *, aggregate: bool = False) -> "ChainQuery":
+        """Canonical N-way chain: attrs a,b,c,...; values v0,v1,...
+        ``chain(3)`` is the paper's R(a,b,v0) ⋈ S(b,c,v1) ⋈ T(c,d,v2)."""
+        if n + 1 > len(string.ascii_lowercase):
+            raise ValueError(f"chain too long: {n}")
+        attrs = tuple(string.ascii_lowercase[: n + 1])
+        values = tuple(f"v{j}" for j in range(n))
+        agg = ChainAggregate(keys=(attrs[0], attrs[-1])) if aggregate else None
+        return cls(attrs=attrs, values=values, aggregate=agg)
+
+    @classmethod
+    def three_way(cls, *, aggregate: bool = False) -> "ChainQuery":
+        """The paper's query in its column naming: R(a,b,v) S(b,c,w)
+        T(c,d,x), aggregated output value ``p``."""
+        agg = ChainAggregate(keys=("a", "d")) if aggregate else None
+        return cls(attrs=("a", "b", "c", "d"), values=("v", "w", "x"),
+                   aggregate=agg)

@@ -1,12 +1,20 @@
-"""Cost-based planner — the paper's decision procedure as a feature.
+"""Cost-based planner — the paper's decision procedure, generalized.
 
-Given cardinality statistics and the cluster size, choose the cheapest
-algorithm.  Encodes the paper's conclusions:
+Given cardinality statistics for an N-way chain and the cluster size,
+enumerate the physical plans the executor can run —
+
+  * one-round Shares join on the (N−1)-dim hypercube   (1,NJ / 1,NJA)
+  * left-deep cascade of two-way rounds                (N−1,NJ)
+  * cascade with aggregation pushdown                  (N−1,NJA)
+
+— price each with the analytic cost model, and pick the cheapest.  The
+paper's three-way rules fall out as the N=3 special case (asserted in
+tests/test_cost_model.py):
 
 * enumeration only: 1,3J below the crossover k*, else 2,3J;
 * aggregation needed: 2,3JA is "the preferred solution" (its cost is
-  flat in k while 1,3JA grows as 2r√k) — but we still evaluate both
-  and pick by cost, which reduces to the paper's rule.
+  flat in k while 1,3JA grows as 2r√k) — we evaluate both and pick by
+  cost, which reduces to the paper's rule.
 """
 
 from __future__ import annotations
@@ -16,8 +24,133 @@ from typing import Dict, Optional, Tuple
 
 import numpy as np
 
-from .cost_model import JoinStats, crossover_reducers, estimate_join_size
+from .cost_model import (ChainStats, JoinStats, cost_chain_one_round,
+                         crossover_reducers, estimate_join_size,
+                         integer_shares, optimal_shares_chain)
 
+
+# ---------------------------------------------------------------------------
+# N-way chain planning
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ChainPlan:
+    """A priced, executable choice for one chain query.
+
+    ``algorithm`` uses the paper's naming (``1,4J``, ``3,4JA``, ...);
+    ``strategy`` is the executor entry point; ``grid_shape`` is the
+    integer share vector a one-round execution should use (cascades
+    ignore it).
+    """
+
+    algorithm: str
+    strategy: str                  # executor strategy name
+    k: int
+    shares: Tuple[float, ...]      # optimal real-valued Shares vector
+    grid_shape: Tuple[int, ...]    # executable integer shares (∏ ≤ k)
+    costs: Dict[str, float]
+    crossover_k: Optional[float]   # enumeration crossover k* (exact, any N)
+
+    @property
+    def predicted_cost(self) -> float:
+        return self.costs[self.algorithm]
+
+
+def _strategy_of(algorithm: str) -> str:
+    if algorithm.startswith("1,"):
+        return "one_round"
+    return "cascade_pushdown" if algorithm.endswith("JA") else "cascade"
+
+
+def crossover_reducers_chain(stats: ChainStats) -> float:
+    """k* where the one-round plan's cost overtakes the cascade's —
+    the N-way generalization of the paper's Fig. 3 crossover, found by
+    bisection (cost_chain_one_round is strictly increasing in k once
+    every share is active).  Returns ``inf`` if one-round never loses."""
+    from .cost_model import cost_chain_cascade
+    target = cost_chain_cascade(stats.sizes, stats.prefix_joins)
+    lo, hi = 1.0, 2.0
+    while cost_chain_one_round(stats.sizes, int(hi)) < target:
+        hi *= 2.0
+        if hi > 2 ** 60:
+            return float("inf")
+    for _ in range(80):
+        mid = (lo + hi) / 2.0
+        if cost_chain_one_round(stats.sizes, mid) < target:
+            lo = mid
+        else:
+            hi = mid
+    return (lo + hi) / 2.0
+
+
+def plan_chain(stats: ChainStats, k: int, aggregate: bool) -> ChainPlan:
+    """Enumerate {one-round, cascade, cascade+pushdown} for an N-way
+    chain and pick by analytic cost."""
+    n = stats.n_relations
+    shares = optimal_shares_chain(stats.sizes, k)
+    costs = stats.costs(k, aggregate, shares=shares)
+    if aggregate:
+        candidates = (f"{n - 1},{n}JA", f"1,{n}JA")
+    else:
+        candidates = (f"{n - 1},{n}J", f"1,{n}J")
+    algorithm = min(candidates, key=lambda a: costs[a])
+    return ChainPlan(
+        algorithm=algorithm,
+        strategy=_strategy_of(algorithm),
+        k=k,
+        shares=shares,
+        grid_shape=integer_shares(stats.sizes, k),
+        costs=costs,
+        crossover_k=crossover_reducers_chain(stats),
+    )
+
+
+def chain_stats_exact(edges) -> ChainStats:
+    """Exact ChainStats for a chain of edge-list relations, via sparse
+    path-count products on the host (cheap at experiment scales, same
+    trick as ``self_join_stats_exact``).
+
+    ``edges`` is a sequence of (src, dst) int arrays, one per relation
+    in chain order.  ``prefix_joins[i]`` = Σ of the path-count matrix
+    M_{i+2} = A_1·..·A_{i+2}; ``prefix_aggs[i]`` = nnz(M_{i+2}).
+    """
+    from collections import defaultdict
+
+    def adj(src, dst):
+        out = defaultdict(lambda: defaultdict(int))
+        for s_, d_ in zip(np.asarray(src).tolist(), np.asarray(dst).tolist()):
+            out[s_][d_] += 1
+        return out
+
+    mats = [adj(s, d) for s, d in edges]
+    sizes = tuple(float(len(np.asarray(s))) for s, _ in edges)
+    cur = mats[0]
+    prefix_joins, prefix_nnz, pushdown_joins = [], [], []
+    for step, nxt in enumerate(mats[1:]):
+        if step >= 1:
+            # Pushdown round output: each nnz entry of Γ(prefix) pairs
+            # with every matching next-relation tuple.
+            deg = {y: float(sum(row.values())) for y, row in nxt.items()}
+            h = sum(deg.get(y, 0.0) for row in cur.values() for y in row)
+            pushdown_joins.append(h)
+        prod = defaultdict(lambda: defaultdict(int))
+        join_size = 0.0
+        for x, row in cur.items():
+            for y, m in row.items():
+                for z, m2 in nxt.get(y, {}).items():
+                    prod[x][z] += m * m2
+                    join_size += m * m2
+        cur = prod
+        prefix_joins.append(join_size)
+        prefix_nnz.append(float(sum(len(r) for r in prod.values())))
+    return ChainStats(sizes=sizes, prefix_joins=tuple(prefix_joins),
+                      prefix_aggs=tuple(prefix_nnz[:-1]),
+                      pushdown_joins=tuple(pushdown_joins[:-1]) or None)
+
+
+# ---------------------------------------------------------------------------
+# Three-way compatibility surface (the paper's original interface)
+# ---------------------------------------------------------------------------
 
 @dataclasses.dataclass(frozen=True)
 class Plan:
@@ -45,7 +178,6 @@ def self_join_stats_exact(src: np.ndarray, dst: np.ndarray) -> JoinStats:
     with exact numbers (feasible at experiment scales)."""
     n = float(len(src))
     j1 = estimate_join_size(dst, src)
-    nodes = int(max(src.max(initial=0), dst.max(initial=0))) + 1
     # Dict-of-rows sparse bool product for nnz(A^2) and Σ path counts.
     from collections import defaultdict
     out_adj = defaultdict(list)
@@ -67,11 +199,18 @@ def self_join_stats_exact(src: np.ndarray, dst: np.ndarray) -> JoinStats:
     return JoinStats(r=n, s=n, t=n, j1=j1, a1=a1, j3=j3)
 
 
+def chain_stats_from_three_way(stats: JoinStats) -> ChainStats:
+    """Bridge the paper's JoinStats to the N-way statistics object."""
+    prefix_joins = (stats.j1, stats.j3 if stats.j3 is not None else float("nan"))
+    prefix_aggs = (stats.a1,) if stats.a1 is not None else None
+    return ChainStats(sizes=(stats.r, stats.s, stats.t),
+                      prefix_joins=prefix_joins, prefix_aggs=prefix_aggs)
+
+
 def plan_three_way(stats: JoinStats, k: int, aggregate: bool) -> Plan:
-    costs = stats.costs(k, aggregate)
-    if aggregate:
-        algorithm = min(("2,3JA", "1,3JA"), key=lambda a: costs[a])
-    else:
-        algorithm = min(("2,3J", "1,3J"), key=lambda a: costs[a])
-    return Plan(algorithm=algorithm, k=k, costs=costs,
-                crossover_k=crossover_reducers(stats.r, stats.s, stats.t, stats.j1))
+    """The paper's decision procedure — now the N=3 instance of
+    :func:`plan_chain` (same algorithm names, same conclusions)."""
+    chain = plan_chain(chain_stats_from_three_way(stats), k, aggregate)
+    return Plan(algorithm=chain.algorithm, k=k, costs=chain.costs,
+                crossover_k=crossover_reducers(stats.r, stats.s, stats.t,
+                                               stats.j1))

@@ -25,6 +25,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from ..compat import shard_map
 from .local import partition
 from .relation import Relation, flatten_leading
 
@@ -149,7 +150,7 @@ class ShardGrid(Grid):
         in_specs = in_specs if in_specs is not None else P(self.axis_names[0])
         out_specs = out_specs if out_specs is not None else P(self.axis_names[0])
         body = functools.partial(fn, self)
-        return jax.shard_map(
+        return shard_map(
             body, mesh=self.mesh, in_specs=in_specs, out_specs=out_specs,
             check_vma=False)(*args)
 

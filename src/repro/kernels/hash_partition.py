@@ -18,6 +18,9 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# jax moved TPUCompilerParams -> CompilerParams across versions; accept both.
+_COMPILER_PARAMS = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+
 _KNUTH = 2654435761
 _SALTS = (0x9E3779B9, 0x85EBCA6B, 0xC2B2AE35, 0x27D4EB2F)
 
@@ -73,11 +76,32 @@ def hash_histogram(keys: jnp.ndarray, valid: jnp.ndarray, n_buckets: int, *,
         ],
         out_specs=pl.BlockSpec((1, k_pad), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((n_blocks, k_pad), jnp.int32),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_COMPILER_PARAMS(
             dimension_semantics=("parallel",)),
         interpret=interpret,
     )(keys_p.reshape(n_blocks, block), valid_p.reshape(n_blocks, block))
     return out[:, :n_buckets]
+
+
+def bucket_counts(keys: jnp.ndarray, valid: jnp.ndarray, n_buckets: int, *,
+                  salt: int = 0, block: int = 1024,
+                  use_pallas: bool | None = None) -> jnp.ndarray:
+    """Global bucket-load histogram of one map-phase shuffle hop.
+
+    This is how the chain-join executor sizes and diagnoses a round:
+    the histogram's max is the most-loaded reducer (skew).  On TPU the
+    fused Pallas hash+histogram kernel does it in one pass over HBM;
+    elsewhere (CPU tests, SimGrid under vmap) an equivalent jnp
+    scatter-add with bit-identical hash semantics.
+    """
+    if use_pallas is None:
+        use_pallas = jax.default_backend() == "tpu"
+    if use_pallas:
+        return hash_histogram(keys, valid, n_buckets, salt=salt,
+                              block=block).sum(axis=0)
+    b = _bucket_hash(keys, n_buckets, salt)
+    return (jnp.zeros((n_buckets,), jnp.int32)
+            .at[b].add(valid.astype(jnp.int32), mode="drop"))
 
 
 def partition_offsets(histogram: jnp.ndarray) -> jnp.ndarray:

@@ -21,6 +21,9 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# jax moved TPUCompilerParams -> CompilerParams across versions; accept both.
+_COMPILER_PARAMS = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+
 
 def _kernel(ids_ref, val_ref, out_ref, *, seg_tile: int, block: int):
     nb = pl.program_id(1)
@@ -87,7 +90,7 @@ def segment_sum(values: jnp.ndarray, segment_ids: jnp.ndarray,
         ],
         out_specs=pl.BlockSpec((1, seg_tile), lambda st, nb: (st, 0)),
         out_shape=jax.ShapeDtypeStruct((n_tiles, seg_tile), jnp.float32),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_COMPILER_PARAMS(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(ids2, vals2)

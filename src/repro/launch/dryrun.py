@@ -32,6 +32,7 @@ from typing import Dict, Optional
 
 import jax
 import jax.numpy as jnp
+from ..compat import shard_map
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs import all_archs, get_config
@@ -255,7 +256,7 @@ def build_join3_cell(algorithm: str, mesh, cap: int = 4096,
             return (jax.tree.map(ex, out.cols), ex(out.valid), stats,
                     ovf.astype(jnp.int32))
 
-        return jax.shard_map(
+        return shard_map(
             shard_body, mesh=mesh,
             in_specs=(lead, lead, lead, lead, lead, lead),
             out_specs=(lead, lead, P(), P()),

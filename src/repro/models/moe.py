@@ -32,6 +32,8 @@ from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp
+
+from ..compat import shard_map
 from jax.sharding import PartitionSpec as P
 
 from ..distributed.sharding import Planner
@@ -179,7 +181,7 @@ def moe_forward(p: Dict, x: jnp.ndarray, cfg: ModelConfig,
                                  shard_experts=shard_experts,
                                  model_axis=model_axis, n_model=n_model,
                                  all_axes=tuple(axis_names))
-    out, aux = jax.shard_map(
+    out, aux = shard_map(
         body, mesh=mesh,
         in_specs=({k: pspec[k] for k in p}, xspec),
         out_specs=(xspec, P()),

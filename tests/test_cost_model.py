@@ -1,0 +1,200 @@
+"""Cost model + planner tests (paper formulas and their N-way extension).
+
+The three-way rules must fall out of the chain model as the N=3
+special case: the Shares cost reduces to r+2s+t+2√(k·r·t), the
+crossover matches the analytic k*, and the planner reproduces the
+paper's 1,3J-vs-2,3JA conclusions on paper-scale statistics.
+"""
+
+import math
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    ChainStats, JoinStats, chain_replications, chain_stats_exact,
+    cost_cascade, cost_cascade_agg, cost_chain_cascade,
+    cost_chain_cascade_pushdown, cost_chain_one_round,
+    cost_chain_one_round_agg, cost_one_round, cost_one_round_agg,
+    crossover_reducers, crossover_reducers_chain, integer_shares,
+    optimal_k1_k2, optimal_shares_chain, plan_chain, plan_three_way,
+)
+
+
+class TestSharesClosedForm:
+    def test_n3_reduces_to_paper_formula(self):
+        """N=3 Shares cost at the optimum == r + 2s + t + 2√(k·r·t)."""
+        for r, s, t, k in [(100., 100., 100., 64), (1e6, 1e6, 1e6, 1000),
+                           (5e4, 2e5, 8e4, 256), (1e3, 1e4, 4e3, 16)]:
+            got = cost_chain_one_round((r, s, t), k)
+            want = r + 2 * s + t + 2 * math.sqrt(k * r * t)
+            assert got == pytest.approx(want, rel=1e-9)
+            # ... and equals the original three-way formula.
+            assert got == pytest.approx(cost_one_round(r, s, t, k), rel=1e-9)
+
+    def test_n3_shares_match_afrati_ullman_split(self):
+        r, s, t, k = 3e5, 1e5, 1.2e6, 4096
+        k1, k2 = optimal_k1_k2(k, r, t)
+        got = optimal_shares_chain((r, s, t), k)
+        assert got[0] == pytest.approx(k1, rel=1e-9)
+        assert got[1] == pytest.approx(k2, rel=1e-9)
+
+    def test_n4_alternation_closed_form(self):
+        """Chain KKT ⇒ terms alternate: shuffled cost is
+        2√(K·r1·r3) + 2√(K·r2·r4) at the interior optimum."""
+        sizes, k = (100., 200., 300., 400.), 4096
+        got = cost_chain_one_round(sizes, k)
+        want = (sum(sizes) + 2 * math.sqrt(k * sizes[0] * sizes[2])
+                + 2 * math.sqrt(k * sizes[1] * sizes[3]))
+        assert got == pytest.approx(want, rel=1e-9)
+
+    def test_share_product_and_feasibility(self):
+        for sizes, k in [((10., 20., 30.), 64), ((1., 2., 3., 4., 5.), 1024),
+                         ((1e6, 1., 1., 1.), 4)]:
+            shares = optimal_shares_chain(sizes, k)
+            assert min(shares) >= 1.0 - 1e-6
+            assert math.prod(shares) == pytest.approx(k, rel=1e-3)
+
+    def test_single_reducer_degenerates_to_unit_shares(self):
+        # k=1 must not crash (even where the interior solution is
+        # infeasible) — a one-device cluster is a valid planner input.
+        assert optimal_shares_chain((100., 10., 1.), 1) == (1.0, 1.0)
+        assert cost_chain_one_round((100., 10., 1.), 1) == 2 * 111.0
+
+    def test_integer_shares_feasible_and_near_optimal(self):
+        sizes, k = (1e4, 1e4, 1e4), 16
+        ishares = integer_shares(sizes, k)
+        assert all(isinstance(s, int) for s in ishares)
+        assert math.prod(ishares) <= k
+        # Self-join at k=16: the optimum √k=4 per dim is integral.
+        assert ishares == (4, 4)
+
+    def test_replication_factors(self):
+        # N=3 on (k1,k2): R gets k2, S gets 1, T gets k1.
+        assert chain_replications((1., 1., 1.), (4, 8)) == (8.0, 1.0, 4.0)
+
+
+class TestCascadeFormulas:
+    def test_n3_reduces_to_paper_cascade(self):
+        r, s, t, j1, a1 = 10., 20., 30., 400., 50.
+        assert cost_chain_cascade((r, s, t), (j1, 1e9)) == \
+            cost_cascade(r, s, t, j1)
+        assert cost_chain_cascade_pushdown((r, s, t), (j1, 1e9), (a1,)) == \
+            cost_cascade_agg(r, s, t, j1, a1)
+
+    def test_n3_one_round_agg_reduces(self):
+        r, s, t, j3, k = 10., 20., 30., 5000., 64
+        assert cost_chain_one_round_agg((r, s, t), k, j3) == \
+            pytest.approx(cost_one_round_agg(r, s, t, j3, k), rel=1e-9)
+
+    def test_pushdown_requires_stats_beyond_n3(self):
+        with pytest.raises(ValueError, match="pushdown_joins"):
+            cost_chain_cascade_pushdown((1., 1., 1., 1.), (2., 3., 4.),
+                                        (2., 2.))
+
+
+class TestCrossover:
+    def test_crossover_matches_analytic(self):
+        """k* solves r+2s+t+2√(k·r·t) = 2(r+s+t)+2j1 exactly."""
+        for r, j1_factor in [(1e4, 10.), (1e6, 259.), (500., 2.)]:
+            j1 = r * j1_factor
+            k_star = crossover_reducers(r, r, r, j1)
+            # Analytic: √k* = (r + t + 2j1) / (2√(rt)); self-join (1+j1/r)².
+            assert k_star == pytest.approx((1 + j1 / r) ** 2, rel=1e-12)
+            at_star = cost_one_round(r, r, r, k_star)
+            assert at_star == pytest.approx(cost_cascade(r, r, r, j1), rel=1e-9)
+            below = cost_one_round(r, r, r, k_star * 0.9)
+            above = cost_one_round(r, r, r, k_star * 1.1)
+            assert below < cost_cascade(r, r, r, j1) < above
+
+    def test_chain_crossover_agrees_at_n3(self):
+        r = 1e5
+        stats = ChainStats(sizes=(r, r, r), prefix_joins=(30 * r, 900 * r))
+        k_chain = crossover_reducers_chain(stats)
+        k_paper = crossover_reducers(r, r, r, 30 * r)
+        assert k_chain == pytest.approx(k_paper, rel=1e-3)
+
+
+class TestPlanner:
+    # Twitter-like paper-scale statistics: j1/r ≈ 259 ⇒ k* ≈ 67.6k.
+    R = 1.5e6
+    STATS = JoinStats(r=R, s=R, t=R, j1=259 * R, a1=50 * R, j3=6.7e4 * R)
+
+    def test_enumeration_below_crossover_picks_one_round(self):
+        plan = plan_three_way(self.STATS, k=1000, aggregate=False)
+        assert plan.algorithm == "1,3J"
+        assert plan.crossover_k == pytest.approx(260 ** 2, rel=1e-6)
+
+    def test_enumeration_above_crossover_picks_cascade(self):
+        plan = plan_three_way(self.STATS, k=100_000, aggregate=False)
+        assert plan.algorithm == "2,3J"
+
+    def test_aggregation_prefers_pushdown_cascade(self):
+        """The paper's headline: 2,3JA is the preferred solution — its
+        cost is flat in k while 1,3JA pays 2r√k + 2r'''."""
+        for k in (100, 1000, 10_000, 100_000):
+            plan = plan_three_way(self.STATS, k=k, aggregate=True)
+            assert plan.algorithm == "2,3JA"
+            assert plan.costs["2,3JA"] == cost_cascade_agg(
+                self.R, self.R, self.R, 259 * self.R, 50 * self.R)
+
+    def test_aggregated_planning_requires_full_stats(self):
+        """Missing j3 must raise, not leak NaN costs into the argmin."""
+        incomplete = JoinStats(r=10., s=10., t=10., j1=100., a1=5.)
+        with pytest.raises(ValueError, match="j3"):
+            plan_three_way(incomplete, k=64, aggregate=True)
+
+    def test_chain_plan_n3_matches_three_way_names(self):
+        stats = ChainStats(sizes=(self.R,) * 3,
+                           prefix_joins=(259 * self.R, 6.7e4 * self.R),
+                           prefix_aggs=(50 * self.R,))
+        plan = plan_chain(stats, k=1000, aggregate=True)
+        assert plan.algorithm == "2,3JA"
+        assert plan.strategy == "cascade_pushdown"
+        legacy = plan_three_way(self.STATS, k=1000, aggregate=True)
+        for name, cost in legacy.costs.items():
+            assert plan.costs[name] == pytest.approx(cost, rel=1e-9)
+
+    def test_four_way_planning(self):
+        rng = np.random.default_rng(11)
+        edges = [(rng.integers(0, 50, 400).astype(np.int32),
+                  rng.integers(0, 50, 400).astype(np.int32))
+                 for _ in range(4)]
+        stats = chain_stats_exact(edges)
+        plan_enum = plan_chain(stats, k=64, aggregate=False)
+        plan_agg = plan_chain(stats, k=64, aggregate=True)
+        assert plan_enum.algorithm in ("1,4J", "3,4J")
+        assert plan_agg.algorithm in ("1,4JA", "3,4JA")
+        # Dense random graphs grow multiplicities fast: pushdown wins.
+        assert plan_agg.strategy == "cascade_pushdown"
+        assert math.prod(plan_enum.grid_shape) <= 64
+        # Costs are consistent with the formulas they claim to price.
+        assert plan_enum.costs["3,4J"] == cost_chain_cascade(
+            stats.sizes, stats.prefix_joins)
+        assert plan_enum.costs["1,4J"] == pytest.approx(
+            cost_chain_one_round(stats.sizes, 64), rel=1e-9)
+
+
+class TestChainStatsExact:
+    def test_matches_dense_matmul(self):
+        rng = np.random.default_rng(3)
+        n = 20
+        edges = [(rng.integers(0, n, 100).astype(np.int32),
+                  rng.integers(0, n, 100).astype(np.int32))
+                 for _ in range(4)]
+        mats = []
+        for s, d in edges:
+            A = np.zeros((n, n))
+            np.add.at(A, (s, d), 1.0)
+            mats.append(A)
+        stats = chain_stats_exact(edges)
+        M = mats[0]
+        for i, A in enumerate(mats[1:]):
+            if i >= 1:
+                h = float(((M != 0).astype(float) @ A.sum(axis=1)).sum())
+                if i - 1 < len(stats.pushdown_joins):
+                    assert stats.pushdown_joins[i - 1] == h
+            M = M @ A
+            assert stats.prefix_joins[i] == float(M.sum())
+            if i < len(stats.prefix_aggs):
+                assert stats.prefix_aggs[i] == float(np.count_nonzero(M))

@@ -76,7 +76,13 @@ class TestHashHistogram:
         assert pos == int(h.sum())
 
 
+@pytest.mark.slow
 class TestFlashAttention:
+    # Seed-state note: these 21 cases (plus the MoE dispatch test) were
+    # the 40 always-red failures — jax API drift (TPUCompilerParams /
+    # shard_map), fixed by repro.compat.  Kept behind the ``slow``
+    # marker: they dominate suite wall time and guard kernels, not the
+    # join engine.
     @pytest.mark.parametrize("b,hq,hkv,sq,skv,d", [
         (1, 4, 4, 128, 128, 64),     # MHA square
         (2, 8, 2, 64, 64, 64),       # GQA

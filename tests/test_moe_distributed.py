@@ -4,6 +4,10 @@ main pytest process must keep its single CPU device)."""
 import subprocess
 import sys
 
+import pytest
+
+pytestmark = pytest.mark.slow
+
 
 def test_dispatch_strategies_match_reference():
     out = subprocess.run(

@@ -1,0 +1,286 @@
+"""N-way chain executor tests: the plan-IR → executor path.
+
+* A 4-way chain join via the one-round hypercube, via the cascade, and
+  via a brute-force ``local_join`` reference all produce identical
+  relations (including the aggregated variant).
+* Measured shuffle counts match the extended analytic cost model
+  EXACTLY (one-round Shares replication and cascade round charges).
+* The N=3 query-API path is bit-identical to the
+  ``one_round_three_way`` / ``cascade_three_way`` entry points.
+* The planner drives a 4-way query end-to-end.
+"""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import (
+    ChainCaps, ChainQuery, Relation, SimGrid, cascade_chain,
+    cascade_three_way, cascade_three_way_agg, chain_edge_inputs,
+    chain_replications, chain_stats_exact, cost_chain_cascade,
+    cost_chain_cascade_pushdown, edge_relation, execute_chain,
+    one_round_chain, one_round_three_way, plan_chain, scatter_to_grid,
+)
+from repro.core.local import local_join
+
+
+def rand_edges(rng, n_nodes, n_edges):
+    src = rng.integers(0, n_nodes, n_edges).astype(np.int32)
+    dst = rng.integers(0, n_nodes, n_edges).astype(np.int32)
+    return src, dst
+
+
+def collect_tuples(out: Relation, grid_rank: int, names) -> set:
+    flat = jax.tree.map(lambda x: x.reshape((-1,) + x.shape[grid_rank:]), out)
+    got = set()
+    for dev in range(flat.valid.shape[0]):
+        sub = Relation({k: v[dev] for k, v in flat.cols.items()},
+                       flat.valid[dev])
+        got |= sub.to_tuple_set(names)
+    return got
+
+
+def collect_agg(out: Relation, grid_rank: int, keys, value="p") -> dict:
+    flat = jax.tree.map(lambda x: x.reshape((-1,) + x.shape[grid_rank:]), out)
+    got = {}
+    for dev in range(flat.valid.shape[0]):
+        sub = Relation({k: v[dev] for k, v in flat.cols.items()},
+                       flat.valid[dev])
+        d = sub.to_numpy()
+        for row in zip(*([d[k] for k in keys] + [d[value]])):
+            *ks, p = row
+            key = tuple(int(x) for x in ks)
+            got[key] = got.get(key, 0.0) + float(p)
+    return got
+
+
+def local_reference(query: ChainQuery, edge_lists, out_capacity=65536):
+    """Brute-force reference: one device, a chain of local_joins."""
+    acc = None
+    for j, (src, dst) in enumerate(edge_lists):
+        names = query.schema(j)
+        rel = edge_relation(src, dst, names=(names[0], names[1], names[2]))
+        if acc is None:
+            acc = rel
+            continue
+        key = query.attrs[j]
+        acc, ovf = local_join(acc, rel, key, key, out_capacity)
+        assert not bool(ovf), "reference overflow — raise out_capacity"
+    return acc
+
+
+def agg_oracle(query: ChainQuery, reference: Relation) -> dict:
+    d = reference.to_numpy()
+    keys = (query.attrs[0], query.attrs[-1])
+    got = {}
+    prod = np.ones_like(d[query.values[0]], dtype=np.float64)
+    for v in query.values:
+        prod = prod * d[v].astype(np.float64)
+    for a, z, p in zip(d[keys[0]], d[keys[1]], prod):
+        got[(int(a), int(z))] = got.get((int(a), int(z)), 0.0) + float(p)
+    return got
+
+
+N4_GRID = (2, 2, 2)
+CAPS4 = ChainCaps(recv=96, mid=2048, out=8192, local=128, agg=1024, join=8192)
+
+
+class TestFourWayEquivalence:
+    def setup_method(self, method):
+        rng = np.random.default_rng(42)
+        self.edges = [rand_edges(rng, 9, 28) for _ in range(4)]
+
+    def test_enumeration_all_strategies_agree(self):
+        query = ChainQuery.chain(4)
+        ref = local_reference(query, self.edges)
+        expect = ref.to_tuple_set(query.attrs)
+        assert expect, "degenerate test: empty reference join"
+
+        grid3 = SimGrid(N4_GRID)
+        rels3 = chain_edge_inputs(query, self.edges, N4_GRID)
+        out1, st1, ovf1 = one_round_chain(grid3, query, rels3, caps=CAPS4)
+        assert not bool(ovf1)
+        assert collect_tuples(out1, 3, query.attrs) == expect
+
+        grid2 = SimGrid((2, 2))
+        rels2 = chain_edge_inputs(query, self.edges, (2, 2))
+        out2, st2, ovf2 = cascade_chain(grid2, query, rels2, caps=CAPS4)
+        assert not bool(ovf2)
+        assert collect_tuples(out2, 2, query.attrs) == expect
+
+    def test_aggregated_all_strategies_agree(self):
+        query = ChainQuery.chain(4, aggregate=True)
+        ref = local_reference(query, self.edges)
+        expect = agg_oracle(query, ref)
+
+        grid3 = SimGrid(N4_GRID)
+        rels3 = chain_edge_inputs(query, self.edges, N4_GRID)
+        out1, _, ovf1 = one_round_chain(grid3, query, rels3, caps=CAPS4)
+        assert not bool(ovf1)
+        got1 = collect_agg(out1, 3, ("a", "e"))
+
+        grid2 = SimGrid((2, 2))
+        rels2 = chain_edge_inputs(query, self.edges, (2, 2))
+        out2, _, ovf2 = cascade_chain(grid2, query, rels2, caps=CAPS4,
+                                      pushdown=True)
+        assert not bool(ovf2)
+        got2 = collect_agg(out2, 2, ("a", "e"))
+
+        assert set(got1) == set(got2) == set(expect)
+        for k in expect:
+            np.testing.assert_allclose(got1[k], expect[k], rtol=1e-5)
+            np.testing.assert_allclose(got2[k], expect[k], rtol=1e-5)
+
+    def test_measured_matches_analytic_exactly(self):
+        """Acceptance: 4-way measured shuffle == extended cost model."""
+        query = ChainQuery.chain(4)
+        sizes = tuple(float(len(s)) for s, _ in self.edges)
+        stats = chain_stats_exact(self.edges)
+
+        # One round on explicit integer shares (2,2,2): shuffled must be
+        # Σ r_j · K/m_j exactly.
+        grid3 = SimGrid(N4_GRID)
+        rels3 = chain_edge_inputs(query, self.edges, N4_GRID)
+        _, st1, ovf = one_round_chain(grid3, query, rels3, caps=CAPS4)
+        assert not bool(ovf)
+        repl = chain_replications(sizes, N4_GRID)
+        analytic_shuffle = sum(r * f for r, f in zip(sizes, repl))
+        assert float(st1["read"]) == sum(sizes)
+        assert float(st1["shuffled"]) == analytic_shuffle
+
+        # Cascade: total == cost_chain_cascade with EXACT prefix sizes.
+        grid2 = SimGrid((2, 2))
+        rels2 = chain_edge_inputs(query, self.edges, (2, 2))
+        _, st2, ovf2 = cascade_chain(grid2, query, rels2, caps=CAPS4)
+        assert not bool(ovf2)
+        assert float(st2["total"]) == cost_chain_cascade(
+            sizes, stats.prefix_joins)
+
+        # Cascade + pushdown (aggregated): total == the pushdown formula.
+        queryA = ChainQuery.chain(4, aggregate=True)
+        relsA = chain_edge_inputs(queryA, self.edges, (2, 2))
+        _, st3, ovf3 = cascade_chain(grid2, queryA, relsA, caps=CAPS4,
+                                     pushdown=True)
+        assert not bool(ovf3)
+        assert float(st3["total"]) == cost_chain_cascade_pushdown(
+            sizes, stats.prefix_joins, stats.prefix_aggs,
+            stats.pushdown_joins)
+
+    def test_planner_drives_four_way_end_to_end(self):
+        """Acceptance: a 4-way chain runs through the planner on SimGrid."""
+        queryA = ChainQuery.chain(4, aggregate=True)
+        stats = chain_stats_exact(self.edges)
+        plan = plan_chain(stats, k=8, aggregate=True)
+        assert plan.algorithm in ("3,4JA", "1,4JA")
+        assert plan.strategy in ("cascade_pushdown", "one_round")
+
+        grid_shape = plan.grid_shape if plan.strategy == "one_round" else (2, 2)
+        grid = SimGrid(grid_shape)
+        rels = chain_edge_inputs(queryA, self.edges, grid_shape)
+        out, st, ovf = execute_chain(grid, queryA, rels,
+                                     strategy=plan.strategy, caps=CAPS4,
+                                     measure_skew=True)
+        assert not bool(ovf)
+        ref = local_reference(queryA, self.edges)
+        expect = agg_oracle(queryA, ref)
+        got = collect_agg(out, len(grid_shape), ("a", "e"))
+        assert set(got) == set(expect)
+        for k in expect:
+            np.testing.assert_allclose(got[k], expect[k], rtol=1e-5)
+        # Skew diagnostics flowed through the map-phase histogram path.
+        assert float(st["max_bucket_load"]) > 0
+        assert float(st["max_bucket_load"]) <= float(st["read"])
+
+
+class TestThreeWayBitIdentical:
+    """The query-API N=3 path must equal the paper entry points exactly."""
+
+    def setup_method(self, method):
+        rng = np.random.default_rng(4)
+        self.src, self.dst = rand_edges(rng, 12, 40)
+        shape = (2, 2)
+        self.grid = SimGrid(shape)
+        self.R = scatter_to_grid(edge_relation(self.src, self.dst,
+                                               names=("a", "b", "v")), shape)
+        self.S = scatter_to_grid(edge_relation(self.src, self.dst,
+                                               names=("b", "c", "w")), shape)
+        self.T = scatter_to_grid(edge_relation(self.src, self.dst,
+                                               names=("c", "d", "x")), shape)
+
+    @staticmethod
+    def assert_bit_identical(a: Relation, b: Relation):
+        assert a.names == b.names
+        assert bool(jnp.all(a.valid == b.valid))
+        for n in a.names:
+            assert a.cols[n].dtype == b.cols[n].dtype
+            assert bool(jnp.all(a.cols[n] == b.cols[n]))
+
+    def test_one_round(self):
+        caps = ChainCaps(recv=64, mid=512, out=2048, local=64)
+        legacy, st_l, _ = one_round_three_way(
+            self.grid, self.R, self.S, self.T, recv_capacity=64,
+            mid_capacity=512, out_capacity=2048, local_capacity=64)
+        query, st_q, _ = execute_chain(
+            self.grid, ChainQuery.three_way(), (self.R, self.S, self.T),
+            strategy="one_round", caps=caps)
+        self.assert_bit_identical(legacy, query)
+        assert float(st_l["read"]) == float(st_q["read"])
+        assert float(st_l["shuffled"]) == float(st_q["shuffled"])
+
+    def test_cascade(self):
+        caps = ChainCaps(recv=64, mid=1024, out=4096, local=64)
+        legacy, st_l, _ = cascade_three_way(
+            self.grid, self.R, self.S, self.T, recv_capacity=64,
+            mid_capacity=1024, out_capacity=4096, local_capacity=64)
+        query, st_q, _ = execute_chain(
+            self.grid, ChainQuery.three_way(), (self.R, self.S, self.T),
+            strategy="cascade", caps=caps)
+        self.assert_bit_identical(legacy, query)
+        assert float(st_l["total"]) == float(st_q["total"])
+
+    def test_cascade_pushdown(self):
+        caps = ChainCaps(recv=64, mid=512, out=1024, local=64, agg=256)
+        legacy, st_l, _ = cascade_three_way_agg(
+            self.grid, self.R, self.S, self.T, recv_capacity=64,
+            mid_capacity=512, agg_capacity=256, out_capacity=1024,
+            local_capacity=64)
+        query, st_q, _ = execute_chain(
+            self.grid, ChainQuery.three_way(aggregate=True),
+            (self.R, self.S, self.T), strategy="cascade_pushdown", caps=caps)
+        self.assert_bit_identical(legacy, query)
+        assert float(st_l["total"]) == float(st_q["total"])
+
+
+class TestQueryValidation:
+    def test_rejects_wrong_grid_rank(self):
+        query = ChainQuery.chain(4)
+        rng = np.random.default_rng(0)
+        edges = [rand_edges(rng, 5, 10) for _ in range(4)]
+        rels = chain_edge_inputs(query, edges, (2, 2))
+        with pytest.raises(ValueError, match="rank-3"):
+            one_round_chain(SimGrid((2, 2)), query, rels,
+                            caps=ChainCaps(recv=32, mid=64, out=64))
+
+    def test_rejects_bad_schema(self):
+        from repro.core import ChainAggregate
+        with pytest.raises(ValueError, match="distinct"):
+            ChainQuery(attrs=("a", "b", "a"), values=("v", "w"))
+        with pytest.raises(ValueError, match="endpoints"):
+            ChainQuery(attrs=("a", "b", "c"), values=("v", "w"),
+                       aggregate=ChainAggregate(keys=("a", "b")))
+        with pytest.raises(ValueError, match="collides"):
+            # A join attribute named like the aggregation output would
+            # be silently overwritten by the pushdown product.
+            ChainQuery(attrs=("a", "p", "c"), values=("v", "w"),
+                       aggregate=ChainAggregate(keys=("a", "c")))
+
+    def test_rejects_missing_columns(self):
+        query = ChainQuery.chain(3)
+        rng = np.random.default_rng(1)
+        edges = [rand_edges(rng, 5, 10) for _ in range(3)]
+        rels = chain_edge_inputs(query, edges, (2,))
+        with pytest.raises(ValueError, match="missing"):
+            cascade_chain(SimGrid((2,)), query, rels[::-1],
+                          caps=ChainCaps(recv=32, mid=64, out=64))
