@@ -1,0 +1,81 @@
+#!/usr/bin/env python
+"""Docs gate: internal links in README.md / docs/*.md must resolve, and
+the README quickstart must actually run.
+
+* Every relative markdown link target (``[text](path)``) is checked to
+  exist on disk, relative to the file containing it.  External links
+  (http/https/mailto) and pure anchors are skipped; ``#fragment``
+  suffixes on file links are stripped.
+* Every fenced ```python block in README.md is executed, in order, in
+  one shared namespace — the quickstart smoke test.  ``src/`` is put on
+  sys.path so the snippets run against the checkout without install.
+
+Exit code 0 iff everything passes.
+
+  python scripts/check_docs.py
+"""
+
+import re
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+LINK_RE = re.compile(r"\[[^\]^\[]*\]\(([^)\s]+)\)")
+FENCE_RE = re.compile(r"^```python\s*$(.*?)^```\s*$", re.M | re.S)
+SKIP_PREFIXES = ("http://", "https://", "mailto:", "#")
+
+
+def doc_files():
+    files = [REPO / "README.md"]
+    files += sorted((REPO / "docs").glob("*.md"))
+    return [f for f in files if f.exists()]
+
+
+def check_links() -> int:
+    failures = 0
+    for md in doc_files():
+        for m in LINK_RE.finditer(md.read_text()):
+            target = m.group(1)
+            if target.startswith(SKIP_PREFIXES):
+                continue
+            path = target.split("#", 1)[0]
+            if not path:
+                continue
+            resolved = (md.parent / path).resolve()
+            if not resolved.exists():
+                print(f"BROKEN LINK {md.relative_to(REPO)}: "
+                      f"({target}) -> {resolved}")
+                failures += 1
+    return failures
+
+
+def run_readme_snippets() -> int:
+    readme = REPO / "README.md"
+    blocks = FENCE_RE.findall(readme.read_text())
+    py_blocks = [b for b in blocks if not b.strip().startswith("$")]
+    if not py_blocks:
+        print("no python blocks in README.md — nothing to smoke-test")
+        return 0
+    sys.path.insert(0, str(REPO / "src"))
+    namespace = {"__name__": "__readme__"}
+    for i, block in enumerate(py_blocks, 1):
+        print(f"running README python block {i}/{len(py_blocks)} ...")
+        try:
+            exec(compile(block, f"README.md#block{i}", "exec"), namespace)
+        except Exception as e:  # noqa: BLE001 — report, don't crash the gate
+            print(f"README block {i} FAILED: {type(e).__name__}: {e}")
+            return 1
+    return 0
+
+
+def main() -> int:
+    bad_links = check_links()
+    if bad_links:
+        print(f"{bad_links} broken link(s)")
+        return 1
+    print("links OK")
+    return run_readme_snippets()
+
+
+if __name__ == "__main__":
+    sys.exit(main())

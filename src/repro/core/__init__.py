@@ -1,17 +1,36 @@
 """The paper's primary contribution: distributed chain joins.
 
-Public API:
-  Relation, SimGrid, ShardGrid — data model + reducer-grid backends
-  ChainQuery / ChainAggregate  — logical plan IR for N-way chain joins
-  execute_chain / one_round_chain / cascade_chain — the executor
-  two_way_join                 — one MapReduce join round
-  one_round_three_way          — Afrati–Ullman 1,3J on a k1×k2 grid (N=3)
-  cascade_three_way[_agg]      — 2,3J / 2,3JA cascade (aggregation pushdown)
-  one_round_three_way_agg      — 1,3JA
-  distributed_groupby_sum      — the aggregator round
-  cost model + planner         — paper formulas generalized to N-way
-                                 chains, crossover k*, plan choice
-  spmm / a_cubed / triangles   — join-based matrix multiply & graph analytics
+Public API, by layer:
+
+  Data model / backends
+    Relation                   — fixed-capacity columnar relation + mask
+    SimGrid, ShardGrid         — simulated / shard_map reducer grids
+
+  Logical plan IR (``help(ChainQuery)`` for the query semantics)
+    ChainQuery, ChainAggregate — N-way chain joins as data
+
+  Physical executor
+    execute_chain              — run a query with a planner strategy
+    one_round_chain            — Shares hypercube (1,NJ / 1,NJA)
+    cascade_chain              — left-deep cascade (+ pushdown)
+    shares_skew_chain          — SharesSkew heavy/residual union (1,NJS)
+    two_way_join, distributed_groupby_sum — per-round building blocks
+    one_round_three_way, cascade_three_way[_agg], one_round_three_way_agg
+                               — the paper's three-way entry points
+
+  Statistics, cost model, planner (``help(plan_chain)``)
+    ChainStats (+ key_freqs sketch), JoinStats, chain_stats_exact
+    cost_* formulas, optimal_shares_chain / integer_shares,
+    crossover_reducers[_chain], skew_crossover_scale
+    plan_chain / plan_three_way — cost-based choice among
+    {Shares, SharesSkew, cascade, cascade+pushdown}
+
+  Skew layer (docs/skew.md)
+    heavy_hitters, chain_key_sketch, detect_chain_skew,
+    SkewSplitPlan, SkewCombo, balance_threshold
+
+  Workloads
+    spmm / a_cubed / triangles — join-based matmul & graph analytics
 """
 
 from .relation import Relation, concat, flatten_leading
@@ -20,21 +39,25 @@ from .plan import ChainAggregate, ChainQuery
 from .two_way import two_way_join
 from .executor import (ChainCaps, cascade_chain, chain_edge_inputs,
                        default_chain_caps, execute_chain, one_round_chain,
-                       scatter_to_grid)
+                       scatter_to_grid, shares_skew_chain)
 from .one_round import one_round_three_way
 from .cascade import cascade_three_way, cascade_three_way_agg, one_round_three_way_agg
 from .aggregation import distributed_groupby_sum, project_product
-from .cost_model import (ChainStats, JoinStats, chain_replications,
-                         cost_cascade, cost_cascade_agg,
+from .cost_model import (ChainStats, JoinStats, balance_threshold,
+                         chain_replications, cost_cascade, cost_cascade_agg,
                          cost_chain_cascade, cost_chain_cascade_pushdown,
                          cost_chain_one_round, cost_chain_one_round_agg,
-                         cost_one_round, cost_one_round_agg, cost_two_way,
-                         crossover_reducers, estimate_join_size,
-                         integer_shares, optimal_k1_k2, optimal_shares_chain)
+                         cost_chain_shares_skew, cost_one_round,
+                         cost_one_round_agg, cost_two_way,
+                         crossover_reducers, estimate_join_size, hop_excess,
+                         hop_peak_load, integer_shares, optimal_k1_k2,
+                         optimal_shares_chain, skew_clamped_shape)
 from .planner import (ChainPlan, Plan, chain_stats_exact,
                       chain_stats_from_three_way, crossover_reducers_chain,
                       plan_chain, plan_three_way, self_join_stats,
-                      self_join_stats_exact)
+                      self_join_stats_exact, skew_crossover_scale)
+from .skew import (SkewCombo, SkewSplitPlan, chain_key_sketch,
+                   detect_chain_skew, heavy_hitters)
 from .matmul import (a_cubed, edge_relation, oracle_a3, oracle_triangles,
                      spmm, triangle_count_from_a3)
 
@@ -42,7 +65,7 @@ __all__ = [
     "Relation", "concat", "flatten_leading",
     "Grid", "SimGrid", "ShardGrid", "broadcast_along", "shuffle_by_bucket",
     "ChainQuery", "ChainAggregate", "ChainCaps",
-    "execute_chain", "one_round_chain", "cascade_chain",
+    "execute_chain", "one_round_chain", "cascade_chain", "shares_skew_chain",
     "scatter_to_grid", "chain_edge_inputs", "default_chain_caps",
     "two_way_join", "one_round_three_way",
     "cascade_three_way", "cascade_three_way_agg", "one_round_three_way_agg",
@@ -51,11 +74,15 @@ __all__ = [
     "cost_cascade", "cost_cascade_agg", "cost_one_round_agg",
     "cost_chain_one_round", "cost_chain_one_round_agg",
     "cost_chain_cascade", "cost_chain_cascade_pushdown",
+    "cost_chain_shares_skew", "skew_clamped_shape",
+    "balance_threshold", "hop_peak_load", "hop_excess",
     "chain_replications", "optimal_shares_chain", "integer_shares",
     "crossover_reducers", "estimate_join_size", "optimal_k1_k2",
     "Plan", "ChainPlan", "plan_three_way", "plan_chain",
     "chain_stats_from_three_way", "chain_stats_exact", "crossover_reducers_chain",
-    "self_join_stats", "self_join_stats_exact",
+    "self_join_stats", "self_join_stats_exact", "skew_crossover_scale",
+    "SkewSplitPlan", "SkewCombo", "heavy_hitters", "chain_key_sketch",
+    "detect_chain_skew",
     "spmm", "a_cubed", "edge_relation", "triangle_count_from_a3",
     "oracle_a3", "oracle_triangles",
 ]

@@ -52,6 +52,8 @@ def distributed_groupby_sum(grid: Grid, rel: Relation, keys: Sequence[str],
         return hashing.bucket_hash(mixed, n_buckets, salt=salt)
 
     for axis in range(len(grid.shape)):
+        if grid.shape[axis] == 1:
+            continue  # clamped axis: a single owner, the hop is a no-op
         bucket = grid.map_devices(
             lambda r, _a=axis: key_bucket(r, grid.shape[_a], salt=_a), cur)
         cur, ovf, _ = shuffle_by_bucket(grid, cur, bucket, axis, recv_capacity,

@@ -282,6 +282,79 @@ def cost_chain_one_round_agg(sizes: Sequence[float], k: int,
     return cost_chain_one_round(sizes, k, shares) + 2.0 * full_join
 
 
+# ---------------------------------------------------------------------------
+# Skew: balance threshold, hop peak loads, and the SharesSkew cost
+# ---------------------------------------------------------------------------
+#
+# The Shares communication charge Σ r_j·K/m_j is skew-blind: hashing
+# sends every tuple with join-attribute value v to the same slice of
+# the hypercube, so a heavy v turns one reducer slice into a straggler
+# without changing the tuple count.  Following SharesSkew (Afrati,
+# Stasinopoulos, Ullman, Vassilakopoulos), each relation is split into
+# a heavy part (tuples whose join-attribute value exceeds the balance
+# threshold) and a residual part, and one Shares sub-join runs per
+# heavy/residual combination: the combination's grid is the plain
+# integer-share hypercube with every heavy dim clamped to share 1 —
+# a (near-)constant attribute gains nothing from hashing, so the heavy
+# tuples are broadcast on their clamped dimension instead.
+
+def balance_threshold(size: float, share: float, slack: float = 1.25) -> float:
+    """Frequency above which one key overloads its reducer slice: a key
+    hashed into ``share`` buckets is heavy when its frequency exceeds
+    ``slack`` times the mean bucket load ``size/share``.  At share 1 the
+    dim is not split, so no key can be heavy (threshold ≥ size)."""
+    if share <= 1.0:
+        return float("inf")
+    return slack * size / share
+
+
+def hop_peak_load(size: float, k: float, f_top: float) -> float:
+    """First-order peak bucket load of one map-phase hash hop: the top
+    key's f tuples collide in one bucket, the rest spread evenly —
+    ``f_top + (size − f_top)/k``.  This is the analytic counterpart of
+    the measured ``stats["max_bucket_load"]``."""
+    if k <= 1.0:
+        return size
+    return f_top + (size - f_top) / k
+
+
+def hop_excess(size: float, k: float, f_top: float) -> float:
+    """Excess of the hop's peak bucket over the balanced mean ``size/k``:
+    ``f_top·(1 − 1/k)``.  Zero when the dim is unsplit."""
+    if k <= 1.0 or f_top <= 0.0:
+        return 0.0
+    return max(0.0, hop_peak_load(size, k, f_top) - size / k)
+
+
+def skew_clamped_shape(base_shape: Sequence[int],
+                       heavy_dims: Sequence[bool]) -> Tuple[int, ...]:
+    """Grid of one SharesSkew combination: the plain integer-share grid
+    with heavy dims clamped to share 1 (heavy tuples broadcast there)."""
+    return tuple(1 if h else s for s, h in zip(base_shape, heavy_dims))
+
+
+def cost_shares_skew_combo(sizes: Sequence[float],
+                           shape: Sequence[int]) -> float:
+    """Read + shuffle of one combination's Shares sub-join on its
+    clamped grid: Σ r_j^c + Σ r_j^c · K_c/m_j^c."""
+    repl = chain_replications(sizes, shape)
+    return sum(sizes) + sum(r * f for r, f in zip(sizes, repl))
+
+
+def cost_chain_shares_skew(combos: Sequence[Tuple[Sequence[float],
+                                                  Sequence[int]]]) -> float:
+    """1,NJS cost: Σ over heavy/residual combinations of the sub-join
+    cost on the combination's clamped grid.  ``combos`` is a sequence of
+    (per-relation sizes, grid shape) pairs — exact when the sizes come
+    from :func:`repro.core.skew.detect_chain_skew`, estimated when they
+    come from the planner's top-k sketch.  Each combination is a
+    separate round, so reads are charged per combination (a relation
+    that pins only clamped dims is read by every combination that keeps
+    its tuples)."""
+    return sum(cost_shares_skew_combo(sizes, shape)
+               for sizes, shape in combos)
+
+
 @dataclasses.dataclass(frozen=True)
 class ChainStats:
     """Cardinality statistics for an N-way chain.
@@ -294,11 +367,28 @@ class ChainStats:
     pushdown_joins: (|Γ(J_2) ⋈ R_3|, .., |Γ(J_{N−1}) ⋈ R_N|) — round
                     outputs of the pushdown cascade beyond round 1;
                     needed for aggregated plans with N > 3.
+    key_freqs:      optional top-k key-frequency sketch, one tuple per
+                    join attribute (hypercube dim) d = 0..N−2.  Each
+                    entry is ``(key, f_left, f_right)``: the key's
+                    frequency in the left-adjacent relation R_{d+1}
+                    (where the attribute is its *right* column) and in
+                    the right-adjacent relation R_{d+2} (its *left*
+                    column), sorted by combined frequency, descending.
+                    Produced by :func:`repro.core.skew.chain_key_sketch`;
+                    this is what lets the planner price skew.
     """
     sizes: Tuple[float, ...]
     prefix_joins: Tuple[float, ...]
     prefix_aggs: Optional[Tuple[float, ...]] = None
     pushdown_joins: Optional[Tuple[float, ...]] = None
+    key_freqs: Optional[Tuple[Tuple[Tuple[int, float, float], ...], ...]] = None
+
+    def __post_init__(self):
+        if self.key_freqs is not None and \
+                len(self.key_freqs) != len(self.sizes) - 1:
+            raise ValueError(
+                f"key_freqs needs one entry per join attribute "
+                f"({len(self.sizes) - 1}), got {len(self.key_freqs)}")
 
     @property
     def n_relations(self) -> int:
@@ -325,6 +415,111 @@ class ChainStats:
             out[f"1,{n}JA"] = cost_chain_one_round_agg(
                 self.sizes, k, self.prefix_joins[-1], shares)
         return out
+
+
+# ---------------------------------------------------------------------------
+# Sketch-based skew estimates (planner inputs; exact counterparts live in
+# repro.core.skew, which works from the data instead of the sketch)
+# ---------------------------------------------------------------------------
+
+def sketch_heavy_entries(stats: "ChainStats", base_shape: Sequence[int],
+                         slack: float = 1.25,
+                         ) -> Tuple[Tuple[Tuple[int, float, float], ...], ...]:
+    """Filter the top-k sketch down to the entries above the balance
+    threshold of the plain Shares grid ``base_shape``: key heavy on dim
+    d iff its frequency exceeds ``balance_threshold`` in either adjacent
+    relation.  Empty tuples everywhere ⇒ the workload looks uniform and
+    the skew path should not be considered."""
+    if stats.key_freqs is None:
+        return tuple(() for _ in base_shape)
+    out = []
+    for d, entries in enumerate(stats.key_freqs):
+        thr_l = balance_threshold(stats.sizes[d], base_shape[d], slack)
+        thr_r = balance_threshold(stats.sizes[d + 1], base_shape[d], slack)
+        out.append(tuple(e for e in entries
+                         if e[1] > thr_l or e[2] > thr_r))
+    return tuple(out)
+
+
+def _sketch_top(entries, side: int) -> float:
+    """Top frequency on one side (1=left-adjacent rel, 2=right) of a
+    sketch dim; 0.0 when the sketch has no entries."""
+    return max((e[side] for e in entries), default=0.0)
+
+
+def _heavy_fraction(stats: "ChainStats", heavy, j: int, d: int) -> float:
+    """Fraction of relation j's tuples whose dim-d attribute is heavy."""
+    side = 1 if j == d else 2          # rel d holds the attr on its right
+    mass = sum(e[side] for e in heavy[d])
+    return min(1.0, mass / max(stats.sizes[j], 1.0))
+
+
+def estimate_skew_combos(stats: "ChainStats", base_shape: Sequence[int],
+                         heavy,
+                         ) -> Tuple[Tuple[Tuple[float, ...], Tuple[int, ...]], ...]:
+    """Estimated (sizes, grid shape) of every SharesSkew combination,
+    from the sketch's heavy masses under an independence assumption:
+    r_j^c = r_j · ∏_{d pinned by j} (h_{j,d} if c_d heavy else 1−h_{j,d}).
+    Combinations whose heavy set is empty are skipped."""
+    n = len(stats.sizes)
+    active = [d for d in range(n - 1) if heavy[d]]
+    combos = []
+    for bits in range(1 << len(active)):
+        heavy_dims = [False] * (n - 1)
+        for i, d in enumerate(active):
+            heavy_dims[d] = bool(bits >> i & 1)
+        sizes = []
+        for j in range(n):
+            r = stats.sizes[j]
+            for d in _hashed_dims(j, n):
+                h = _heavy_fraction(stats, heavy, j, d)
+                r *= h if heavy_dims[d] else 1.0 - h
+            sizes.append(r)
+        if min(sizes) <= 0.0:
+            continue
+        combos.append((tuple(sizes),
+                       skew_clamped_shape(base_shape, heavy_dims)))
+    return tuple(combos)
+
+
+def skew_excess_one_round(stats: "ChainStats", base_shape: Sequence[int],
+                          heavy=None) -> float:
+    """Σ over map-phase hops of the peak-over-mean excess of the plain
+    Shares join (relation j hashes dim d with f_top = its top sketch
+    frequency).  With ``heavy`` given, the excess of the SharesSkew
+    *residual* combination instead: heavy keys are split out, so each
+    hop's top frequency is the largest NON-heavy sketch entry — the
+    first-order model of why the skew path balances."""
+    if stats.key_freqs is None:
+        return 0.0
+    n = len(stats.sizes)
+    total = 0.0
+    for d in range(n - 1):
+        entries = stats.key_freqs[d]
+        if heavy is not None:
+            dropped = {e[0] for e in heavy[d]}
+            entries = tuple(e for e in entries if e[0] not in dropped)
+        for j in (d, d + 1):           # the two relations hashing dim d
+            side = 1 if j == d else 2
+            total += hop_excess(stats.sizes[j], base_shape[d],
+                                _sketch_top(entries, side))
+    return total
+
+
+def skew_excess_cascade(stats: "ChainStats", k: int) -> float:
+    """Hop excess of the cascade: round j hashes join attribute d=j−1
+    into all k reducers, on both inputs.  The left input of rounds ≥ 2
+    is an intermediate whose key frequencies are unknown; its base-
+    relation frequency is the first-order proxy."""
+    if stats.key_freqs is None:
+        return 0.0
+    n = len(stats.sizes)
+    total = 0.0
+    for d in range(n - 1):
+        entries = stats.key_freqs[d]
+        total += hop_excess(stats.sizes[d], k, _sketch_top(entries, 1))
+        total += hop_excess(stats.sizes[d + 1], k, _sketch_top(entries, 2))
+    return total
 
 
 # ---------------------------------------------------------------------------

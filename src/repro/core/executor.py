@@ -1,7 +1,7 @@
 """Physical executor: lower a :class:`ChainQuery` onto a reducer Grid.
 
-Two lowering strategies, both written once for any chain length N and
-any grid backend (SimGrid / ShardGrid):
+Three lowering strategies, written once for any chain length N (the
+first two run on any grid backend, SimGrid / ShardGrid):
 
 * :func:`one_round_chain` — the Afrati–Ullman *Shares* join on an
   (N−1)-dimensional hypercube.  Dim d hashes join attribute A_{d+2};
@@ -15,6 +15,12 @@ any grid backend (SimGrid / ShardGrid):
   after every non-final round (Γ over the running endpoint attribute
   pair shrinks each intermediate before it is shuffled again).  For
   N=3 this is exactly 2,3J / 2,3JA.
+
+* :func:`shares_skew_chain` — the skew-aware *SharesSkew* union: one
+  Shares sub-join per heavy/residual combination of the join
+  attributes, each on the plain hypercube with its heavy dims clamped
+  to share 1 (heavy tuples broadcast there).  Driven by a
+  :class:`repro.core.skew.SkewSplitPlan`; SimGrid only.
 
 Cost accounting is paper-faithful and identical to the three-way
 implementations: each round charges read + shuffled tuples; the final
@@ -37,10 +43,10 @@ from ..kernels.hash_partition import bucket_counts
 from . import hashing
 from .aggregation import distributed_groupby_sum, project_product
 from .cost_model import ChainStats, chain_replications
-from .local import local_join
+from .local import groupby_sum, local_join
 from .plan import ChainQuery
-from .relation import Relation
-from .shuffle import Grid, broadcast_along, shuffle_by_bucket
+from .relation import Relation, concat
+from .shuffle import Grid, SimGrid, broadcast_along, shuffle_by_bucket
 from .two_way import two_way_join
 
 Stats = Dict[str, jnp.ndarray]
@@ -120,6 +126,8 @@ def one_round_chain(grid: Grid, query: ChainQuery, rels: Sequence[Relation], *,
         cur = rel
         hashed = query.hashed_dims(j)
         for d in hashed:                     # route to the pinned dims
+            if grid.shape[d] == 1:
+                continue                     # clamped dim: one bucket, no hop
             attr = query.dim_attr(d)
             if measure_skew:
                 skew = jnp.maximum(
@@ -131,7 +139,7 @@ def one_round_chain(grid: Grid, query: ChainQuery, rels: Sequence[Relation], *,
                                             local_capacity=caps.local)
             overflow = overflow | ovf
         for d in range(n - 1):               # replicate over the rest
-            if d in hashed:
+            if d in hashed or grid.shape[d] == 1:
                 continue
             cur, ovf = broadcast_along(grid, cur, d, caps.local)
             overflow = overflow | ovf
@@ -273,6 +281,113 @@ def cascade_chain(grid: Grid, query: ChainQuery, rels: Sequence[Relation], *,
 
 
 # ---------------------------------------------------------------------------
+# SkewSplit lowering: the SharesSkew union of per-combination sub-joins
+# ---------------------------------------------------------------------------
+
+def _heavy_member(col: jnp.ndarray, heavy) -> jnp.ndarray:
+    """Membership of a key column in a (small, host-side) heavy set."""
+    import numpy as np
+    heavy = np.asarray(heavy)
+    if heavy.size == 0:
+        return jnp.zeros(col.shape, jnp.bool_)
+    hv = jnp.asarray(heavy.astype(np.int32))
+    return jnp.any(col[:, None] == hv[None, :], axis=1)
+
+
+def _combo_filter(query: ChainQuery, plan, combo, j: int,
+                  rel: Relation) -> Relation:
+    """Relation j's part for one combination: keep a tuple iff, for each
+    of the relation's own join attributes, its heavy/residual status
+    matches the combination's choice for that dim."""
+    mask = jnp.ones(rel.valid.shape, jnp.bool_)
+    for d in query.hashed_dims(j):
+        member = _heavy_member(rel.col(query.dim_attr(d)), plan.heavy[d])
+        mask = mask & (member if combo.heavy_dims[d] else ~member)
+    return rel.filter(mask)
+
+
+def _flatten_grid(rel: Relation, grid_rank: int) -> Relation:
+    """Collapse the leading grid axes into one flat buffer."""
+    cols = {n: c.reshape((-1,) + c.shape[grid_rank + 1:])
+            for n, c in rel.cols.items()}
+    return Relation(cols, rel.valid.reshape(-1))
+
+
+def shares_skew_chain(query: ChainQuery, rels: Sequence[Relation], plan, *,
+                      caps, measure_skew: bool = False,
+                      ) -> Tuple[Relation, Stats, jnp.ndarray]:
+    """SkewSplit lowering (SharesSkew): one Shares sub-join per
+    heavy/residual combination, unioned.
+
+    ``rels`` are *flat* (host-layout, unscattered) relations in query
+    order; ``plan`` is a :class:`repro.core.skew.SkewSplitPlan`.  Each
+    combination filters every relation to its part, scatters the parts
+    onto the combination's grid (the plain integer-share hypercube with
+    heavy dims clamped to share 1 — heavy tuples broadcast there, the
+    ``broadcast_along`` of the clamped dim being a no-op of size 1 means
+    they are simply replicated over the surviving dims), and runs
+    :func:`one_round_chain`.  ``caps`` is a :class:`ChainCaps` used for
+    every combination, or a callable ``combo -> ChainCaps``.
+
+    Join results union disjointly across combinations (every output
+    tuple has a definite heavy/residual status per join attribute); for
+    aggregated queries the per-combination partial sums are merged by a
+    final local group-by, uncharged like the paper's final aggregator.
+    Stats sum across combinations (``max_bucket_load`` maxes), so the
+    measured total equals ``plan.cost()`` exactly for enumeration
+    queries, and ``plan.cost() + 2·|full join|`` for aggregated ones
+    (each combination charges its own aggregation round, and the
+    combinations partition the join output).  Each combination is its
+    own round, so a relation pinning only clamped dims is re-read by
+    every combination that keeps its tuples — the same convention the
+    analytic cost charges.
+
+    A plan with *no* combinations means every combination had an empty
+    input part, which proves the join itself is empty: the result is an
+    empty relation at zero cost.
+    """
+    query.check_relations(rels)
+    if not plan.combos:
+        zero = jnp.zeros((), jnp.float32)
+        stats: Stats = {"read": zero, "shuffled": zero, "total": zero}
+        if measure_skew:
+            stats["max_bucket_load"] = zero
+        if query.aggregate is not None:
+            schema = {query.aggregate.keys[0]: jnp.int32,
+                      query.aggregate.keys[1]: jnp.int32,
+                      query.aggregate.out: jnp.float32}
+        else:
+            schema = {a: jnp.int32 for a in query.attrs}
+            for j, v in enumerate(query.values):
+                if v is not None:
+                    schema[v] = rels[j].col(v).dtype
+        return (Relation.empty(1, schema), stats,
+                jnp.zeros((), jnp.bool_))
+    n = query.n_relations
+    all_stats: List[Stats] = []
+    parts: List[Relation] = []
+    overflow = jnp.zeros((), jnp.bool_)
+    for combo in plan.combos:
+        sub = [scatter_to_grid(_combo_filter(query, plan, combo, j, rel),
+                               combo.grid_shape)
+               for j, rel in enumerate(rels)]
+        grid = SimGrid(combo.grid_shape)
+        combo_caps = caps(combo) if callable(caps) else caps
+        out, st, ovf = one_round_chain(grid, query, sub, caps=combo_caps,
+                                       measure_skew=measure_skew)
+        parts.append(_flatten_grid(out, n - 1))
+        all_stats.append(st)
+        overflow = overflow | ovf
+
+    result = concat(parts)
+    if query.aggregate is not None:
+        agg = query.aggregate
+        result, ovf_m = groupby_sum(result, tuple(agg.keys), agg.out)
+        overflow = overflow | ovf_m
+    return result, merge_stats(*all_stats), overflow
+
+
+# ---------------------------------------------------------------------------
 # Entry point: run a logical plan
 # ---------------------------------------------------------------------------
 
@@ -286,7 +401,17 @@ def execute_chain(grid: Grid, query: ChainQuery, rels: Sequence[Relation], *,
     * ``"one_round"``          — Shares hypercube (1,NJ / 1,NJA)
     * ``"cascade"``            — plain left-deep cascade (N−1,NJ)
     * ``"cascade_pushdown"``   — cascade with aggregation pushdown (N−1,NJA)
+
+    The skew-aware strategy ``"shares_skew"`` (1,NJS) cannot run on a
+    single pre-scattered grid — its sub-joins each use their own clamped
+    grid — so it has its own entry point, :func:`shares_skew_chain`,
+    taking flat relations plus a ``SkewSplitPlan``.
     """
+    if strategy == "shares_skew":
+        raise ValueError(
+            "shares_skew runs per-combination grids; call "
+            "shares_skew_chain(query, flat_rels, plan, caps=...) with the "
+            "SkewSplitPlan from repro.core.skew.detect_chain_skew")
     if strategy == "one_round":
         return one_round_chain(grid, query, rels, caps=caps,
                                measure_skew=measure_skew)

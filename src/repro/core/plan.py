@@ -30,10 +30,20 @@ from .relation import Relation
 class ChainAggregate:
     """Γ_{keys; SUM prod(value columns)} over the chain-join result.
 
-    ``keys`` must be the chain's endpoint attributes (A_1, A_{N+1}) —
-    the configuration under which SUM-of-products commutes with the
-    remaining joins, which is what makes pushdown sound (paper §V).
-    ``out`` names the produced value column.
+    The aggregation semantics: group the joined tuples by ``keys`` and,
+    within each group, SUM the product of every relation's value column
+    — for the paper's three-way query this is matrix-chain
+    multiplication expressed as a join (``out[a, d] = Σ_{b,c}
+    v(a,b)·w(b,c)·x(c,d)``).
+
+    Attributes:
+      keys: the grouping attributes.  They must be the chain's endpoint
+            attributes ``(A_1, A_{N+1})`` — the configuration under
+            which SUM-of-products commutes with the remaining joins,
+            which is what makes aggregation pushdown sound (paper §V).
+            Validation enforces this in :class:`ChainQuery`.
+      out:  name of the produced value column (default ``"p"``).  The
+            result relation has columns ``(*keys, out)``.
     """
 
     keys: Tuple[str, str]
@@ -44,14 +54,36 @@ class ChainAggregate:
 class ChainQuery:
     """An N-way chain join over relations R_j(attrs[j], attrs[j+1], values[j]).
 
-    attrs:     N+1 attribute names A_1..A_{N+1}; R_j joins R_{j+1} on
-               attrs[j+1].  All names must be distinct (a chain, not a
-               cycle — self-joins are expressed by feeding the same
-               edge data as distinct relations, as the paper does).
-    values:    per-relation value column name, or None for key-only
-               relations.  Aggregated queries need a value on every
-               relation, with distinct names.
-    aggregate: optional endpoint aggregation.
+    The query *is* the workload: hand it with N physical
+    :class:`~repro.core.relation.Relation` inputs to
+    ``core.executor.execute_chain`` (or let ``core.planner.plan_chain``
+    pick the strategy first).  ``ChainQuery.three_way()`` is the paper's
+    R(a,b) ⋈ S(b,c) ⋈ T(c,d); ``ChainQuery.chain(n)`` is the canonical
+    N-way instance.
+
+    Attributes:
+      attrs:     N+1 distinct attribute names ``A_1..A_{N+1}``.
+                 Relation j (0-based) has key columns ``(attrs[j],
+                 attrs[j+1])`` and joins relation j+1 on the shared
+                 ``attrs[j+1]``.  Distinct names make this a chain, not
+                 a cycle — self-joins are expressed by feeding the same
+                 edge data as distinct relations, as the paper does.
+      values:    per-relation value column name, or ``None`` for a
+                 key-only relation.  Value columns ride along through
+                 every join; aggregated queries need a value on every
+                 relation (the aggregate multiplies them), and all
+                 names — attrs and values together — must be distinct.
+      aggregate: optional :class:`ChainAggregate`; ``None`` means plain
+                 enumeration (the join result itself).  When present,
+                 its keys must be the endpoints ``(attrs[0], attrs[-1])``
+                 and its output column must not collide with any other
+                 name — both validated at construction.
+
+    Derived shape helpers: ``n_relations``, ``join_attrs`` (the N−1
+    shared attributes, one Shares hypercube dim each), ``schema(j)``
+    (relation j's column names), ``hashed_dims(j)`` / ``dim_attr(d)``
+    (which hypercube dims a relation pins and which attribute a dim
+    hashes), and ``check_relations`` to validate physical inputs.
     """
 
     attrs: Tuple[str, ...]

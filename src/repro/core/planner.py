@@ -25,8 +25,11 @@ from typing import Dict, Optional, Tuple
 import numpy as np
 
 from .cost_model import (ChainStats, JoinStats, cost_chain_one_round,
-                         crossover_reducers, estimate_join_size,
-                         integer_shares, optimal_shares_chain)
+                         cost_chain_shares_skew, crossover_reducers,
+                         estimate_join_size, estimate_skew_combos,
+                         integer_shares, optimal_shares_chain,
+                         sketch_heavy_entries, skew_excess_cascade,
+                         skew_excess_one_round)
 
 
 # ---------------------------------------------------------------------------
@@ -37,10 +40,17 @@ from .cost_model import (ChainStats, JoinStats, cost_chain_one_round,
 class ChainPlan:
     """A priced, executable choice for one chain query.
 
-    ``algorithm`` uses the paper's naming (``1,4J``, ``3,4JA``, ...);
+    ``algorithm`` uses the paper's naming (``1,4J``, ``3,4JA``, ...,
+    plus ``1,NJS``/``1,NJSA`` for the skew-aware SharesSkew variant);
     ``strategy`` is the executor entry point; ``grid_shape`` is the
     integer share vector a one-round execution should use (cascades
-    ignore it).
+    ignore it; the SharesSkew lowering clamps it per combination).
+
+    When the statistics carry a key-frequency sketch with at least one
+    key above the balance threshold, ``skew_detected`` is True and the
+    choice is made on ``adjusted_costs`` — communication plus the
+    straggler penalty ``k · Σ hop excess`` (see docs/skew.md); ``costs``
+    stays pure communication in the paper's units either way.
     """
 
     algorithm: str
@@ -50,6 +60,8 @@ class ChainPlan:
     grid_shape: Tuple[int, ...]    # executable integer shares (∏ ≤ k)
     costs: Dict[str, float]
     crossover_k: Optional[float]   # enumeration crossover k* (exact, any N)
+    skew_detected: bool = False
+    adjusted_costs: Optional[Dict[str, float]] = None
 
     @property
     def predicted_cost(self) -> float:
@@ -57,6 +69,8 @@ class ChainPlan:
 
 
 def _strategy_of(algorithm: str) -> str:
+    if "JS" in algorithm:
+        return "shares_skew"
     if algorithm.startswith("1,"):
         return "one_round"
     return "cascade_pushdown" if algorithm.endswith("JA") else "cascade"
@@ -83,29 +97,116 @@ def crossover_reducers_chain(stats: ChainStats) -> float:
     return (lo + hi) / 2.0
 
 
-def plan_chain(stats: ChainStats, k: int, aggregate: bool) -> ChainPlan:
-    """Enumerate {one-round, cascade, cascade+pushdown} for an N-way
-    chain and pick by analytic cost."""
+def plan_chain(stats: ChainStats, k: int, aggregate: bool, *,
+               skew_slack: float = 1.25) -> ChainPlan:
+    """Choose the cheapest physical plan for an N-way chain.
+
+    Arguments:
+      stats:      :class:`ChainStats` cardinalities.  If its
+                  ``key_freqs`` top-k sketch is present and some key
+                  exceeds the balance threshold (``skew_slack · r_j /
+                  k_d`` on the integer Shares grid), the skew-aware
+                  SharesSkew plan joins the candidate set and all
+                  candidates are compared on *skew-adjusted* cost —
+                  communication plus ``k ·`` the analytic peak-over-mean
+                  hop excess (the straggler that sets round wall-clock;
+                  docs/skew.md derives the model).  Without a sketch, or
+                  when nothing crosses the threshold (uniform data), the
+                  choice is the paper's pure-communication rule and
+                  SharesSkew is never selected.
+      k:          reducer budget (the paper's cluster size).
+      aggregate:  price the aggregated variants (``..JA``/``..JSA``;
+                  requires ``prefix_aggs`` and the full-join size in
+                  ``prefix_joins[-1]``) instead of plain enumeration.
+      skew_slack: balance-threshold slack factor (a key is heavy when
+                  it alone exceeds ``slack`` fair reducer slices).
+
+    Returns a :class:`ChainPlan`: the chosen ``algorithm`` (paper
+    naming), the matching executor ``strategy``, the real-valued and
+    integer Shares vectors, every candidate's cost (and adjusted cost
+    when skew was detected), plus the enumeration crossover ``k*``.
+    """
     n = stats.n_relations
     shares = optimal_shares_chain(stats.sizes, k)
+    grid_shape = integer_shares(stats.sizes, k)
     costs = stats.costs(k, aggregate, shares=shares)
-    if aggregate:
-        candidates = (f"{n - 1},{n}JA", f"1,{n}JA")
+    suffix = "A" if aggregate else ""
+    candidates = [f"{n - 1},{n}J{suffix}", f"1,{n}J{suffix}"]
+
+    heavy = sketch_heavy_entries(stats, grid_shape, skew_slack)
+    skew_detected = any(heavy)
+    adjusted = None
+    if skew_detected:
+        combos = estimate_skew_combos(stats, grid_shape, heavy)
+        skew_alg = f"1,{n}JS{suffix}"
+        costs[skew_alg] = cost_chain_shares_skew(combos)
+        if aggregate:
+            costs[skew_alg] += 2.0 * stats.prefix_joins[-1]
+        candidates.append(skew_alg)
+        excess = {
+            f"1,{n}J{suffix}": skew_excess_one_round(stats, grid_shape),
+            f"{n - 1},{n}J{suffix}": skew_excess_cascade(stats, k),
+            skew_alg: skew_excess_one_round(stats, grid_shape, heavy),
+        }
+        adjusted = {a: costs[a] + k * excess[a] for a in candidates}
+        algorithm = min(candidates, key=lambda a: adjusted[a])
     else:
-        candidates = (f"{n - 1},{n}J", f"1,{n}J")
-    algorithm = min(candidates, key=lambda a: costs[a])
+        algorithm = min(candidates, key=lambda a: costs[a])
     return ChainPlan(
         algorithm=algorithm,
         strategy=_strategy_of(algorithm),
         k=k,
         shares=shares,
-        grid_shape=integer_shares(stats.sizes, k),
+        grid_shape=grid_shape,
         costs=costs,
         crossover_k=crossover_reducers_chain(stats),
+        skew_detected=skew_detected,
+        adjusted_costs=adjusted,
     )
 
 
-def chain_stats_exact(edges) -> ChainStats:
+def skew_crossover_scale(stats: ChainStats, k: int, *,
+                         skew_slack: float = 1.25,
+                         max_scale: float = 64.0) -> float:
+    """Skew-sensitive crossover: the smallest multiplier ``s`` on the
+    sketch's key frequencies at which the planner's skew-adjusted cost
+    of SharesSkew drops below plain Shares — the modeled skew threshold
+    of docs/skew.md.  ``s = 1`` means the workload is already past it;
+    ``inf`` means SharesSkew never wins within ``max_scale``.  Found by
+    bisection on the (monotone in s) cost gap."""
+    if stats.key_freqs is None:
+        return float("inf")
+    n = stats.n_relations
+
+    def scaled(s: float) -> ChainStats:
+        kf = tuple(tuple((key, fl * s, fr * s) for key, fl, fr in entries)
+                   for entries in stats.key_freqs)
+        return dataclasses.replace(stats, key_freqs=kf)
+
+    def skew_wins(s: float) -> bool:
+        plan = plan_chain(scaled(s), k, aggregate=False,
+                          skew_slack=skew_slack)
+        if not plan.skew_detected:
+            return False
+        adj = plan.adjusted_costs
+        return adj[f"1,{n}JS"] < adj[f"1,{n}J"]
+
+    if skew_wins(1.0):
+        hi, lo = 1.0, 0.0
+    elif skew_wins(max_scale):
+        lo, hi = 1.0, max_scale
+    else:
+        return float("inf")
+    for _ in range(50):
+        mid = (lo + hi) / 2.0
+        if skew_wins(mid):
+            hi = mid
+        else:
+            lo = mid
+    return (lo + hi) / 2.0
+
+
+def chain_stats_exact(edges, sketch_top_k: Optional[int] = None) -> ChainStats:
     """Exact ChainStats for a chain of edge-list relations, via sparse
     path-count products on the host (cheap at experiment scales, same
     trick as ``self_join_stats_exact``).
@@ -113,6 +214,10 @@ def chain_stats_exact(edges) -> ChainStats:
     ``edges`` is a sequence of (src, dst) int arrays, one per relation
     in chain order.  ``prefix_joins[i]`` = Σ of the path-count matrix
     M_{i+2} = A_1·..·A_{i+2}; ``prefix_aggs[i]`` = nnz(M_{i+2}).
+
+    With ``sketch_top_k`` set, the returned stats also carry the top-k
+    key-frequency sketch (``key_freqs``) that lets :func:`plan_chain`
+    price skew and consider the SharesSkew plan.
     """
     from collections import defaultdict
 
@@ -143,9 +248,14 @@ def chain_stats_exact(edges) -> ChainStats:
         cur = prod
         prefix_joins.append(join_size)
         prefix_nnz.append(float(sum(len(r) for r in prod.values())))
+    key_freqs = None
+    if sketch_top_k is not None:
+        from .skew import chain_key_sketch
+        key_freqs = chain_key_sketch(edges, top_k=sketch_top_k)
     return ChainStats(sizes=sizes, prefix_joins=tuple(prefix_joins),
                       prefix_aggs=tuple(prefix_nnz[:-1]),
-                      pushdown_joins=tuple(pushdown_joins[:-1]) or None)
+                      pushdown_joins=tuple(pushdown_joins[:-1]) or None,
+                      key_freqs=key_freqs)
 
 
 # ---------------------------------------------------------------------------

@@ -80,6 +80,32 @@ def rmat_edges(spec: GraphSpec, seed: int = 0,
             perm[edges[:, 1]].astype(np.int32))
 
 
+def zipf_edges(n_nodes: int, n_edges: int, alpha: float,
+               seed: int = 0) -> Tuple[np.ndarray, np.ndarray]:
+    """Edge list with Zipf(alpha)-distributed endpoints — the skewed
+    workload the SharesSkew path (docs/skew.md) is built for.
+
+    Both columns are drawn independently from P(node i) ∝ (i+1)^−alpha
+    over ``n_nodes`` node ids, so every join attribute of a chain built
+    from such lists is skewed: at alpha ≳ 1 the top key concentrates a
+    constant fraction of each relation, which is exactly the regime
+    where hashing it overloads one reducer slice of the hypercube.
+    ``alpha = 0`` is the uniform baseline.  Deterministic in ``seed``
+    (same seed ⇒ bit-identical arrays).
+    """
+    if n_nodes < 1 or n_edges < 1:
+        raise ValueError("need n_nodes >= 1 and n_edges >= 1")
+    if alpha < 0:
+        raise ValueError(f"alpha must be >= 0, got {alpha}")
+    rng = np.random.default_rng(seed)
+    ranks = np.arange(1, n_nodes + 1, dtype=np.float64)
+    p = ranks ** -alpha
+    p /= p.sum()
+    src = rng.choice(n_nodes, size=n_edges, p=p).astype(np.int32)
+    dst = rng.choice(n_nodes, size=n_edges, p=p).astype(np.int32)
+    return src, dst
+
+
 def degree_stats(src: np.ndarray, dst: np.ndarray) -> Dict[str, float]:
     n = len(src)
     outdeg = np.bincount(src)

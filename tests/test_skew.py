@@ -1,0 +1,275 @@
+"""Skew layer tests: detector → SkewSplit lowering → planner strategy.
+
+* Zipf generator determinism under a fixed seed.
+* Heavy-hitter detection is exact (the kernel histogram pre-filter has
+  no false negatives, the host pass no false positives).
+* Heavy/residual split exactness: the SharesSkew union equals the
+  unskewed one-round result (and the aggregated sums match the oracle).
+* Measured SharesSkew communication == the analytic cost, exactly, at
+  N=3 (read and shuffle separately).
+* The planner selects SharesSkew on a Zipf(1.2) three-way chain and
+  never selects it on uniform data; the skew path's measured
+  ``max_bucket_load`` is strictly lower than plain Shares on the same
+  reducer budget.
+"""
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.core import (
+    ChainCaps, ChainQuery, Relation, SimGrid, balance_threshold,
+    chain_edge_inputs, chain_stats_exact, detect_chain_skew, edge_relation,
+    heavy_hitters, one_round_chain, plan_chain, shares_skew_chain,
+    skew_crossover_scale,
+)
+from repro.core.skew import chain_key_sketch
+from repro.data.graphs import zipf_edges
+
+K = 16
+CAPS = ChainCaps(recv=512, mid=8192, out=16384, local=1024, agg=4096,
+                 join=16384)
+
+
+def hot_edges(rng, n_nodes=40, n_edges=72, hot=0.4):
+    """Uniform edges with a constructed heavy hitter: key 0 takes a
+    ``hot`` fraction of both columns — above the balance threshold
+    1.25·r/4 of the (4,4) grid at K=16."""
+    src = rng.integers(1, n_nodes, n_edges).astype(np.int32)
+    dst = rng.integers(1, n_nodes, n_edges).astype(np.int32)
+    src[rng.random(n_edges) < hot] = 0
+    dst[rng.random(n_edges) < hot] = 0
+    return src, dst
+
+
+def collect_grid_tuples(out: Relation, grid_rank: int, names) -> set:
+    flat = jax.tree.map(lambda x: x.reshape((-1,) + x.shape[grid_rank:]), out)
+    got = set()
+    for dev in range(flat.valid.shape[0]):
+        sub = Relation({k: v[dev] for k, v in flat.cols.items()},
+                       flat.valid[dev])
+        got |= sub.to_tuple_set(names)
+    return got
+
+
+class TestZipfGenerator:
+    def test_deterministic_under_fixed_seed(self):
+        a = zipf_edges(200, 500, 1.2, seed=11)
+        b = zipf_edges(200, 500, 1.2, seed=11)
+        assert np.array_equal(a[0], b[0]) and np.array_equal(a[1], b[1])
+        c = zipf_edges(200, 500, 1.2, seed=12)
+        assert not (np.array_equal(a[0], c[0]) and np.array_equal(a[1], c[1]))
+
+    def test_alpha_controls_concentration(self):
+        top = {}
+        for alpha in (0.0, 1.2):
+            _, dst = zipf_edges(500, 2000, alpha, seed=0)
+            top[alpha] = np.bincount(dst).max() / len(dst)
+        assert top[1.2] > 4 * top[0.0]
+        assert top[1.2] > 0.15  # Zipf(1.2) puts ~1/ζ(1.2) on the top key
+
+    def test_rejects_bad_parameters(self):
+        with pytest.raises(ValueError):
+            zipf_edges(0, 10, 1.0)
+        with pytest.raises(ValueError):
+            zipf_edges(10, 10, -0.5)
+
+
+class TestHeavyHitters:
+    def test_exact_against_ground_truth(self):
+        rng = np.random.default_rng(5)
+        vals = np.concatenate([np.full(40, 7), np.full(25, 3),
+                               rng.integers(10, 500, 300)]).astype(np.int32)
+        rng.shuffle(vals)
+        keys, counts = heavy_hitters(vals, threshold=20.0)
+        assert keys.tolist() == [7, 3]          # sorted by count, desc
+        assert counts.tolist() == [40.0, 25.0]
+        # ground truth: every key above threshold found, none below
+        u, c = np.unique(vals, return_counts=True)
+        assert set(keys.tolist()) == set(u[c > 20].tolist())
+
+    def test_empty_cases(self):
+        keys, _ = heavy_hitters(np.arange(100, dtype=np.int32), threshold=5.0)
+        assert keys.size == 0
+        keys, _ = heavy_hitters(np.empty(0, np.int32), threshold=1.0)
+        assert keys.size == 0
+        keys, _ = heavy_hitters(np.zeros(50, np.int32),
+                                threshold=float("inf"))
+        assert keys.size == 0
+
+    def test_balance_threshold(self):
+        assert balance_threshold(100.0, 4, slack=1.25) == pytest.approx(31.25)
+        assert balance_threshold(100.0, 1) == float("inf")
+
+
+class TestDetection:
+    def test_uniform_detects_nothing(self):
+        rng = np.random.default_rng(2)
+        edges = [(rng.integers(0, 200, 120).astype(np.int32),
+                  rng.integers(0, 200, 120).astype(np.int32))
+                 for _ in range(3)]
+        assert detect_chain_skew(ChainQuery.three_way(), edges, K) is None
+
+    def test_skewed_plan_shape(self):
+        rng = np.random.default_rng(3)
+        edges = [hot_edges(rng) for _ in range(3)]
+        plan = detect_chain_skew(ChainQuery.three_way(), edges, K)
+        assert plan is not None
+        assert all(0 in h for h in plan.heavy if h.size)
+        # All-residual combination first, on the unclamped base grid.
+        assert plan.combos[0].heavy_dims == (False, False)
+        assert plan.combos[0].grid_shape == plan.base_shape
+        # Heavy dims are clamped to share 1.
+        for combo in plan.combos[1:]:
+            for d, h in enumerate(combo.heavy_dims):
+                assert combo.grid_shape[d] == (1 if h else plan.base_shape[d])
+        # Parts partition each relation: over combos that differ only in
+        # dims the relation pins, sizes sum to the relation size.
+        sizes = np.zeros(3)
+        for combo in plan.combos:
+            sizes += np.array(combo.sizes)
+        # every relation pins ≤ 2 of the 2 dims; with both dims active,
+        # rel 0 and 2 are read twice (once per far-dim choice), rel 1 once
+        reads = [2.0 ** (2 - len(ChainQuery.three_way().hashed_dims(j)))
+                 for j in range(3)]
+        for j, mult in enumerate(reads):
+            assert sizes[j] == pytest.approx(72.0 * mult)
+
+
+class TestSkewSplitExecution:
+    """Heavy/residual split exactness + measured==analytic at N=3."""
+
+    def setup_method(self, method):
+        rng = np.random.default_rng(7)
+        self.edges = [hot_edges(rng) for _ in range(3)]
+        self.query = ChainQuery.three_way()
+        self.plan = detect_chain_skew(self.query, self.edges, K)
+        assert self.plan is not None and len(self.plan.combos) >= 3
+
+    def flat_rels(self, query):
+        return [edge_relation(s, d, names=query.schema(j))
+                for j, (s, d) in enumerate(self.edges)]
+
+    def test_union_equals_unskewed_and_measured_equals_analytic(self):
+        out, st, ovf = shares_skew_chain(
+            self.query, self.flat_rels(self.query), self.plan, caps=CAPS,
+            measure_skew=True)
+        assert not bool(ovf)
+
+        grid = SimGrid(self.plan.base_shape)
+        rels = chain_edge_inputs(self.query, self.edges, self.plan.base_shape)
+        out_p, st_p, ovf_p = one_round_chain(grid, self.query, rels,
+                                             caps=CAPS, measure_skew=True)
+        assert not bool(ovf_p)
+
+        # Split exactness: the union over combinations is the join.
+        expect = collect_grid_tuples(out_p, 2, self.query.attrs)
+        assert expect, "degenerate test: empty join"
+        assert out.to_tuple_set(self.query.attrs) == expect
+        # Acceptance: strictly better balance at equal reducer budget.
+        assert float(st["max_bucket_load"]) < float(st_p["max_bucket_load"])
+        # Acceptance: measured SharesSkew communication == analytic, exactly.
+        assert float(st["read"]) == self.plan.read_cost()
+        assert float(st["shuffled"]) == self.plan.shuffle_cost()
+        assert float(st["total"]) == self.plan.cost()
+
+    def test_aggregated_union_matches_oracle(self):
+        query = ChainQuery.three_way(aggregate=True)
+        plan = detect_chain_skew(query, self.edges, K)
+        out, st, ovf = shares_skew_chain(query, self.flat_rels(query), plan,
+                                         caps=CAPS)
+        assert not bool(ovf)
+        got = {}
+        d = out.to_numpy()
+        for a, z, p in zip(d["a"], d["d"], d["p"]):
+            got[(int(a), int(z))] = got.get((int(a), int(z)), 0.0) + float(p)
+
+        # Host oracle: brute-force path products.
+        oracle = {}
+        (s0, d0), (s1, d1), (s2, d2) = self.edges
+        for i in range(len(s0)):
+            for j in range(len(s1)):
+                if d0[i] != s1[j]:
+                    continue
+                for l in range(len(s2)):
+                    if d1[j] != s2[l]:
+                        continue
+                    key = (int(s0[i]), int(d2[l]))
+                    oracle[key] = oracle.get(key, 0.0) + 1.0
+        assert set(got) == set(oracle)
+        for kk in oracle:
+            np.testing.assert_allclose(got[kk], oracle[kk], rtol=1e-5)
+        # Aggregated analytic: sub-join comm + 2·Σ|combo join| = 2·j3.
+        stats = chain_stats_exact(self.edges)
+        assert float(st["total"]) == plan.cost() + 2.0 * stats.prefix_joins[-1]
+
+
+class TestEmptySkewPlan:
+    def test_all_empty_combinations_prove_empty_join(self):
+        """R1.dst is a single heavy key that R2.src never contains: every
+        combination loses an input, which proves the join is empty — the
+        lowering must return an empty relation at zero cost, not crash."""
+        rng = np.random.default_rng(9)
+        n = 48
+        r1 = (rng.integers(1, 30, n).astype(np.int32),
+              np.full(n, 5, np.int32))           # dst ≡ heavy key 5
+        r2 = (rng.integers(6, 30, n).astype(np.int32),  # src never 5
+              rng.integers(0, 30, n).astype(np.int32))
+        r3 = (rng.integers(0, 30, n).astype(np.int32),
+              rng.integers(0, 30, n).astype(np.int32))
+        edges = [r1, r2, r3]
+        query = ChainQuery.three_way()
+        plan = detect_chain_skew(query, edges, K)
+        assert plan is not None and plan.combos == ()
+        assert plan.cost() == 0.0
+        flat = [edge_relation(s, d, names=query.schema(j))
+                for j, (s, d) in enumerate(edges)]
+        out, st, ovf = shares_skew_chain(query, flat, plan, caps=CAPS,
+                                         measure_skew=True)
+        assert not bool(ovf)
+        assert out.to_tuple_set(query.attrs) == set()
+        assert float(st["total"]) == 0.0
+        # The planner prices this plan at 0 — honest: nothing runs.
+        stats = chain_stats_exact(edges, sketch_top_k=16)
+        assert stats.prefix_joins[-1] == 0.0  # the join really is empty
+        chain_plan = plan_chain(stats, K, aggregate=False)
+        assert chain_plan.skew_detected
+
+
+class TestPlannerSkew:
+    def test_zipf_selects_shares_skew(self):
+        """Acceptance: Zipf(1.2) three-way chain → planner picks 1,3JS."""
+        src, dst = zipf_edges(800, 160, 1.2, seed=3)
+        stats = chain_stats_exact([(src, dst)] * 3, sketch_top_k=16)
+        plan = plan_chain(stats, 64, aggregate=False)
+        assert plan.skew_detected
+        assert plan.algorithm == "1,3JS"
+        assert plan.strategy == "shares_skew"
+        assert plan.adjusted_costs["1,3JS"] < plan.adjusted_costs["1,3J"]
+        # The sketch marks the workload as already past the crossover.
+        assert skew_crossover_scale(stats, 64) <= 1.0
+
+    def test_uniform_never_selects_skew_path(self):
+        """Acceptance: uniform data → the plain PR-1 decision, bit-for-bit."""
+        src, dst = zipf_edges(800, 160, 0.0, seed=3)
+        stats = chain_stats_exact([(src, dst)] * 3, sketch_top_k=16)
+        plan = plan_chain(stats, 64, aggregate=False)
+        assert not plan.skew_detected
+        assert "JS" not in plan.algorithm
+        assert plan.adjusted_costs is None
+        # Identical choice and costs to planning without any sketch.
+        import dataclasses
+        bare = plan_chain(dataclasses.replace(stats, key_freqs=None), 64,
+                          aggregate=False)
+        assert bare.algorithm == plan.algorithm
+        assert bare.costs == plan.costs
+        assert skew_crossover_scale(stats, 64) > 1.0
+
+    def test_aggregated_skew_candidate(self):
+        src, dst = zipf_edges(800, 160, 1.2, seed=3)
+        stats = chain_stats_exact([(src, dst)] * 3, sketch_top_k=16)
+        plan = plan_chain(stats, 64, aggregate=True)
+        assert plan.skew_detected
+        assert "1,3JSA" in plan.costs
+        assert plan.algorithm in ("1,3JSA", "2,3JA", "1,3JA")
