@@ -1,32 +1,252 @@
-"""Engine micro-benchmarks: wall-time per call of the core operators on
-CPU (jit-compiled, median of repeats).  These are throughput sanity
-numbers for the engine itself, not TPU projections (those are §Roofline).
+"""Engine micro-benchmarks: the data plane on a wall clock.
+
+Two jobs:
+
+* ``bench_engine()`` — throughput sanity rows for ``benchmarks/run.py``
+  (jit-compiled, median of repeats; CPU numbers, not TPU projections —
+  those are §Roofline).
+* ``main()`` — the data-plane harness: sweeps per-reducer capacity over
+  {1k, 4k, 16k, 64k} for the all-pairs oracle vs ``sort_merge_join``
+  and the multipass vs single-pass ``groupby_sum``, times the per-hop
+  (eager) vs whole-plan-jitted executor, and emits
+  ``BENCH_join_kernels.json`` with μs medians, mins, and speedup
+  ratios — the perf trajectory's time axis.
+
+  PYTHONPATH=src python benchmarks/engine_micro.py [--fast] [--check]
+                                                   [--out BENCH_join_kernels.json]
+
+``--fast`` shrinks the sweep for CI smoke (small caps, 1 repeat);
+``--check`` asserts sort-merge is never slower than all-pairs at
+capacity >= 4k (and >= 5x faster at 16k when that point is measured).
 """
 
 from __future__ import annotations
 
+import argparse
+import json
 import sys
-sys.path.insert(0, "src")
-
 import time
+from pathlib import Path
 from typing import List
+
+try:
+    import repro  # noqa: F401 — installed, or on PYTHONPATH (ROADMAP: PYTHONPATH=src)
+except ImportError:  # checkout fallback: src/ relative to this file, not the cwd
+    sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
 
 import numpy as np
 
 import jax
 import jax.numpy as jnp
 
+CAPACITIES = (1024, 4096, 16384, 65536)
+FAST_CAPACITIES = (1024, 4096)
+# The all-pairs oracle is O(cap²): at 64k² the flat pair index overflows
+# int32 and the dense intermediate alone is ~17 GB — past this cap only
+# sort-merge is measured and the oracle cell records why it is absent.
+ALLPAIRS_MAX_CAP = 16384
 
-def _timeit(fn, *args, repeats=5) -> float:
-    fn(*args)  # compile + warm
+
+def _block_all(out) -> None:
+    """Block on EVERY leaf of the output pytree.  Passing a tuple of
+    Relations straight to ``jax.block_until_ready`` can under-time
+    multi-output ops on jax versions that only block array arguments."""
+    for leaf in jax.tree_util.tree_leaves(out):
+        if hasattr(leaf, "block_until_ready"):
+            leaf.block_until_ready()
+
+
+def _timeit(fn, *args, repeats: int = 5) -> dict:
+    """Wall time per call in μs: {'median_us', 'min_us'} over ``repeats``
+    timed calls after one warm-up (compile) call."""
+    _block_all(fn(*args))  # compile + warm
     times = []
     for _ in range(repeats):
         t0 = time.perf_counter()
-        out = fn(*args)
-        jax.block_until_ready(out)
+        _block_all(fn(*args))
         times.append(time.perf_counter() - t0)
-    return float(np.median(times) * 1e6)  # us
+    return {"median_us": float(np.median(times) * 1e6),
+            "min_us": float(np.min(times) * 1e6)}
 
+
+# ---------------------------------------------------------------------------
+# Data-plane sweep: all-pairs vs sort-merge, multipass vs single-pass
+# ---------------------------------------------------------------------------
+
+def _join_inputs(cap: int, rng):
+    """One reducer's worth of join input: keys uniform over [0, cap), so
+    the expected match count ~= cap (output is input-sized, the regime
+    where the O(cap²) oracle pays purely for its intermediate)."""
+    from repro.core import Relation
+    left = Relation.from_arrays(
+        cap,
+        b=jnp.array(rng.integers(0, cap, cap), jnp.int32),
+        v=jnp.array(rng.normal(size=cap), jnp.float32))
+    right = Relation.from_arrays(
+        cap,
+        b=jnp.array(rng.integers(0, cap, cap), jnp.int32),
+        w=jnp.array(rng.normal(size=cap), jnp.float32))
+    return left, right
+
+
+def bench_local_join(capacities, repeats: int, rng) -> dict:
+    from repro.core import local_join
+
+    report = {}
+    for cap in capacities:
+        left, right = _join_inputs(cap, rng)
+        out_cap = 4 * cap  # headroom over the ~cap expected matches
+
+        def make(impl):
+            @jax.jit
+            def f(l, r):
+                return local_join(l, r, "b", "b", out_cap, impl=impl)
+            return f
+
+        row = {"out_capacity": out_cap,
+               "sort_merge": _timeit(make("sort_merge"), left, right,
+                                     repeats=repeats)}
+        if cap <= ALLPAIRS_MAX_CAP:
+            row["all_pairs"] = _timeit(make("all_pairs"), left, right,
+                                       repeats=repeats)
+            row["speedup_median"] = (row["all_pairs"]["median_us"]
+                                     / row["sort_merge"]["median_us"])
+        else:
+            row["all_pairs"] = None
+            row["all_pairs_skipped"] = (
+                "O(cap²) oracle infeasible: int32 pair-index overflow and "
+                "a ~17 GB dense intermediate at 64k²")
+        report[str(cap)] = row
+        sp = row.get("speedup_median")
+        print(f"local_join    cap={cap:6d}: sort_merge "
+              f"{row['sort_merge']['median_us']:12.1f} us"
+              + (f"  all_pairs {row['all_pairs']['median_us']:12.1f} us"
+                 f"  speedup {sp:6.2f}x" if sp else "  all_pairs skipped"))
+    return report
+
+
+def bench_groupby(capacities, repeats: int, rng) -> dict:
+    from repro.core import Relation
+    from repro.core.local import groupby_sum, groupby_sum_multipass
+
+    report = {}
+    for cap in capacities:
+        rel = Relation.from_arrays(
+            cap,
+            a=jnp.array(rng.integers(0, max(cap // 32, 1), cap), jnp.int32),
+            c=jnp.array(rng.integers(0, max(cap // 32, 1), cap), jnp.int32),
+            p=jnp.array(rng.normal(size=cap), jnp.float32))
+
+        single = jax.jit(lambda r: groupby_sum(r, ("a", "c"), "p"))
+        multi = jax.jit(lambda r: groupby_sum_multipass(r, ("a", "c"), "p"))
+        row = {"single_pass": _timeit(single, rel, repeats=repeats),
+               "multipass": _timeit(multi, rel, repeats=repeats)}
+        row["speedup_median"] = (row["multipass"]["median_us"]
+                                 / row["single_pass"]["median_us"])
+        report[str(cap)] = row
+        print(f"groupby_sum   cap={cap:6d}: single "
+              f"{row['single_pass']['median_us']:12.1f} us  multipass "
+              f"{row['multipass']['median_us']:12.1f} us  "
+              f"speedup {row['speedup_median']:6.2f}x")
+    return report
+
+
+# ---------------------------------------------------------------------------
+# Whole-plan jit vs per-hop dispatch
+# ---------------------------------------------------------------------------
+
+def bench_executor(repeats: int, rng, n_edges: int = 4000) -> dict:
+    from repro.core import (ChainQuery, SimGrid, chain_edge_inputs,
+                            chain_stats_exact, default_chain_caps,
+                            execute_chain, jit_execute_chain)
+
+    nodes = max(8, n_edges // 2)
+    edges = [(rng.integers(0, nodes, n_edges).astype(np.int32),
+              rng.integers(0, nodes, n_edges).astype(np.int32))
+             for _ in range(3)]
+    stats = chain_stats_exact(edges)
+
+    report = {}
+    for strategy, shape in (("one_round", None), ("cascade", (4,))):
+        query = ChainQuery.chain(3)
+        if shape is None:
+            from repro.core import integer_shares
+            shape = integer_shares(stats.sizes, 8)
+        caps = default_chain_caps(stats, shape, slack=4)
+        grid = SimGrid(shape)
+        rels = chain_edge_inputs(query, edges, shape)
+
+        def per_hop(rs, _g=grid, _q=query, _s=strategy, _c=caps):
+            return execute_chain(_g, _q, rs, strategy=_s, caps=_c)
+
+        jitted = jit_execute_chain(grid, query, strategy=strategy, caps=caps,
+                                   donate=False)
+        row = {"grid_shape": list(shape), "n_edges": n_edges,
+               "per_hop": _timeit(per_hop, rels, repeats=repeats),
+               "jitted": _timeit(jitted, tuple(rels), repeats=repeats)}
+        row["speedup_median"] = (row["per_hop"]["median_us"]
+                                 / row["jitted"]["median_us"])
+        report[strategy] = row
+        print(f"executor {strategy:9s}: per-hop "
+              f"{row['per_hop']['median_us']:12.1f} us  jitted "
+              f"{row['jitted']['median_us']:12.1f} us  "
+              f"speedup {row['speedup_median']:6.2f}x")
+    return report
+
+
+def check_report(report: dict) -> None:
+    """CI gate: the fast path must never lose to the oracle at cap >= 4k,
+    and must clear 5x at 16k whenever that point was measured."""
+    for cap_s, row in report["local_join"].items():
+        cap, sp = int(cap_s), row.get("speedup_median")
+        if sp is None:
+            continue
+        if cap >= 4096:
+            assert sp >= 1.0, (
+                f"sort_merge slower than all_pairs at cap={cap}: {sp:.2f}x")
+        if cap >= 16384:
+            assert sp >= 5.0, (
+                f"sort_merge < 5x over all_pairs at cap={cap}: {sp:.2f}x")
+    print("check OK: sort-merge never slower at cap >= 4k"
+          + (", >=5x at 16k" if "16384" in report["local_join"] else ""))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="CI smoke mode: small caps, 1 repeat")
+    ap.add_argument("--check", action="store_true",
+                    help="assert the sort-merge speedup gates")
+    ap.add_argument("--repeats", type=int, default=None)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default="BENCH_join_kernels.json")
+    args = ap.parse_args()
+
+    caps = FAST_CAPACITIES if args.fast else CAPACITIES
+    repeats = args.repeats if args.repeats else (1 if args.fast else 5)
+    rng = np.random.default_rng(args.seed)
+
+    report = {
+        "benchmark": "join_kernels",
+        "backend": jax.default_backend(),
+        "mode": "fast" if args.fast else "full",
+        "repeats": repeats,
+        "capacities": list(caps),
+        "local_join": bench_local_join(caps, repeats, rng),
+        "groupby_sum": bench_groupby(caps, repeats, rng),
+        "executor": bench_executor(repeats, rng,
+                                   n_edges=1000 if args.fast else 4000),
+    }
+    with open(args.out, "w") as f:
+        json.dump(report, f, indent=2)
+    print(f"wrote {args.out}")
+    if args.check:
+        check_report(report)
+
+
+# ---------------------------------------------------------------------------
+# run.py rows (throughput sanity for the whole engine)
+# ---------------------------------------------------------------------------
 
 def bench_engine() -> List[tuple]:
     from repro.core import SimGrid, edge_relation, two_way_join
@@ -56,8 +276,9 @@ def bench_engine() -> List[tuple]:
                                        local_capacity=8192)
         return out.valid.sum(), stats["shuffled"], ovf
 
-    rows.append(("engine/two_way_join_20k_tuples_4dev", _timeit(j2, Rd, Sd),
-                 "distributed hash join, SimGrid"))
+    rows.append(("engine/two_way_join_20k_tuples_4dev",
+                 _timeit(j2, Rd, Sd)["median_us"],
+                 "distributed sort-merge hash join, SimGrid"))
 
     # local group-by aggregation
     from repro.core.relation import Relation
@@ -72,21 +293,38 @@ def bench_engine() -> List[tuple]:
         out, ovf = groupby_sum(r, ("a", "c"), "p")
         return out.cols["p"].sum()
 
-    rows.append(("engine/groupby_sum_16k", _timeit(agg, rel),
-                 "sort+segment reduce"))
+    rows.append(("engine/groupby_sum_16k", _timeit(agg, rel)["median_us"],
+                 "single-pass sort + segment reduce"))
+
+    # reduce-side join kernels at one representative capacity
+    left, right = _join_inputs(4096, rng)
+    for impl in ("sort_merge", "all_pairs"):
+        @jax.jit
+        def jl(l, r, _impl=impl):
+            return local_join(l, r, "b", "b", 16384, impl=_impl)
+        rows.append((f"engine/local_join_4k_{impl}",
+                     _timeit(jl, left, right)["median_us"],
+                     "sorted probe" if impl == "sort_merge"
+                     else "quadratic oracle"))
 
     # kernels (ref backend on CPU, pallas on TPU)
     from repro.kernels import ops
     vals = jnp.array(rng.normal(size=65536), jnp.float32)
     ids = jnp.sort(jnp.array(rng.integers(0, 4096, 65536), jnp.int32))
     f = jax.jit(lambda v, i: ops.segment_sum(v, i, 4096, backend="ref"))
-    rows.append(("kernels/segment_sum_64k_ref", _timeit(f, vals, ids),
+    rows.append(("kernels/segment_sum_64k_ref",
+                 _timeit(f, vals, ids)["median_us"],
                  "pure-jnp oracle path"))
 
     q = jnp.array(rng.normal(size=(1, 8, 512, 64)), jnp.bfloat16)
     k = jnp.array(rng.normal(size=(1, 2, 512, 64)), jnp.bfloat16)
     fa = jax.jit(lambda a, b: ops.flash_attention(a, b, b, causal=True,
                                                   backend="ref"))
-    rows.append(("kernels/attention_512_gqa_ref", _timeit(fa, q, k),
+    rows.append(("kernels/attention_512_gqa_ref",
+                 _timeit(fa, q, k)["median_us"],
                  "reference attention"))
     return rows
+
+
+if __name__ == "__main__":
+    main()

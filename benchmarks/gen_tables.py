@@ -10,9 +10,14 @@ import json
 import os
 import re
 import sys
+from pathlib import Path
 
-sys.path.insert(0, "src")
-sys.path.insert(0, ".")
+try:
+    import repro  # noqa: F401 — installed, or on PYTHONPATH (ROADMAP: PYTHONPATH=src)
+except ImportError:  # checkout fallback: src/ relative to this file, not the cwd
+    sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+# `from benchmarks.roofline import ...` needs the repo root importable too.
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
 
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 ART = os.path.join(ROOT, "benchmarks", "artifacts")

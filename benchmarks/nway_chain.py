@@ -19,7 +19,12 @@ import argparse
 import json
 import sys
 
-sys.path.insert(0, "src")
+from pathlib import Path
+
+try:
+    import repro  # noqa: F401 — installed, or on PYTHONPATH (ROADMAP: PYTHONPATH=src)
+except ImportError:  # checkout fallback: src/ relative to this file, not the cwd
+    sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
 
 import numpy as np
 
@@ -46,8 +51,7 @@ def measured_run(strategy, query, edge_lists, stats, grid_shape):
 
 
 def bench_chain(n: int, n_edges: int, rng) -> dict:
-    # Average degree ~2 keeps intermediate sizes (and the all-pairs
-    # local-join buffers, quadratic in capacity) CPU-friendly while the
+    # Average degree ~2 keeps intermediate sizes CPU-friendly while the
     # chain still fans out ~2x per hop.
     nodes = max(8, n_edges // 2)
     edges = [(rng.integers(0, nodes, n_edges).astype(np.int32),

@@ -18,7 +18,12 @@ engine and the measured tuple counts asserted equal to the formulas.
 from __future__ import annotations
 
 import sys
-sys.path.insert(0, "src")
+from pathlib import Path
+
+try:
+    import repro  # noqa: F401 — installed, or on PYTHONPATH (ROADMAP: PYTHONPATH=src)
+except ImportError:  # checkout fallback: src/ relative to this file, not the cwd
+    sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
 
 from typing import Dict, List
 

@@ -28,7 +28,12 @@ import os
 import sys
 from typing import Dict, List, Optional
 
-sys.path.insert(0, "src")
+from pathlib import Path
+
+try:
+    import repro  # noqa: F401 — installed, or on PYTHONPATH (ROADMAP: PYTHONPATH=src)
+except ImportError:  # checkout fallback: src/ relative to this file, not the cwd
+    sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
 
 from repro.configs import all_archs, get_config
 from repro.models.config import SHAPES, ModelConfig

@@ -26,7 +26,12 @@ import argparse
 import json
 import sys
 
-sys.path.insert(0, "src")
+from pathlib import Path
+
+try:
+    import repro  # noqa: F401 — installed, or on PYTHONPATH (ROADMAP: PYTHONPATH=src)
+except ImportError:  # checkout fallback: src/ relative to this file, not the cwd
+    sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
 
 import numpy as np
 
@@ -39,11 +44,11 @@ from repro.data.graphs import zipf_edges
 ALPHAS = (0.0, 0.8, 1.2, 1.4)
 
 
-# local_join buffers are quadratic in capacity (all-pairs match matrix),
-# so mid/local stay tight on the full-size grid; heavy combinations run
-# on few reducers and need room for their broadcast parts.  ``out`` is
-# sized for the hottest reducer of the *plain* path, which under skew
-# holds all paths through the top key pair.
+# mid/local stay tight on the full-size grid (they bound per-reducer
+# residency, the quantity under test); heavy combinations run on few
+# reducers and need room for their broadcast parts.  ``out`` is sized
+# for the hottest reducer of the *plain* path, which under skew holds
+# all paths through the top key pair.
 BASE_CAPS = ChainCaps(recv=256, mid=1024, out=65536, local=1024)
 HEAVY_CAPS = ChainCaps(recv=256, mid=2048, out=65536, local=2048)
 

@@ -17,7 +17,12 @@ extension of the engine.
 
 import argparse
 import sys
-sys.path.insert(0, "src")
+from pathlib import Path
+
+try:
+    import repro  # noqa: F401 — installed, or on PYTHONPATH (ROADMAP: PYTHONPATH=src)
+except ImportError:  # checkout fallback: src/ relative to this file, not the cwd
+    sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
 
 from repro.core import (ChainQuery, Relation, SimGrid, chain_edge_inputs,
                         chain_stats_exact, default_chain_caps, execute_chain,

@@ -11,7 +11,12 @@ few hundred steps on CPU.  Use --preset quick for a 2-minute sanity run;
 
 import argparse
 import sys
-sys.path.insert(0, "src")
+from pathlib import Path
+
+try:
+    import repro  # noqa: F401 — installed, or on PYTHONPATH (ROADMAP: PYTHONPATH=src)
+except ImportError:  # checkout fallback: src/ relative to this file, not the cwd
+    sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
 
 import jax
 

@@ -11,12 +11,18 @@ Public API, by layer:
 
   Physical executor
     execute_chain              — run a query with a planner strategy
+    jit_execute_chain          — the same, compiled once per (plan, caps)
     one_round_chain            — Shares hypercube (1,NJ / 1,NJA)
     cascade_chain              — left-deep cascade (+ pushdown)
     shares_skew_chain          — SharesSkew heavy/residual union (1,NJS)
     two_way_join, distributed_groupby_sum — per-round building blocks
     one_round_three_way, cascade_three_way[_agg], one_round_three_way_agg
                                — the paper's three-way entry points
+
+  Data plane (docs/architecture.md "Data plane")
+    sort_merge_join, groupby_sum        — sorted-probe reduce-side kernels
+    local_join_allpairs, groupby_sum_multipass — the oracle references
+    (every lowering takes join_impl ∈ {"sort_merge", "all_pairs"})
 
   Statistics, cost model, planner (``help(plan_chain)``)
     ChainStats (+ key_freqs sketch), JoinStats, chain_stats_exact
@@ -38,8 +44,10 @@ from .shuffle import Grid, ShardGrid, SimGrid, broadcast_along, shuffle_by_bucke
 from .plan import ChainAggregate, ChainQuery
 from .two_way import two_way_join
 from .executor import (ChainCaps, cascade_chain, chain_edge_inputs,
-                       default_chain_caps, execute_chain, one_round_chain,
-                       scatter_to_grid, shares_skew_chain)
+                       default_chain_caps, execute_chain, jit_execute_chain,
+                       one_round_chain, scatter_to_grid, shares_skew_chain)
+from .local import (groupby_sum, groupby_sum_multipass, local_join,
+                    local_join_allpairs, sort_merge_join)
 from .one_round import one_round_three_way
 from .cascade import cascade_three_way, cascade_three_way_agg, one_round_three_way_agg
 from .aggregation import distributed_groupby_sum, project_product
@@ -65,8 +73,11 @@ __all__ = [
     "Relation", "concat", "flatten_leading",
     "Grid", "SimGrid", "ShardGrid", "broadcast_along", "shuffle_by_bucket",
     "ChainQuery", "ChainAggregate", "ChainCaps",
-    "execute_chain", "one_round_chain", "cascade_chain", "shares_skew_chain",
+    "execute_chain", "jit_execute_chain", "one_round_chain", "cascade_chain",
+    "shares_skew_chain",
     "scatter_to_grid", "chain_edge_inputs", "default_chain_caps",
+    "sort_merge_join", "local_join", "local_join_allpairs",
+    "groupby_sum", "groupby_sum_multipass",
     "two_way_join", "one_round_three_way",
     "cascade_three_way", "cascade_three_way_agg", "one_round_three_way_agg",
     "distributed_groupby_sum", "project_product",

@@ -24,11 +24,15 @@ def distributed_groupby_sum(grid: Grid, rel: Relation, keys: Sequence[str],
                             value: str, *, recv_capacity: int,
                             out_capacity: int, local_capacity: int | None = None,
                             local_combine: bool = False,
+                            segment_backend: str = "auto",
                             ) -> Tuple[Relation, Dict[str, jnp.ndarray], jnp.ndarray]:
     """SUM(value) GROUP BY keys across the grid.
 
     Groups are routed by hashing the key tuple, one hop per grid axis;
-    every device then owns complete groups and aggregates locally.
+    every device then owns complete groups and aggregates locally via
+    the single-pass :func:`repro.core.local.groupby_sum` (one composite
+    sort + the ``segment_sum`` kernel; ``segment_backend`` forwards to
+    its kernel dispatch — Pallas on TPU, jnp oracle elsewhere).
 
     local_combine=True runs the combiner (local pre-aggregation) before
     the shuffle — Hadoop's combiner, which the paper does NOT model;
@@ -41,7 +45,7 @@ def distributed_groupby_sum(grid: Grid, rel: Relation, keys: Sequence[str],
     cur = rel
     if local_combine:
         def combine(r: Relation):
-            return groupby_sum(r, keys, value)
+            return groupby_sum(r, keys, value, backend=segment_backend)
         cur, ovf_c = grid.map_devices(combine, cur)
         overflow = overflow | jnp.any(grid.reduce_any(ovf_c))
 
@@ -63,7 +67,8 @@ def distributed_groupby_sum(grid: Grid, rel: Relation, keys: Sequence[str],
     shuffled = grid.reduce_sum(grid.map_devices(lambda r: r.count(), cur))
 
     def reduce_side(r: Relation):
-        return groupby_sum(r, keys, value, out_capacity)
+        return groupby_sum(r, keys, value, out_capacity,
+                           backend=segment_backend)
 
     agg, ovf_a = grid.map_devices(reduce_side, cur)
     overflow = overflow | jnp.any(grid.reduce_any(ovf_a))

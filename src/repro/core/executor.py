@@ -22,6 +22,13 @@ first two run on any grid backend, SimGrid / ShardGrid):
   to share 1 (heavy tuples broadcast there).  Driven by a
   :class:`repro.core.skew.SkewSplitPlan`; SimGrid only.
 
+Every lowering takes a ``join_impl`` knob selecting the reduce-side
+join kernel — ``"sort_merge"`` (default, the sorted-probe data plane)
+or ``"all_pairs"`` (the quadratic oracle) — and
+:func:`jit_execute_chain` compiles a whole (plan, caps) execution into
+one cached XLA program with donated input buffers, instead of per-hop
+dispatch.
+
 Cost accounting is paper-faithful and identical to the three-way
 implementations: each round charges read + shuffled tuples; the final
 aggregator of a pushdown cascade is uncharged unless requested.
@@ -35,8 +42,10 @@ jnp scatter-add elsewhere — see ``repro.kernels.hash_partition
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Dict, List, Optional, Sequence, Tuple
 
+import jax
 import jax.numpy as jnp
 
 from ..kernels.hash_partition import bucket_counts
@@ -107,6 +116,7 @@ def _hop_load(grid: Grid, rel: Relation, key: str, n_buckets: int,
 
 def one_round_chain(grid: Grid, query: ChainQuery, rels: Sequence[Relation], *,
                     caps: ChainCaps, measure_skew: bool = False,
+                    join_impl: str = "sort_merge",
                     ) -> Tuple[Relation, Stats, jnp.ndarray]:
     """One MapReduce round: place every relation on the hypercube, then
     join locally.  Shuffled cost is Σ_j r_j · K / (∏ shares R_j pins) —
@@ -154,7 +164,8 @@ def one_round_chain(grid: Grid, query: ChainQuery, rels: Sequence[Relation], *,
         ovf = jnp.zeros((), jnp.bool_)
         for j in range(1, n):
             key = query.attrs[j]
-            acc, o = local_join(acc, shards[j], key, key, out_caps[j - 1])
+            acc, o = local_join(acc, shards[j], key, key, out_caps[j - 1],
+                                impl=join_impl)
             ovf = ovf | o
         return acc, ovf
 
@@ -196,6 +207,7 @@ def cascade_chain(grid: Grid, query: ChainQuery, rels: Sequence[Relation], *,
                   local_combine: bool = False,
                   include_final_agg: bool = False,
                   measure_skew: bool = False,
+                  join_impl: str = "sort_merge",
                   ) -> Tuple[Relation, Stats, jnp.ndarray]:
     """N−1 rounds of two-way joins, left-deep in query order.
 
@@ -237,7 +249,7 @@ def cascade_chain(grid: Grid, query: ChainQuery, rels: Sequence[Relation], *,
         left, st, ovf = two_way_join(
             grid, left, rels[j], key, key,
             recv_capacity=recv, out_capacity=out_cap,
-            local_capacity=local, salt=j - 1)
+            local_capacity=local, salt=j - 1, join_impl=join_impl)
         all_stats.append(st)
         overflow = overflow | ovf
         left_cap = out_cap
@@ -315,6 +327,7 @@ def _flatten_grid(rel: Relation, grid_rank: int) -> Relation:
 
 def shares_skew_chain(query: ChainQuery, rels: Sequence[Relation], plan, *,
                       caps, measure_skew: bool = False,
+                      join_impl: str = "sort_merge",
                       ) -> Tuple[Relation, Stats, jnp.ndarray]:
     """SkewSplit lowering (SharesSkew): one Shares sub-join per
     heavy/residual combination, unioned.
@@ -374,7 +387,8 @@ def shares_skew_chain(query: ChainQuery, rels: Sequence[Relation], plan, *,
         grid = SimGrid(combo.grid_shape)
         combo_caps = caps(combo) if callable(caps) else caps
         out, st, ovf = one_round_chain(grid, query, sub, caps=combo_caps,
-                                       measure_skew=measure_skew)
+                                       measure_skew=measure_skew,
+                                       join_impl=join_impl)
         parts.append(_flatten_grid(out, n - 1))
         all_stats.append(st)
         overflow = overflow | ovf
@@ -395,12 +409,18 @@ def execute_chain(grid: Grid, query: ChainQuery, rels: Sequence[Relation], *,
                   strategy: str, caps: ChainCaps,
                   measure_skew: bool = False, local_combine: bool = False,
                   include_final_agg: bool = False,
+                  join_impl: str = "sort_merge",
                   ) -> Tuple[Relation, Stats, jnp.ndarray]:
     """Execute ``query`` with a planner-chosen strategy:
 
     * ``"one_round"``          — Shares hypercube (1,NJ / 1,NJA)
     * ``"cascade"``            — plain left-deep cascade (N−1,NJ)
     * ``"cascade_pushdown"``   — cascade with aggregation pushdown (N−1,NJA)
+
+    ``join_impl`` selects the reduce-side join kernel for every
+    strategy: ``"sort_merge"`` (default) or the ``"all_pairs"`` oracle
+    — identical tuple sets, stats, and overflow flags (see
+    docs/architecture.md "Data plane").
 
     The skew-aware strategy ``"shares_skew"`` (1,NJS) cannot run on a
     single pre-scattered grid — its sub-joins each use their own clamped
@@ -414,19 +434,80 @@ def execute_chain(grid: Grid, query: ChainQuery, rels: Sequence[Relation], *,
             "SkewSplitPlan from repro.core.skew.detect_chain_skew")
     if strategy == "one_round":
         return one_round_chain(grid, query, rels, caps=caps,
-                               measure_skew=measure_skew)
+                               measure_skew=measure_skew,
+                               join_impl=join_impl)
     if strategy == "cascade":
         return cascade_chain(grid, query, rels, caps=caps, pushdown=False,
                              measure_skew=measure_skew,
-                             local_combine=local_combine)
+                             local_combine=local_combine,
+                             join_impl=join_impl)
     if strategy == "cascade_pushdown":
         if query.aggregate is None:
             raise ValueError("cascade_pushdown needs an aggregated query")
         return cascade_chain(grid, query, rels, caps=caps, pushdown=True,
                              measure_skew=measure_skew,
                              local_combine=local_combine,
-                             include_final_agg=include_final_agg)
+                             include_final_agg=include_final_agg,
+                             join_impl=join_impl)
     raise ValueError(f"unknown strategy {strategy!r}")
+
+
+# ---------------------------------------------------------------------------
+# Whole-plan compilation: one XLA program per (plan, caps)
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=128)
+def _compiled_sim_chain(grid_shape: Tuple[int, ...], query: ChainQuery,
+                        strategy: str, caps: ChainCaps, opts: Tuple,
+                        donate: bool):
+    return _jit_chain(SimGrid(grid_shape), query, strategy, caps, opts,
+                      donate)
+
+
+@functools.lru_cache(maxsize=32)
+def _compiled_grid_chain(grid: Grid, query: ChainQuery, strategy: str,
+                         caps: ChainCaps, opts: Tuple, donate: bool):
+    # Non-Sim grids hash by identity: the cache holds per-instance
+    # programs (the realistic usage — one long-lived ShardGrid).
+    return _jit_chain(grid, query, strategy, caps, opts, donate)
+
+
+def _jit_chain(grid: Grid, query: ChainQuery, strategy: str, caps: ChainCaps,
+               opts: Tuple, donate: bool):
+    def run(rels):
+        return execute_chain(grid, query, list(rels), strategy=strategy,
+                             caps=caps, **dict(opts))
+
+    return jax.jit(run, donate_argnums=(0,) if donate else ())
+
+
+def jit_execute_chain(grid: Grid, query: ChainQuery, *, strategy: str,
+                      caps: ChainCaps, donate: bool = True, **opts):
+    """Compile the *entire* chain-query execution into one XLA program.
+
+    Returns ``run(rels) -> (Relation, Stats, overflow)`` — the whole
+    lowering (every shuffle hop, local join, and aggregation round)
+    traced once and jitted as a unit, instead of dispatching each hop's
+    ops eagerly.  Because every buffer is static-shape, the program is
+    reusable for any inputs of the same capacities.  Programs are
+    cached so repeated calls with the same plan skip retracing: for
+    :class:`SimGrid` the key is (grid *shape*, query, strategy, caps,
+    options) — any equal-shaped SimGrid hits; for other grids the key
+    uses the grid *instance*, so reuse requires passing the same grid
+    object (constructing a fresh ShardGrid per call would recompile).
+
+    ``donate=True`` donates the input relation buffers to the computation
+    (XLA may reuse them for outputs — they must not be read afterwards;
+    backends without donation support, e.g. CPU, ignore it with a
+    warning).  Options (``measure_skew``, ``local_combine``,
+    ``include_final_agg``, ``join_impl``) forward to
+    :func:`execute_chain`.
+    """
+    opts_key = tuple(sorted(opts.items()))
+    if isinstance(grid, SimGrid):
+        return _compiled_sim_chain(grid.shape, query, strategy, caps,
+                                   opts_key, donate)
+    return _compiled_grid_chain(grid, query, strategy, caps, opts_key, donate)
 
 
 # ---------------------------------------------------------------------------
@@ -465,8 +546,9 @@ def default_chain_caps(stats: ChainStats, grid_shape: Sequence[int],
                        slack: int = 6) -> ChainCaps:
     """Size ChainCaps from exact statistics: each buffer gets its
     expected per-device share times a skew-slack factor.  ``slack``
-    trades memory for overflow headroom (``local_join`` buffers are
-    quadratic in capacity — keep it small on big intermediates)."""
+    trades memory for overflow headroom (sort-merge buffers are linear
+    in capacity, so generous slack is cheap; only the ``all_pairs``
+    oracle pays quadratically)."""
     n_dev = 1
     for s in grid_shape:
         n_dev *= s

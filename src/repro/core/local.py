@@ -1,15 +1,24 @@
-"""Per-device (per-"reducer") relational operators.
+"""Per-device (per-"reducer") relational operators — the data plane.
 
 These run inside one mesh shard (the reduce side of the paper's
 MapReduce jobs) or inside the simulated grid (vmapped).  Everything is
 static-shape: outputs have a caller-chosen capacity plus an overflow
 flag.
 
-The two hot-spots the paper's pipeline spends its time in — the
-map-phase *hash partition* (bucket histogram + in-bucket rank) and the
-*group-by aggregation* (segment sum) — have Pallas TPU kernels in
-``repro.kernels``; the implementations here are the pure-jnp semantics
-those kernels must match (see ``repro/kernels/ref.py``).
+The reduce-side hot path is **sort-merge**: :func:`sort_merge_join`
+(one stable sort per input, searchsorted probe, prefix-sum pair
+expansion — O(n log n + output) work and O(n + output) memory) and the
+single-pass :func:`groupby_sum` (one lexicographic sort feeding the
+``segment_sum`` kernel — Pallas on TPU, the bit-identical jnp oracle
+elsewhere, per ``repro/kernels/ref.py``).  The quadratic all-pairs
+join (:func:`local_join_allpairs`) and the multi-pass group-by
+(:func:`groupby_sum_multipass`) are kept as the oracle references the
+fast path is property-tested against; see docs/architecture.md
+"Data plane".
+
+The map-phase *hash partition* (bucket histogram + in-bucket rank)
+likewise has a Pallas TPU kernel in ``repro.kernels``; the
+implementation here is the pure-jnp semantics it must match.
 """
 
 from __future__ import annotations
@@ -19,7 +28,10 @@ from typing import Dict, Tuple
 import jax
 import jax.numpy as jnp
 
+from ..kernels import ops
 from .relation import Relation
+
+_I32_MAX = jnp.iinfo(jnp.int32).max
 
 
 # ---------------------------------------------------------------------------
@@ -79,17 +91,128 @@ def partition(rel: Relation, bucket: jnp.ndarray, n_buckets: int,
 # Local equi-join (the reduce-side join within one reducer)
 # ---------------------------------------------------------------------------
 
-def local_join(left: Relation, right: Relation, left_key: str, right_key: str,
-               out_capacity: int,
-               prefix_l: str = "", prefix_r: str = "",
-               ) -> Tuple[Relation, jnp.ndarray]:
+def _emit_join_columns(left: Relation, right: Relation, left_key: str,
+                       right_key: str, li_out: jnp.ndarray,
+                       ri_out: jnp.ndarray, valid_out: jnp.ndarray,
+                       prefix_l: str, prefix_r: str) -> Dict[str, jnp.ndarray]:
+    """Gather output columns for matched (left-row, right-row) index
+    pairs: the union of both inputs' columns, optional prefixes, the
+    shared key emitted once under the left key's unprefixed name."""
+    cols: Dict[str, jnp.ndarray] = {}
+    for n, c in left.cols.items():
+        name = n if n == left_key else prefix_l + n
+        cols[name] = jnp.where(valid_out, c[li_out], jnp.zeros((), c.dtype))
+    for n, c in right.cols.items():
+        if n == right_key:
+            continue  # key equal to left key; emitted once
+        name = prefix_r + n
+        if name in cols:
+            raise ValueError(f"column collision {name!r}; use prefixes")
+        cols[name] = jnp.where(valid_out, c[ri_out], jnp.zeros((), c.dtype))
+    return cols
+
+
+def _sorted_by_key(key: jnp.ndarray, valid: jnp.ndarray
+                   ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Stable sort by (validity, key): valid rows first in ascending key
+    order.  Returns (order, masked) where ``masked`` replaces the
+    trailing invalid rows' keys with INT32_MAX — non-decreasing even
+    when a *valid* key equals INT32_MAX (callers clamp searchsorted
+    results by the valid count to keep that collision harmless)."""
+    n = key.shape[0]
+    inv = (~valid).astype(jnp.int32)
+    _, sorted_key, order = jax.lax.sort(
+        (inv, key, jnp.arange(n, dtype=jnp.int32)), num_keys=2,
+        is_stable=True)
+    n_valid = jnp.sum(valid).astype(jnp.int32)
+    masked = jnp.where(jnp.arange(n) < n_valid, sorted_key, _I32_MAX)
+    return order, masked
+
+
+def sort_merge_join(left: Relation, right: Relation, left_key: str,
+                    right_key: str, out_capacity: int,
+                    prefix_l: str = "", prefix_r: str = "",
+                    ) -> Tuple[Relation, jnp.ndarray]:
+    """Equi-join two local relations on ``left_key == right_key`` by
+    sorted probe — the data-plane fast path.
+
+    One stable sort per input, then for every left row a
+    ``searchsorted(left)/searchsorted(right)`` run-length match count,
+    an exclusive prefix sum assigning contiguous output slots, and a
+    static-capacity gather expanding the match pairs — O((n + output)
+    log n) work and O(n + output) memory, never the ``nl×nr``
+    intermediate of :func:`local_join_allpairs`.
+
+    Output semantics match the all-pairs oracle exactly as a *set*:
+    same matched tuples, same overflow flag (total matches >
+    ``out_capacity``).  Only the row order differs (key order here,
+    left-major row order there) — and, under overflow, which subset of
+    matches is kept.
+    """
+    # Bound so the saturating scan's combine (a + b with a, b <= cap1)
+    # stays within int32: 2·(out_capacity + 1) must not reach 2^31.
+    if not 0 < out_capacity < 2 ** 30 - 1:
+        raise ValueError(f"out_capacity must be in (0, 2^30 - 1), got "
+                         f"{out_capacity}")
+    lk, rk = left.col(left_key), right.col(right_key)
+    nl, nr = lk.shape[0], rk.shape[0]
+    n_lv = jnp.sum(left.valid).astype(jnp.int32)
+    n_rv = jnp.sum(right.valid).astype(jnp.int32)
+
+    l_order, lk_m = _sorted_by_key(lk, left.valid)
+    r_order, rk_m = _sorted_by_key(rk, right.valid)
+
+    # Run-length probe: matches of sorted-left row i live in
+    # right-sorted positions [lo[i], hi[i]).  Clamping by the valid
+    # count drops the sentinel tail (incl. the INT32_MAX collision).
+    lo = jnp.minimum(jnp.searchsorted(rk_m, lk_m, side="left"), n_rv)
+    hi = jnp.minimum(jnp.searchsorted(rk_m, lk_m, side="right"), n_rv)
+    cnt = jnp.where(jnp.arange(nl) < n_lv, hi - lo, 0).astype(jnp.int32)
+
+    # Inclusive scan of the counts, *saturating* at out_capacity + 1: a
+    # plain int32 cumsum wraps once total matches exceed 2^31 (a 64k×64k
+    # heavy-hitter reducer has 2^32), silently clearing the overflow
+    # flag.  Saturating add is associative for inputs clamped to the
+    # cap, and below the cap the scan equals the true prefix — which is
+    # all the output ever reads: slots only go up to out_capacity − 1.
+    cap1 = jnp.int32(out_capacity + 1)
+    ends = jax.lax.associative_scan(
+        lambda a, b: jnp.minimum(a + b, cap1), jnp.minimum(cnt, cap1))
+    n_match = ends[-1]                        # min(total matches, cap + 1)
+    overflow = n_match > out_capacity
+
+    # Pair expansion: output slot s belongs to the first sorted-left row
+    # whose inclusive prefix count exceeds s; its offset within that
+    # row's run indexes the right-sorted range.  The owner's *start* is
+    # the previous row's scan value (exact: every prefix before the
+    # owner is below the cap, hence unsaturated).
+    slot = jnp.arange(out_capacity, dtype=jnp.int32)
+    owner = jnp.searchsorted(ends, slot, side="right")
+    owner = jnp.clip(owner, 0, nl - 1)
+    starts = jnp.concatenate([jnp.zeros((1,), jnp.int32), ends[:-1]])
+    off = slot - starts[owner]
+    r_pos = jnp.clip(lo[owner] + off, 0, nr - 1)
+
+    valid_out = slot < n_match
+    li_out = l_order[owner]
+    ri_out = r_order[r_pos]
+    cols = _emit_join_columns(left, right, left_key, right_key,
+                              li_out, ri_out, valid_out, prefix_l, prefix_r)
+    return Relation(cols, valid_out), overflow
+
+
+def local_join_allpairs(left: Relation, right: Relation, left_key: str,
+                        right_key: str, out_capacity: int,
+                        prefix_l: str = "", prefix_r: str = "",
+                        ) -> Tuple[Relation, jnp.ndarray]:
     """Equi-join two local relations on ``left_key == right_key``.
 
-    All-pairs compare with masks (static shape); the reducer in the
-    paper does the same work per key-group.  Output columns are the
-    union of both inputs' columns, with optional prefixes to
-    disambiguate (the shared key is emitted once, unprefixed name of
-    the left key).
+    All-pairs compare with masks (static shape) — the **oracle
+    reference** for :func:`sort_merge_join`: O(nl·nr) compute and
+    memory, simple enough to be obviously correct.  Used by the
+    property-based equivalence suite and available to the executor via
+    ``join_impl="all_pairs"``.  Structurally limited to nl·nr < 2^31
+    (the flat pair index is int32); sort-merge has no such limit.
     """
     lk, rk = left.col(left_key), right.col(right_key)
     match = (lk[:, None] == rk[None, :]) & left.valid[:, None] & right.valid[None, :]
@@ -108,39 +231,117 @@ def local_join(left: Relation, right: Relation, left_key: str, right_key: str,
     valid_out = (
         jnp.zeros((out_capacity + 1,), jnp.bool_).at[dest].set(flat, mode="drop")[:out_capacity]
     )
-
-    cols: Dict[str, jnp.ndarray] = {}
-    for n, c in left.cols.items():
-        name = n if n == left_key else prefix_l + n
-        cols[name] = jnp.where(valid_out, c[li_out], jnp.zeros((), c.dtype))
-    for n, c in right.cols.items():
-        if n == right_key:
-            continue  # key equal to left key; emitted once
-        name = prefix_r + n
-        if name in cols:
-            raise ValueError(f"column collision {name!r}; use prefixes")
-        cols[name] = jnp.where(valid_out, c[ri_out], jnp.zeros((), c.dtype))
+    cols = _emit_join_columns(left, right, left_key, right_key,
+                              li_out, ri_out, valid_out, prefix_l, prefix_r)
     return Relation(cols, valid_out), overflow
+
+
+JOIN_IMPLS = {
+    "sort_merge": sort_merge_join,
+    "all_pairs": local_join_allpairs,
+}
+
+
+def local_join(left: Relation, right: Relation, left_key: str, right_key: str,
+               out_capacity: int,
+               prefix_l: str = "", prefix_r: str = "",
+               impl: str = "sort_merge",
+               ) -> Tuple[Relation, jnp.ndarray]:
+    """Equi-join two local relations on ``left_key == right_key``.
+
+    Dispatches to :func:`sort_merge_join` (default) or the all-pairs
+    oracle (``impl="all_pairs"``).  Both return the same matched-tuple
+    set and overflow flag; only the row order (and, under overflow,
+    which matches are kept) differs.
+    """
+    try:
+        fn = JOIN_IMPLS[impl]
+    except KeyError:
+        raise ValueError(
+            f"unknown join impl {impl!r}; one of {sorted(JOIN_IMPLS)}")
+    return fn(left, right, left_key, right_key, out_capacity,
+              prefix_l=prefix_l, prefix_r=prefix_r)
 
 
 # ---------------------------------------------------------------------------
 # Local group-by-sum (the aggregation hot-spot; paper Section V)
 # ---------------------------------------------------------------------------
 
-def groupby_sum(rel: Relation, keys: Tuple[str, ...], value: str,
-                out_capacity: int | None = None
-                ) -> Tuple[Relation, jnp.ndarray]:
-    """SUM ``value`` grouped by ``keys`` (lexicographic sort + segment sum).
+def _group_heads(sorted_valid: jnp.ndarray, sorted_keys) -> Tuple[jnp.ndarray,
+                                                                  jnp.ndarray]:
+    """Given rows sorted by (validity, *keys): the group-head mask and
+    per-row group index (cumsum of heads − 1)."""
+    cap = sorted_valid.shape[0]
+    prev_same = jnp.ones((cap,), jnp.bool_)
+    for sk in sorted_keys:
+        prev_same = prev_same & (sk == jnp.roll(sk, 1))
+    head = sorted_valid & (~prev_same | (jnp.arange(cap) == 0))
+    seg_id = jnp.cumsum(head.astype(jnp.int32)) - 1
+    return head, seg_id
 
-    Matches the paper's aggregator: for matrix multiply, keys=("a","c")
-    and value="p".  Output capacity defaults to the input capacity.
+
+def groupby_sum(rel: Relation, keys: Tuple[str, ...], value: str,
+                out_capacity: int | None = None, *, backend: str = "auto",
+                ) -> Tuple[Relation, jnp.ndarray]:
+    """SUM ``value`` grouped by ``keys`` — the single-pass data-plane
+    aggregator.
+
+    One stable multi-key ``lax.sort`` orders the rows by the composite
+    key tuple (validity most significant, so padding sorts last) in a
+    single fused pass; run heads become segment ids and the per-segment
+    sums go through :func:`repro.kernels.ops.segment_sum` — the Pallas
+    MXU kernel on TPU, the bit-identical jnp oracle elsewhere.  Matches
+    the paper's aggregator: for matrix multiply, keys=("a","c") and
+    value="p".  Output capacity defaults to the input capacity;
+    ``overflow`` is raised when the group count exceeds it (the
+    surviving groups are the first ``out_capacity`` in key order, same
+    as the multipass oracle).
+    """
+    cap = rel.capacity
+    out_cap = out_capacity if out_capacity is not None else cap
+    inv = (~rel.valid).astype(jnp.int32)
+    operands = (inv,) + tuple(rel.cols[k] for k in keys) + (
+        jnp.arange(cap, dtype=jnp.int32),)
+    sorted_ops = jax.lax.sort(operands, num_keys=1 + len(keys), is_stable=True)
+    order = sorted_ops[-1]
+    sorted_valid = rel.valid[order]
+    sorted_keys = sorted_ops[1:1 + len(keys)]
+    sorted_val = rel.cols[value][order].astype(jnp.float32)
+
+    head, seg_id = _group_heads(sorted_valid, sorted_keys)
+    n_groups = jnp.sum(head)
+    overflow = n_groups > out_cap
+
+    # Segment ids are non-decreasing over the valid prefix — exactly the
+    # sorted-ids case the Pallas kernel prunes to the diagonal band.
+    # Invalid / overflowed rows get id out_cap, dropped by the kernel.
+    seg = jnp.where(sorted_valid, seg_id, out_cap)
+    sums = ops.segment_sum(jnp.where(sorted_valid, sorted_val, 0.0), seg,
+                           out_cap, backend=backend)
+    dest = jnp.where(sorted_valid & (seg_id < out_cap), seg_id, out_cap)
+    out_cols = {}
+    for k, sk in zip(keys, sorted_keys):
+        out_cols[k] = jnp.zeros((out_cap + 1,), sk.dtype).at[dest].set(
+            sk, mode="drop")[:out_cap]
+    out_cols[value] = sums
+    valid_out = jnp.arange(out_cap) < n_groups
+    return Relation(out_cols, valid_out), overflow
+
+
+def groupby_sum_multipass(rel: Relation, keys: Tuple[str, ...], value: str,
+                          out_capacity: int | None = None
+                          ) -> Tuple[Relation, jnp.ndarray]:
+    """SUM ``value`` grouped by ``keys`` (lexicographic argsort chain +
+    scatter-add) — the **oracle reference** for :func:`groupby_sum`:
+    ``len(keys)+1`` full argsorts, kept for the property-based
+    equivalence suite.
     """
     cap = rel.capacity
     out_cap = out_capacity if out_capacity is not None else cap
     # Stable lexicographic sort: least-significant key first.
     order = jnp.arange(cap, dtype=jnp.int32)
     for k in reversed(keys):
-        col = jnp.where(rel.valid[order], rel.cols[k][order], jnp.iinfo(jnp.int32).max)
+        col = jnp.where(rel.valid[order], rel.cols[k][order], _I32_MAX)
         order = order[jnp.argsort(col, stable=True)]
     # Invalid rows last: final pass on validity.
     order = order[jnp.argsort(~rel.valid[order], stable=True)]
@@ -149,11 +350,7 @@ def groupby_sum(rel: Relation, keys: Tuple[str, ...], value: str,
     sorted_keys = [rel.cols[k][order] for k in keys]
     sorted_val = rel.cols[value][order].astype(jnp.float32)
 
-    prev_same = jnp.ones((cap,), jnp.bool_)
-    for sk in sorted_keys:
-        prev_same = prev_same & (sk == jnp.roll(sk, 1))
-    head = sorted_valid & (~prev_same | (jnp.arange(cap) == 0))
-    seg_id = jnp.cumsum(head.astype(jnp.int32)) - 1  # group index per row
+    head, seg_id = _group_heads(sorted_valid, sorted_keys)
     n_groups = jnp.sum(head)
     overflow = n_groups > out_cap
 

@@ -60,13 +60,17 @@ def two_way_join(grid: Grid, left: Relation, right: Relation,
                  recv_capacity: int, out_capacity: int,
                  local_capacity: int | None = None,
                  prefix_l: str = "", prefix_r: str = "",
-                 salt: int = 0,
+                 salt: int = 0, join_impl: str = "sort_merge",
                  ) -> Tuple[Relation, Dict[str, jnp.ndarray], jnp.ndarray]:
     """R ⋈ S on left_key == right_key across the whole grid.
 
     Returns (per-device join shards, stats, overflow).  stats counts
     tuples in the paper's units: ``read`` (map input) and ``shuffled``
     (map output received by reducers) — cost of this round is their sum.
+
+    ``join_impl`` selects the reduce-side kernel: ``"sort_merge"``
+    (default, the sorted-probe fast path) or ``"all_pairs"`` (the
+    quadratic oracle) — same tuple set, stats, and overflow either way.
     """
     n_left = grid.reduce_sum(grid.map_devices(lambda r: r.count(), left))
     n_right = grid.reduce_sum(grid.map_devices(lambda r: r.count(), right))
@@ -78,7 +82,8 @@ def two_way_join(grid: Grid, left: Relation, right: Relation,
 
     def reduce_side(l: Relation, r: Relation):
         return local_join(l, r, left_key, right_key, out_capacity,
-                          prefix_l=prefix_l, prefix_r=prefix_r)
+                          prefix_l=prefix_l, prefix_r=prefix_r,
+                          impl=join_impl)
 
     joined, ovf_j = grid.map_devices(reduce_side, left_s, right_s)
     overflow = ovf_l | ovf_r | jnp.any(grid.reduce_any(ovf_j))

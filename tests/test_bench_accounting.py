@@ -1,0 +1,47 @@
+"""The data-plane swap must change seconds, not semantics.
+
+``tests/data/bench_counts_seed.json`` snapshots every tuple-count
+accounting field (``read`` / ``shuffled`` / ``max_bucket_load`` /
+``total``) of the checked-in ``BENCH_nway.json`` and ``BENCH_skew.json``
+as they stood *before* the sort-merge data plane landed.  Regenerating
+those files with the new reduce-side kernels must reproduce each field
+bit-identically: the join kernel decides how fast matches are found,
+never which tuples move.
+"""
+
+import json
+from pathlib import Path
+
+import pytest
+
+REPO = Path(__file__).resolve().parents[1]
+SNAPSHOT = REPO / "tests" / "data" / "bench_counts_seed.json"
+
+
+def extract_counts(obj, path=""):
+    """Flatten every accounting field to {json-path: value}."""
+    out = {}
+    if isinstance(obj, dict):
+        for k, v in obj.items():
+            p = f"{path}/{k}" if path else k
+            if k in ("read", "shuffled", "max_bucket_load", "total") and \
+                    isinstance(v, (int, float)):
+                out[p] = v
+            else:
+                out.update(extract_counts(v, p))
+    elif isinstance(obj, list):
+        for i, v in enumerate(obj):
+            out.update(extract_counts(v, f"{path}/{i}"))
+    return out
+
+
+@pytest.mark.parametrize("bench", ["BENCH_nway.json", "BENCH_skew.json"])
+def test_accounting_bit_identical_to_seed(bench):
+    path = REPO / bench
+    if not path.exists():
+        pytest.skip(f"{bench} not generated")
+    snapshot = json.loads(SNAPSHOT.read_text())[bench]
+    current = extract_counts(json.loads(path.read_text()))
+    assert current == snapshot, (
+        f"{bench} tuple-count accounting drifted from the pre-swap "
+        f"snapshot — the data plane changed semantics, not just speed")

@@ -1,0 +1,252 @@
+"""Deterministic data-plane equivalence tests (no hypothesis needed).
+
+Seeded sweeps of the same invariants tests/test_sort_merge.py checks
+property-based: the sort-merge fast path must match the quadratic
+oracles tuple-for-tuple, overflow-flag-for-overflow-flag.  These always
+run under the tier-1 gate; the hypothesis suite widens the search when
+the dev extra is installed.
+"""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import SimGrid, edge_relation, two_way_join
+from repro.core.local import (groupby_sum, groupby_sum_multipass,
+                              local_join_allpairs, sort_merge_join)
+from repro.core.relation import Relation
+
+I32_MAX = np.iinfo(np.int32).max
+
+
+def tuple_multiset(rel, names):
+    data = rel.to_numpy()
+    return sorted(zip(*[data[n].tolist() for n in names]))
+
+
+def make_pair(rng, n_left, n_right, domain, pad=0, invalid_frac=0.0):
+    left = Relation.from_arrays(
+        n_left + pad,
+        b=jnp.array(rng.integers(0, domain, n_left + pad), jnp.int32),
+        v=jnp.array(rng.normal(size=n_left + pad), jnp.float32))
+    right = Relation.from_arrays(
+        n_right + pad,
+        b=jnp.array(rng.integers(0, domain, n_right + pad), jnp.int32),
+        w=jnp.array(rng.normal(size=n_right + pad), jnp.float32))
+    if invalid_frac:
+        left = left.filter(jnp.array(rng.random(n_left + pad) >= invalid_frac))
+        right = right.filter(
+            jnp.array(rng.random(n_right + pad) >= invalid_frac))
+    return left, right
+
+
+@pytest.mark.parametrize("seed", range(12))
+def test_join_equivalence_seeded(seed):
+    """sort_merge_join == all-pairs oracle over random shapes, domains,
+    paddings, invalid fractions, and output capacities."""
+    rng = np.random.default_rng(seed)
+    for _ in range(6):
+        n_l, n_r = rng.integers(1, 50, 2)
+        domain = int(rng.integers(1, 16))
+        pad = int(rng.integers(0, 8))
+        invalid = float(rng.random() * 0.6)
+        out_cap = int(rng.integers(1, 200))
+        left, right = make_pair(rng, int(n_l), int(n_r), domain, pad, invalid)
+        got, ovf_s = sort_merge_join(left, right, "b", "b", out_cap)
+        want, ovf_a = local_join_allpairs(left, right, "b", "b", out_cap)
+        assert bool(ovf_s) == bool(ovf_a)
+        if not bool(ovf_a):
+            assert tuple_multiset(got, ("b", "v", "w")) == \
+                tuple_multiset(want, ("b", "v", "w"))
+        else:
+            assert int(got.count()) == int(want.count()) == out_cap
+
+
+def test_join_exact_capacity_boundary():
+    """capacity == n_matches keeps everything, no overflow;
+    capacity - 1 flags overflow — on both impls."""
+    rng = np.random.default_rng(5)
+    for _ in range(20):
+        n = int(rng.integers(2, 30))
+        left, right = make_pair(rng, n, n, int(rng.integers(1, 6)))
+        lk, rk = np.asarray(left.cols["b"]), np.asarray(right.cols["b"])
+        n_match = int((lk[:, None] == rk[None, :]).sum())
+        if n_match < 2:
+            continue
+        for fn in (sort_merge_join, local_join_allpairs):
+            out, ovf = fn(left, right, "b", "b", n_match)
+            assert not bool(ovf) and int(out.count()) == n_match
+            _, ovf = fn(left, right, "b", "b", n_match - 1)
+            assert bool(ovf)
+
+
+def test_join_sentinel_key_and_all_invalid():
+    left = Relation.from_arrays(
+        6, b=jnp.array([I32_MAX, 1, I32_MAX, 2], jnp.int32),
+        v=jnp.arange(4, dtype=jnp.float32))
+    right = Relation.from_arrays(
+        5, b=jnp.array([I32_MAX, 3, I32_MAX], jnp.int32),
+        w=jnp.arange(3, dtype=jnp.float32))
+    got, ovf = sort_merge_join(left, right, "b", "b", 16)
+    want, _ = local_join_allpairs(left, right, "b", "b", 16)
+    assert not bool(ovf) and int(got.count()) == 4
+    assert tuple_multiset(got, ("b", "v", "w")) == \
+        tuple_multiset(want, ("b", "v", "w"))
+
+    dead = Relation(dict(b=jnp.zeros(8, jnp.int32),
+                         v=jnp.zeros(8, jnp.float32)),
+                    jnp.zeros(8, jnp.bool_))
+    for fn in (sort_merge_join, local_join_allpairs):
+        out, ovf = fn(dead, right, "b", "b", 8)
+        assert not bool(ovf) and int(out.count()) == 0
+
+
+def test_join_overflow_survives_int32_wrap():
+    """A heavy-hitter reducer with > 2^31 true matches (one key shared
+    by two 50k inputs: 2.5e9 pairs) must still flag overflow and fill
+    the output — the saturating prefix scan must not wrap like a plain
+    int32 cumsum would."""
+    n = 50_000
+    left = Relation.from_arrays(n, b=jnp.zeros(n, jnp.int32),
+                                v=jnp.ones(n, jnp.float32))
+    right = Relation.from_arrays(n, b=jnp.zeros(n, jnp.int32),
+                                 w=jnp.full(n, 2.0, jnp.float32))
+    out, ovf = sort_merge_join(left, right, "b", "b", 1000)
+    assert bool(ovf)
+    assert int(out.count()) == 1000
+    data = out.to_numpy()
+    assert set(data["b"].tolist()) == {0}
+    assert set(data["v"].tolist()) == {1.0}
+    assert set(data["w"].tolist()) == {2.0}
+
+
+@pytest.mark.parametrize("grid_shape", [(2,), (2, 2)])
+def test_two_way_join_impl_parity(grid_shape):
+    """Through SimGrid (vmapped per-device path): identical tuple sets,
+    stats, and overflow for both join_impl settings."""
+    rng = np.random.default_rng(9)
+    n_edges, n_nodes = 40, 8
+    a, b, c, d = (rng.integers(0, n_nodes, n_edges).astype(np.int32)
+                  for _ in range(4))
+    n_dev = int(np.prod(grid_shape))
+    per = -(-n_edges // n_dev)
+
+    def scatter(rel):
+        pad = per * n_dev - rel.capacity
+        cols = {k: jnp.pad(v, (0, pad)).reshape(grid_shape + (per,))
+                for k, v in rel.cols.items()}
+        return Relation(cols, jnp.pad(rel.valid, (0, pad)).reshape(
+            grid_shape + (per,)))
+
+    R = scatter(edge_relation(a, b, names=("a", "b", "v")))
+    S = scatter(edge_relation(c, d, names=("b", "c", "w")))
+    grid = SimGrid(grid_shape)
+
+    results = {}
+    for impl in ("sort_merge", "all_pairs"):
+        out, stats, ovf = two_way_join(grid, R, S, "b", "b",
+                                       recv_capacity=256, out_capacity=4096,
+                                       join_impl=impl)
+        assert not bool(ovf)
+        flat = jax.tree.map(
+            lambda x: x.reshape((-1,) + x.shape[len(grid_shape):]), out)
+        got = set()
+        for dev in range(flat.valid.shape[0]):
+            sub = Relation({k: v[dev] for k, v in flat.cols.items()},
+                           flat.valid[dev])
+            got |= sub.to_tuple_set(("a", "b", "c"))
+        results[impl] = (got, {k: float(v) for k, v in stats.items()})
+    assert results["sort_merge"] == results["all_pairs"]
+    expect = {(int(x), int(y), int(z)) for x, y in zip(a, b)
+              for y2, z in zip(c, d) if y == y2}
+    assert results["sort_merge"][0] == expect
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_groupby_equivalence_seeded(seed):
+    """Single-pass groupby_sum == multipass oracle: keys/validity/
+    overflow bit-identical, sums allclose — incl. overflow capacities
+    and invalid rows."""
+    rng = np.random.default_rng(seed)
+    for _ in range(6):
+        n = int(rng.integers(1, 60))
+        domain = int(rng.integers(1, 10))
+        out_cap = int(rng.integers(1, 40))
+        rel = Relation.from_arrays(
+            n,
+            a=jnp.array(rng.integers(0, domain, n), jnp.int32),
+            c=jnp.array(rng.integers(0, domain, n), jnp.int32),
+            p=jnp.array(rng.normal(size=n), jnp.float32))
+        rel = rel.filter(jnp.array(rng.random(n) >= rng.random() * 0.7))
+        got, ovf_s = groupby_sum(rel, ("a", "c"), "p", out_cap)
+        want, ovf_m = groupby_sum_multipass(rel, ("a", "c"), "p", out_cap)
+        assert bool(ovf_s) == bool(ovf_m)
+        np.testing.assert_array_equal(np.asarray(got.valid),
+                                      np.asarray(want.valid))
+        for col in ("a", "c"):
+            np.testing.assert_array_equal(np.asarray(got.cols[col]),
+                                          np.asarray(want.cols[col]))
+        np.testing.assert_allclose(np.asarray(got.cols["p"]),
+                                   np.asarray(want.cols["p"]),
+                                   rtol=1e-5, atol=1e-5)
+
+
+def test_groupby_vmapped_parity():
+    rng = np.random.default_rng(3)
+    n = 24
+
+    def one():
+        return Relation.from_arrays(
+            n,
+            a=jnp.array(rng.integers(0, 5, n), jnp.int32),
+            c=jnp.array(rng.integers(0, 5, n), jnp.int32),
+            p=jnp.array(rng.normal(size=n), jnp.float32))
+
+    batched = jax.tree.map(lambda *xs: jnp.stack(xs),
+                           *[one() for _ in range(4)])
+    got, ovf_s = jax.vmap(lambda r: groupby_sum(r, ("a", "c"), "p"))(batched)
+    want, ovf_m = jax.vmap(
+        lambda r: groupby_sum_multipass(r, ("a", "c"), "p"))(batched)
+    np.testing.assert_array_equal(np.asarray(ovf_s), np.asarray(ovf_m))
+    np.testing.assert_array_equal(np.asarray(got.valid),
+                                  np.asarray(want.valid))
+    np.testing.assert_allclose(np.asarray(got.cols["p"]),
+                               np.asarray(want.cols["p"]),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("join_impl", ["sort_merge", "all_pairs"])
+def test_jitted_executor_matches_eager(join_impl):
+    """jit_execute_chain (whole-plan compilation) returns exactly what
+    the eager per-hop path returns, and caches per (plan, caps)."""
+    from repro.core import (ChainQuery, chain_edge_inputs, chain_stats_exact,
+                            default_chain_caps, execute_chain,
+                            jit_execute_chain)
+    rng = np.random.default_rng(11)
+    edges = [(rng.integers(0, 20, 40).astype(np.int32),
+              rng.integers(0, 20, 40).astype(np.int32)) for _ in range(3)]
+    stats = chain_stats_exact(edges)
+    query = ChainQuery.chain(3)
+    shape = (2, 2)
+    caps = default_chain_caps(stats, shape, slack=4)
+    grid = SimGrid(shape)
+    rels = chain_edge_inputs(query, edges, shape)
+
+    out_e, st_e, ovf_e = execute_chain(grid, query, rels,
+                                       strategy="one_round", caps=caps,
+                                       join_impl=join_impl)
+    run = jit_execute_chain(grid, query, strategy="one_round", caps=caps,
+                            donate=False, join_impl=join_impl)
+    out_j, st_j, ovf_j = run(tuple(rels))
+    assert bool(ovf_e) == bool(ovf_j) is False
+    assert {k: float(v) for k, v in st_e.items()} == \
+        {k: float(v) for k, v in st_j.items()}
+    np.testing.assert_array_equal(np.asarray(out_e.valid),
+                                  np.asarray(out_j.valid))
+    for k in out_e.cols:
+        np.testing.assert_array_equal(np.asarray(out_e.cols[k]),
+                                      np.asarray(out_j.cols[k]))
+    assert jit_execute_chain(grid, query, strategy="one_round", caps=caps,
+                             donate=False, join_impl=join_impl) is run

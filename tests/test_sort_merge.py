@@ -1,0 +1,210 @@
+"""Property-based equivalence suite for the sort-merge data plane.
+
+The fast path must be indistinguishable (as a relation: tuple multiset
++ overflow flag) from the quadratic oracles it replaced:
+
+  D1  sort_merge_join == local_join_allpairs for random key
+      distributions incl. duplicates, random invalid masks (up to
+      all-invalid), and exact output-capacity overflow boundaries
+  D2  the same through the vmapped per-device path (SimGrid
+      two_way_join with join_impl on both settings: identical tuple
+      sets, stats, and overflow)
+  D3  single-pass groupby_sum == multipass oracle: identical keys,
+      validity, overflow; sums allclose
+  D4  overflow boundary is exact on both join impls: capacity == total
+      matches keeps every match with no overflow; capacity - 1 flags
+
+The deterministic counterparts (always-run, no hypothesis) live in
+tests/test_data_plane.py.
+"""
+
+import numpy as np
+import pytest
+
+pytest.importorskip(
+    "hypothesis",
+    reason="property tests need hypothesis (pip install -e .[dev])")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import SimGrid, edge_relation, two_way_join
+from repro.core.local import (groupby_sum, groupby_sum_multipass,
+                              local_join_allpairs, sort_merge_join)
+from repro.core.relation import Relation
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+def make_relation(rng, n_rows, capacity, domain, key_name, val_name,
+                  invalid_frac=0.0):
+    keys = rng.integers(0, domain, n_rows).astype(np.int32)
+    vals = rng.normal(size=n_rows).astype(np.float32)
+    rel = Relation.from_arrays(capacity, **{key_name: jnp.array(keys),
+                                            val_name: jnp.array(vals)})
+    if invalid_frac:
+        keep = jnp.array(rng.random(capacity) >= invalid_frac)
+        rel = rel.filter(keep)
+    return rel
+
+
+def tuple_multiset(rel, names):
+    data = rel.to_numpy()
+    return sorted(zip(*[data[n].tolist() for n in names]))
+
+
+@settings(**SETTINGS)
+@given(n_left=st.integers(1, 60), n_right=st.integers(1, 60),
+       domain=st.integers(1, 20), pad=st.integers(0, 10),
+       out_cap=st.integers(1, 256), invalid=st.floats(0.0, 1.0),
+       seed=st.integers(0, 999))
+def test_d1_join_equivalence(n_left, n_right, domain, pad, out_cap, invalid,
+                             seed):
+    """D1: same tuples, same overflow, over duplicates / padding /
+    random invalid masks (up to all-invalid)."""
+    rng = np.random.default_rng(seed)
+    left = make_relation(rng, n_left, n_left + pad, domain, "b", "v", invalid)
+    right = make_relation(rng, n_right, n_right + pad, domain, "b", "w",
+                          invalid)
+    got, ovf_s = sort_merge_join(left, right, "b", "b", out_cap)
+    want, ovf_a = local_join_allpairs(left, right, "b", "b", out_cap)
+    assert bool(ovf_s) == bool(ovf_a)
+    if not bool(ovf_a):
+        assert tuple_multiset(got, ("b", "v", "w")) == \
+            tuple_multiset(want, ("b", "v", "w"))
+    else:
+        # under overflow both keep exactly out_cap matches (subsets may
+        # differ: key order vs row-major order)
+        assert int(got.count()) == int(want.count()) == out_cap
+
+
+@settings(**SETTINGS)
+@given(n=st.integers(1, 40), domain=st.integers(1, 8),
+       seed=st.integers(0, 999))
+def test_d4_exact_capacity_boundary(n, domain, seed):
+    """D4: out_capacity == n_matches is NOT overflow (every match kept);
+    out_capacity == n_matches - 1 is."""
+    rng = np.random.default_rng(seed)
+    left = make_relation(rng, n, n, domain, "b", "v")
+    right = make_relation(rng, n, n, domain, "b", "w")
+    lk, rk = np.asarray(left.cols["b"]), np.asarray(right.cols["b"])
+    n_match = int((lk[:, None] == rk[None, :]).sum())
+    if n_match == 0:
+        return
+    for fn in (sort_merge_join, local_join_allpairs):
+        out, ovf = fn(left, right, "b", "b", n_match)
+        assert not bool(ovf)
+        assert int(out.count()) == n_match
+    if n_match > 1:
+        for fn in (sort_merge_join, local_join_allpairs):
+            _, ovf = fn(left, right, "b", "b", n_match - 1)
+            assert bool(ovf)
+
+
+@settings(max_examples=10, deadline=None)
+@given(n_edges=st.integers(5, 50), n_nodes=st.integers(2, 10),
+       grid_shape=st.sampled_from([(2,), (4,), (2, 2)]),
+       seed=st.integers(0, 999))
+def test_d2_vmapped_two_way_join(n_edges, n_nodes, grid_shape, seed):
+    """D2: through SimGrid (the vmapped per-device path) both impls give
+    identical tuple sets, stats, and overflow."""
+    rng = np.random.default_rng(seed)
+    a, b = (rng.integers(0, n_nodes, n_edges).astype(np.int32)
+            for _ in range(2))
+    c, d = (rng.integers(0, n_nodes, n_edges).astype(np.int32)
+            for _ in range(2))
+    n_dev = int(np.prod(grid_shape))
+    per = -(-n_edges // n_dev)
+
+    def scatter(rel):
+        pad = per * n_dev - rel.capacity
+        cols = {k: jnp.pad(v, (0, pad)).reshape(grid_shape + (per,))
+                for k, v in rel.cols.items()}
+        return Relation(cols, jnp.pad(rel.valid, (0, pad)).reshape(
+            grid_shape + (per,)))
+
+    R = scatter(edge_relation(a, b, names=("a", "b", "v")))
+    S = scatter(edge_relation(c, d, names=("b", "c", "w")))
+    grid = SimGrid(grid_shape)
+
+    results = {}
+    for impl in ("sort_merge", "all_pairs"):
+        out, stats, ovf = two_way_join(grid, R, S, "b", "b",
+                                       recv_capacity=256, out_capacity=4096,
+                                       join_impl=impl)
+        assert not bool(ovf)
+        flat = jax.tree.map(
+            lambda x: x.reshape((-1,) + x.shape[len(grid_shape):]), out)
+        got = set()
+        for dev in range(flat.valid.shape[0]):
+            sub = Relation({k: v[dev] for k, v in flat.cols.items()},
+                           flat.valid[dev])
+            got |= sub.to_tuple_set(("a", "b", "c"))
+        results[impl] = (got, {k: float(v) for k, v in stats.items()})
+    assert results["sort_merge"] == results["all_pairs"]
+    expect = {(int(x), int(y), int(z)) for x, y in zip(a, b)
+              for y2, z in zip(c, d) if y == y2}
+    assert results["sort_merge"][0] == expect
+
+
+@settings(**SETTINGS)
+@given(n=st.integers(1, 60), pad=st.integers(0, 10),
+       domain=st.integers(1, 10), out_cap=st.integers(1, 40),
+       invalid=st.floats(0.0, 1.0), seed=st.integers(0, 999))
+def test_d3_groupby_equivalence(n, pad, domain, out_cap, invalid, seed):
+    """D3: single-pass groupby_sum == multipass oracle (keys, validity,
+    overflow bit-identical; sums allclose), incl. overflow boundaries
+    and random invalid masks."""
+    rng = np.random.default_rng(seed)
+    rel = Relation.from_arrays(
+        n + pad,
+        a=jnp.array(rng.integers(0, domain, n + pad), jnp.int32),
+        c=jnp.array(rng.integers(0, domain, n + pad), jnp.int32),
+        p=jnp.array(rng.normal(size=n + pad), jnp.float32))
+    rel = Relation(rel.cols, jnp.array(rng.random(n + pad) >= invalid)
+                   & rel.valid)
+    got, ovf_s = groupby_sum(rel, ("a", "c"), "p", out_cap)
+    want, ovf_m = groupby_sum_multipass(rel, ("a", "c"), "p", out_cap)
+    assert bool(ovf_s) == bool(ovf_m)
+    np.testing.assert_array_equal(np.asarray(got.valid),
+                                  np.asarray(want.valid))
+    for col in ("a", "c"):
+        np.testing.assert_array_equal(np.asarray(got.cols[col]),
+                                      np.asarray(want.cols[col]))
+    np.testing.assert_allclose(np.asarray(got.cols["p"]),
+                               np.asarray(want.cols["p"]),
+                               rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=6, deadline=None)
+@given(n=st.integers(1, 40), domain=st.integers(1, 8),
+       seed=st.integers(0, 999))
+def test_d3_groupby_vmapped(n, domain, seed):
+    """D3 on the vmapped per-device path (a stacked batch of reducers)."""
+    rng = np.random.default_rng(seed)
+
+    def one(_):
+        return Relation.from_arrays(
+            n,
+            a=jnp.array(rng.integers(0, domain, n), jnp.int32),
+            c=jnp.array(rng.integers(0, domain, n), jnp.int32),
+            p=jnp.array(rng.normal(size=n), jnp.float32))
+
+    rels = [one(i) for i in range(3)]
+    batched = jax.tree.map(lambda *xs: jnp.stack(xs), *rels)
+    got, ovf_s = jax.vmap(lambda r: groupby_sum(r, ("a", "c"), "p"))(batched)
+    want, ovf_m = jax.vmap(
+        lambda r: groupby_sum_multipass(r, ("a", "c"), "p"))(batched)
+    np.testing.assert_array_equal(np.asarray(ovf_s), np.asarray(ovf_m))
+    np.testing.assert_array_equal(np.asarray(got.valid),
+                                  np.asarray(want.valid))
+    np.testing.assert_allclose(np.asarray(got.cols["p"]),
+                               np.asarray(want.cols["p"]),
+                               rtol=1e-5, atol=1e-5)
+
+
+# The deterministic variants of these invariants (sentinel-key edge,
+# all-invalid inputs, jitted-vs-eager executor) always run under the
+# tier-1 gate in tests/test_data_plane.py; this module widens the
+# search space when hypothesis is installed.
