@@ -14,6 +14,12 @@ every quantity the paper's figures need is two BLAS matmuls:
   triangles= trace(A3)/3
 
 Multiplicities stay < 2²⁴ at these scales, so float32 matmuls are exact.
+
+Also usable as a CLI — print the stats dict as JSON for a graph spec:
+
+  PYTHONPATH=src python benchmarks/sparse_stats.py --dataset amazon
+  PYTHONPATH=src python benchmarks/sparse_stats.py --zipf 512,4096,1.2
+  PYTHONPATH=src python benchmarks/sparse_stats.py --star 64,448,4096,1.0
 """
 
 from __future__ import annotations
@@ -40,3 +46,67 @@ def self_join_stats(src: np.ndarray, dst: np.ndarray) -> Dict[str, float]:
     tri = float(np.trace(A3, dtype=np.float64) / 3.0)
     return {"r": r, "j1": j1, "a1": a1, "j3": j3, "nnz_a3": nnz_a3,
             "triangles": tri, "j1_over_r": j1 / max(r, 1.0)}
+
+
+def main():
+    import argparse
+    import json
+    import sys
+    from pathlib import Path
+
+    try:
+        import repro  # noqa: F401 — installed, or on PYTHONPATH
+    except ImportError:  # checkout fallback: src/ relative to this file
+        sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+    from repro.data.graphs import (DATASETS, GraphSpec, rmat_edges,
+                                   star_edges, zipf_edges)
+
+    ap = argparse.ArgumentParser(
+        description="Print exact self-join statistics as JSON for a graph "
+                    "spec (R-MAT dataset, Zipf edge list, or star/hub "
+                    "workload).")
+    src_group = ap.add_mutually_exclusive_group()
+    src_group.add_argument(
+        "--dataset", default="amazon", choices=sorted(DATASETS),
+        help="R-MAT dataset family (see repro.data.graphs.DATASETS)")
+    src_group.add_argument(
+        "--zipf", metavar="NODES,EDGES,ALPHA",
+        help="Zipf(alpha) edge list over NODES node ids")
+    src_group.add_argument(
+        "--star", metavar="HUBS,LEAVES,EDGES,SKEW",
+        help="bipartite hub→leaf list with Zipf(SKEW) fan-out")
+    ap.add_argument("--scale", type=int, default=None,
+                    help="override the dataset's log2 node count "
+                    "(keeps dense stats tractable)")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    if args.zipf:
+        nodes, edges, alpha = args.zipf.split(",")
+        src, dst = zipf_edges(int(nodes), int(edges), float(alpha),
+                              seed=args.seed)
+        spec = {"generator": "zipf", "n_nodes": int(nodes),
+                "n_edges": int(edges), "alpha": float(alpha)}
+    elif args.star:
+        hubs, leaves, edges, skew = args.star.split(",")
+        src, dst = star_edges(int(hubs), int(leaves), int(edges),
+                              float(skew), seed=args.seed)
+        spec = {"generator": "star", "n_hubs": int(hubs),
+                "n_leaves": int(leaves), "n_edges": int(edges),
+                "fanout_skew": float(skew)}
+    else:
+        ds = DATASETS[args.dataset]
+        if args.scale is not None:
+            ds = GraphSpec(ds.name, args.scale, ds.edge_factor, ds.a)
+        src, dst = rmat_edges(ds, seed=args.seed)
+        spec = {"generator": "rmat", "dataset": ds.name, "scale": ds.scale,
+                "edge_factor": ds.edge_factor, "a": ds.a}
+
+    out = {"spec": spec, "seed": args.seed, **self_join_stats(src, dst)}
+    json.dump(out, sys.stdout, indent=2)
+    print()
+
+
+if __name__ == "__main__":
+    main()

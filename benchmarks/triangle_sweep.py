@@ -1,0 +1,252 @@
+"""Triangle benchmark: the cycle query vs its chain+filter oracle.
+
+Triangle counting is now *a query, not an algorithm* — this benchmark
+runs it three ways on each graph and checks they agree with the host
+oracle while measured communication equals the analytic model exactly:
+
+* **cycle-Shares** — ``JoinQuery.triangle()`` one-round on the rank-3
+  join-attribute hypercube (integer shares from the general solver; at
+  the uniform optimum each attribute gets the classic ``k^{1/3}``
+  share).  Measured read must be Σ r_j and measured shuffle
+  Σ r_j · K/m_j, exactly.
+* **cycle-cascade** — the same query as two two-way rounds along the
+  planner's best join order, the closing ``c,a`` equalities filtering
+  at the second hop.  Measured total must equal
+  ``cost_query_cascade`` over the exact post-filter intermediates.
+* **chain+filter** — the historical oracle: enumerate the full 3-chain
+  (``ChainQuery.three_way()`` one-round Shares) and keep the ``a == d``
+  diagonal.  Measured communication must equal the chain cost model —
+  and its shuffle is the price of faking a cycle with a chain: the
+  whole 3-path result is enumerated before the filter throws most of
+  it away.
+
+Also sweeps the *analytic* one-round vs cascade costs over cluster
+sizes (the cycle counterpart of the paper's Fig. 3 crossover) and
+records the planner's choice.
+
+Emits ``BENCH_triangles.json`` (``--out`` to override).  ``--check``
+exits non-zero unless every measured==analytic and count==oracle gate
+holds (the CI triangle-sweep job runs ``--fast --check``).
+
+  PYTHONPATH=src python benchmarks/triangle_sweep.py [--fast] [--check]
+"""
+
+import argparse
+import json
+import sys
+
+from pathlib import Path
+
+try:
+    import repro  # noqa: F401 — installed, or on PYTHONPATH (ROADMAP: PYTHONPATH=src)
+except ImportError:  # checkout fallback: src/ relative to this file, not the cwd
+    sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+import numpy as np
+
+from repro.core import (ChainQuery, JoinQuery, SimGrid, chain_edge_inputs,
+                        chain_replications, chain_stats_exact,
+                        cost_query_cascade, cost_query_one_round,
+                        default_chain_caps, default_query_caps, execute_chain,
+                        execute_query, integer_shares, integer_shares_query,
+                        oracle_triangles, plan_query, query_replications,
+                        query_stats_exact, query_table_inputs,
+                        triangle_count_from_a3)
+from repro.data.graphs import DATASETS, GraphSpec, rmat_edges, zipf_edges
+
+SWEEP_K = (8, 64, 512, 4096)
+EXEC_K = 8                    # executable grid size for the measured runs
+
+
+def graph_suite(fast: bool):
+    """(name, (src, dst)) pairs — downscaled R-MAT families + a Zipf
+    list, small enough that the host oracle and the SimGrid runs are
+    CPU-cheap."""
+    def down(spec, scale, factor):
+        return GraphSpec(spec.name, scale, min(spec.edge_factor, factor),
+                         spec.a)
+
+    graphs = [("amazon", rmat_edges(down(DATASETS["amazon"], 8, 3.0), seed=1))]
+    if not fast:
+        graphs.append(("wikitalk",
+                       rmat_edges(down(DATASETS["wikitalk"], 7, 4.0), seed=1)))
+        graphs.append(("zipf-1.1", zipf_edges(128, 400, 1.1, seed=3)))
+    return graphs
+
+
+def stat_floats(st):
+    out = {k: float(v) for k, v in st.items()}
+    out.setdefault("total", out["read"] + out["shuffled"])
+    return out
+
+
+def run_cycle(query, edges, stats, strategy, grid_shape, join_order):
+    grid = SimGrid(grid_shape)
+    rels = query_table_inputs(query, [edges] * 3, grid_shape)
+    # Generous slack: the Zipf graph concentrates one hub's matches on a
+    # single reducer, and sort-merge buffers are linear in capacity.
+    caps = default_query_caps(query, stats, grid_shape, slack=16)
+    out, st, ovf = execute_query(grid, query, rels, strategy=strategy,
+                                 caps=caps, join_order=join_order,
+                                 measure_skew=True)
+    assert not bool(ovf), f"cycle {strategy} overflow — capacities undersized"
+    import jax.numpy as jnp
+    count = float(jnp.sum(out.valid)) / 3.0
+    return count, stat_floats(st)
+
+
+def run_chain_filter(edges, k):
+    """The oracle path: full 3-chain one-round Shares + diagonal filter."""
+    import jax.numpy as jnp
+    query = ChainQuery.three_way(aggregate=True)
+    cstats = chain_stats_exact([edges] * 3)
+    grid_shape = integer_shares(cstats.sizes, k)
+    grid = SimGrid(grid_shape)
+    rels = chain_edge_inputs(query, [edges] * 3, grid_shape)
+    # slack == n_devices makes every buffer total-sized (lossless): on
+    # skewed graphs one reducer can hold nearly the whole 3-chain.
+    n_dev = 1
+    for s in grid_shape:
+        n_dev *= s
+    caps = default_chain_caps(cstats, grid_shape, slack=n_dev)
+    a3, st, ovf = execute_chain(grid, query, rels, strategy="one_round",
+                                caps=caps, measure_skew=True)
+    assert not bool(ovf), "chain+filter overflow — capacities undersized"
+    count = float(triangle_count_from_a3(a3))
+    repl = chain_replications(cstats.sizes, grid_shape)
+    j3 = cstats.prefix_joins[-1]
+    # 1,3JA accounting: Shares placement (read Σr, shuffle Σ r·K/m) plus
+    # the charged aggregation round over the raw 3-chain result (read j3,
+    # shuffle j3) — the 2·r''' term the cycle query never pays.
+    analytic = {
+        "read": sum(cstats.sizes) + j3,
+        "shuffled": sum(r * f for r, f in zip(cstats.sizes, repl)) + j3,
+    }
+    st = stat_floats(st)
+    match = (st["read"] == analytic["read"]
+             and st["shuffled"] == analytic["shuffled"])
+    return count, st, analytic, match, list(grid_shape)
+
+
+def bench_graph(name, edges):
+    src, dst = edges
+    tri_oracle = oracle_triangles(src, dst)
+    query = JoinQuery.triangle()
+    stats = query_stats_exact(query, [edges] * 3)
+    rel_dims = query.rel_dims()
+    sizes = stats.sizes
+
+    plan = plan_query(query, stats, EXEC_K)
+    analytic_sweep = {
+        str(k): {
+            "one_round": cost_query_one_round(rel_dims, sizes, k),
+            "cascade": stats.best_order()[1],
+        } for k in SWEEP_K
+    }
+
+    # --- measured: cycle one-round Shares -------------------------------
+    grid_shape = integer_shares_query(rel_dims, sizes, EXEC_K)
+    tri_one, st_one = run_cycle(query, edges, stats, "one_round", grid_shape,
+                                plan.join_order)
+    repl = query_replications(rel_dims, grid_shape)
+    one_analytic = {
+        "read": sum(sizes),
+        "shuffled": sum(r * f for r, f in zip(sizes, repl)),
+    }
+    one = {
+        "grid_shape": list(grid_shape), **st_one,
+        "analytic_shuffled": one_analytic["shuffled"],
+        "triangles": tri_one,
+        "match": st_one["read"] == one_analytic["read"]
+        and st_one["shuffled"] == one_analytic["shuffled"],
+    }
+
+    # --- measured: cycle cascade ----------------------------------------
+    order, casc_analytic = stats.best_order()
+    inter = stats.intermediates[stats.orders.index(order)]
+    tri_casc, st_casc = run_cycle(query, edges, stats, "cascade", (EXEC_K,),
+                                  order)
+    casc = {
+        "grid_shape": [EXEC_K], "join_order": list(order), **st_casc,
+        "analytic_total": casc_analytic,
+        "intermediates": list(inter),
+        "triangles": tri_casc,
+        "match": st_casc["total"] == casc_analytic,
+    }
+
+    # --- measured: chain + filter (the oracle path) ---------------------
+    tri_chain, st_chain, chain_analytic, chain_match, chain_grid = \
+        run_chain_filter(edges, EXEC_K)
+    chain = {
+        "grid_shape": chain_grid, **st_chain,
+        "analytic": chain_analytic,
+        "triangles": tri_chain,
+        "match": chain_match,
+    }
+
+    # Counts are multiples of 1/3; the chain+filter path sums float32
+    # path counts, so compare at nearest-third precision.
+    def thirds(x):
+        return round(3.0 * x)
+
+    counts_ok = (thirds(tri_one) == thirds(tri_oracle)
+                 and thirds(tri_casc) == thirds(tri_oracle)
+                 and thirds(tri_chain) == thirds(tri_oracle))
+    return {
+        "graph": name,
+        "edges": float(len(src)),
+        "triangles_oracle": tri_oracle,
+        "planner_choice": plan.algorithm,
+        "planner_costs": plan.costs,
+        "analytic_costs": analytic_sweep,
+        "measured": {"k": EXEC_K, "cycle_one_round": one,
+                     "cycle_cascade": casc, "chain_filter": chain},
+        "counts_match_oracle": counts_ok,
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="one small graph (the CI smoke configuration)")
+    ap.add_argument("--check", action="store_true",
+                    help="exit non-zero unless measured==analytic and all "
+                         "counts equal the oracle")
+    ap.add_argument("--out", default="BENCH_triangles.json")
+    args = ap.parse_args()
+
+    report = {
+        "benchmark": "triangle_sweep",
+        "sweep_k": list(SWEEP_K),
+        "exec_k": EXEC_K,
+        "graphs": {},
+    }
+    all_ok = True
+    for name, edges in graph_suite(args.fast):
+        row = bench_graph(name, edges)
+        report["graphs"][name] = row
+        m = row["measured"]
+        match_ok = all(m[s]["match"] for s in ("cycle_one_round",
+                                               "cycle_cascade",
+                                               "chain_filter"))
+        all_ok &= match_ok and row["counts_match_oracle"]
+        print(f"{name}: triangles={row['triangles_oracle']:.0f} "
+              f"planner={row['planner_choice']} "
+              f"measured==analytic: {'MATCH' if match_ok else 'MISMATCH'} "
+              f"counts: {'OK' if row['counts_match_oracle'] else 'WRONG'}")
+        for s in ("cycle_one_round", "cycle_cascade", "chain_filter"):
+            print(f"   {s:15s} total={m[s]['total']:.0f} "
+                  f"max_load={m[s]['max_bucket_load']:.0f} "
+                  f"grid={m[s]['grid_shape']}")
+
+    with open(args.out, "w") as f:
+        json.dump(report, f, indent=2)
+    print(f"wrote {args.out}")
+    if args.check and not all_ok:
+        print("CHECK FAILED: measured != analytic or counts != oracle")
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

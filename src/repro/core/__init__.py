@@ -1,4 +1,4 @@
-"""The paper's primary contribution: distributed chain joins.
+"""The paper's primary contribution: distributed multi-way joins.
 
 Public API, by layer:
 
@@ -6,94 +6,119 @@ Public API, by layer:
     Relation                   — fixed-capacity columnar relation + mask
     SimGrid, ShardGrid         — simulated / shard_map reducer grids
 
-  Logical plan IR (``help(ChainQuery)`` for the query semantics)
-    ChainQuery, ChainAggregate — N-way chain joins as data
+  Logical plan IR (``help(JoinQuery)`` for the query semantics)
+    JoinQuery, QueryAggregate  — join hypergraphs as data (chains,
+                                 cycles/triangles, stars, cliques)
+    ChainQuery, ChainAggregate — the chain special case, validated
 
   Physical executor
-    execute_chain              — run a query with a planner strategy
-    jit_execute_chain          — the same, compiled once per (plan, caps)
-    one_round_chain            — Shares hypercube (1,NJ / 1,NJA)
-    cascade_chain              — left-deep cascade (+ pushdown)
+    execute_query              — run any query with a planner strategy
+    jit_execute_query          — the same, compiled once per (plan, caps)
+    one_round_query            — Shares hypercube, one dim per join attr
+    cascade_query              — left-deep cascade with cycle-closing filters
+    execute_chain / jit_execute_chain / one_round_chain / cascade_chain
+                               — the chain surface (pushdown cascades)
     shares_skew_chain          — SharesSkew heavy/residual union (1,NJS)
     two_way_join, distributed_groupby_sum — per-round building blocks
     one_round_three_way, cascade_three_way[_agg], one_round_three_way_agg
                                — the paper's three-way entry points
+    query_table_inputs / chain_edge_inputs, default_query_caps /
+    default_chain_caps         — input placement and capacity sizing
 
   Data plane (docs/architecture.md "Data plane")
     sort_merge_join, groupby_sum        — sorted-probe reduce-side kernels
     local_join_allpairs, groupby_sum_multipass — the oracle references
     (every lowering takes join_impl ∈ {"sort_merge", "all_pairs"})
 
-  Statistics, cost model, planner (``help(plan_chain)``)
-    ChainStats (+ key_freqs sketch), JoinStats, chain_stats_exact
-    cost_* formulas, optimal_shares_chain / integer_shares,
+  Statistics, cost model, planner (``help(plan_query)`` / ``help(plan_chain)``)
+    QueryStats / query_stats_exact, ChainStats (+ key_freqs sketch),
+    JoinStats, chain_stats_exact
+    cost_* formulas, optimal_shares_query / integer_shares_query
+    (general hypergraphs), optimal_shares_chain / integer_shares,
     crossover_reducers[_chain], skew_crossover_scale
-    plan_chain / plan_three_way — cost-based choice among
-    {Shares, SharesSkew, cascade, cascade+pushdown}
+    plan_query — {one-round Shares on the join-attr hypercube, best
+    join-tree cascade} for any query; plan_chain / plan_three_way —
+    chains, adding {cascade+pushdown, SharesSkew}
 
   Skew layer (docs/skew.md)
     heavy_hitters, chain_key_sketch, detect_chain_skew,
     SkewSplitPlan, SkewCombo, balance_threshold
 
   Workloads
-    spmm / a_cubed / triangles — join-based matmul & graph analytics
+    spmm / a_cubed — join-based matmul & graph analytics
+    triangle_count_cycle — the triangle as a cyclic query (primary path)
+    triangle_count_chain_filter / oracle_triangles — its oracles
 """
 
 from .relation import Relation, concat, flatten_leading
 from .shuffle import Grid, ShardGrid, SimGrid, broadcast_along, shuffle_by_bucket
-from .plan import ChainAggregate, ChainQuery
+from .plan import ChainAggregate, ChainQuery, JoinQuery, QueryAggregate
 from .two_way import two_way_join
-from .executor import (ChainCaps, cascade_chain, chain_edge_inputs,
-                       default_chain_caps, execute_chain, jit_execute_chain,
-                       one_round_chain, scatter_to_grid, shares_skew_chain)
+from .executor import (ChainCaps, cascade_chain, cascade_query,
+                       chain_edge_inputs, default_chain_caps,
+                       default_query_caps, execute_chain, execute_query,
+                       jit_execute_chain, jit_execute_query, one_round_chain,
+                       one_round_query, query_table_inputs, scatter_to_grid,
+                       shares_skew_chain)
 from .local import (groupby_sum, groupby_sum_multipass, local_join,
                     local_join_allpairs, sort_merge_join)
 from .one_round import one_round_three_way
 from .cascade import cascade_three_way, cascade_three_way_agg, one_round_three_way_agg
 from .aggregation import distributed_groupby_sum, project_product
-from .cost_model import (ChainStats, JoinStats, balance_threshold,
-                         chain_replications, cost_cascade, cost_cascade_agg,
-                         cost_chain_cascade, cost_chain_cascade_pushdown,
-                         cost_chain_one_round, cost_chain_one_round_agg,
-                         cost_chain_shares_skew, cost_one_round,
-                         cost_one_round_agg, cost_two_way,
-                         crossover_reducers, estimate_join_size, hop_excess,
-                         hop_peak_load, integer_shares, optimal_k1_k2,
-                         optimal_shares_chain, skew_clamped_shape)
-from .planner import (ChainPlan, Plan, chain_stats_exact,
+from .cost_model import (ChainStats, JoinStats, QueryStats,
+                         balance_threshold, chain_replications, cost_cascade,
+                         cost_cascade_agg, cost_chain_cascade,
+                         cost_chain_cascade_pushdown, cost_chain_one_round,
+                         cost_chain_one_round_agg, cost_chain_shares_skew,
+                         cost_one_round, cost_one_round_agg,
+                         cost_query_cascade, cost_query_one_round,
+                         cost_two_way, crossover_reducers, estimate_join_size,
+                         hop_excess, hop_peak_load, integer_shares,
+                         integer_shares_query, optimal_k1_k2,
+                         optimal_shares_chain, optimal_shares_query,
+                         query_replications, skew_clamped_shape)
+from .planner import (ChainPlan, Plan, QueryPlan, chain_stats_exact,
                       chain_stats_from_three_way, crossover_reducers_chain,
-                      plan_chain, plan_three_way, self_join_stats,
-                      self_join_stats_exact, skew_crossover_scale)
+                      plan_chain, plan_query, plan_three_way, query_stats_exact,
+                      self_join_stats, self_join_stats_exact,
+                      skew_crossover_scale)
 from .skew import (SkewCombo, SkewSplitPlan, chain_key_sketch,
                    detect_chain_skew, heavy_hitters)
 from .matmul import (a_cubed, edge_relation, oracle_a3, oracle_triangles,
-                     spmm, triangle_count_from_a3)
+                     spmm, triangle_count_chain_filter, triangle_count_cycle,
+                     triangle_count_from_a3)
 
 __all__ = [
     "Relation", "concat", "flatten_leading",
     "Grid", "SimGrid", "ShardGrid", "broadcast_along", "shuffle_by_bucket",
-    "ChainQuery", "ChainAggregate", "ChainCaps",
+    "JoinQuery", "QueryAggregate", "ChainQuery", "ChainAggregate", "ChainCaps",
+    "execute_query", "jit_execute_query", "one_round_query", "cascade_query",
     "execute_chain", "jit_execute_chain", "one_round_chain", "cascade_chain",
     "shares_skew_chain",
-    "scatter_to_grid", "chain_edge_inputs", "default_chain_caps",
+    "scatter_to_grid", "query_table_inputs", "chain_edge_inputs",
+    "default_query_caps", "default_chain_caps",
     "sort_merge_join", "local_join", "local_join_allpairs",
     "groupby_sum", "groupby_sum_multipass",
     "two_way_join", "one_round_three_way",
     "cascade_three_way", "cascade_three_way_agg", "one_round_three_way_agg",
     "distributed_groupby_sum", "project_product",
-    "JoinStats", "ChainStats", "cost_two_way", "cost_one_round",
+    "JoinStats", "ChainStats", "QueryStats", "cost_two_way", "cost_one_round",
     "cost_cascade", "cost_cascade_agg", "cost_one_round_agg",
     "cost_chain_one_round", "cost_chain_one_round_agg",
     "cost_chain_cascade", "cost_chain_cascade_pushdown",
     "cost_chain_shares_skew", "skew_clamped_shape",
+    "cost_query_one_round", "cost_query_cascade", "query_replications",
+    "optimal_shares_query", "integer_shares_query",
     "balance_threshold", "hop_peak_load", "hop_excess",
     "chain_replications", "optimal_shares_chain", "integer_shares",
     "crossover_reducers", "estimate_join_size", "optimal_k1_k2",
-    "Plan", "ChainPlan", "plan_three_way", "plan_chain",
+    "Plan", "ChainPlan", "QueryPlan", "plan_three_way", "plan_chain",
+    "plan_query", "query_stats_exact",
     "chain_stats_from_three_way", "chain_stats_exact", "crossover_reducers_chain",
     "self_join_stats", "self_join_stats_exact", "skew_crossover_scale",
     "SkewSplitPlan", "SkewCombo", "heavy_hitters", "chain_key_sketch",
     "detect_chain_skew",
     "spmm", "a_cubed", "edge_relation", "triangle_count_from_a3",
+    "triangle_count_cycle", "triangle_count_chain_filter",
     "oracle_a3", "oracle_triangles",
 ]

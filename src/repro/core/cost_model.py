@@ -133,7 +133,8 @@ def optimal_shares_chain(sizes: Sequence[float], k: int) -> Tuple[float, ...]:
     shares = _chain_shares_interior(sizes, k)
     if min(shares) >= 1.0 - 1e-9:
         return tuple(max(s, 1.0) for s in shares)
-    return _chain_shares_projected(sizes, k)
+    return _shares_clamped(sizes, [_hashed_dims(j, n) for j in range(n)],
+                           n - 1, k)
 
 
 def _chain_shares_interior(sizes: Sequence[float], k: int) -> Tuple[float, ...]:
@@ -172,18 +173,16 @@ def _chain_shares_interior(sizes: Sequence[float], k: int) -> Tuple[float, ...]:
     return tuple(math.exp(P[d] - U[d] * A - W[d] * B) for d in range(n - 1))
 
 
-def _chain_shares_projected(sizes: Sequence[float], k: int,
-                            iters: int = 4000) -> Tuple[float, ...]:
+def _shares_projected(sizes: Sequence[float], Dj, dims: int, k: int,
+                      iters: int = 4000) -> Tuple[float, ...]:
     """Projected gradient on x_d = ln k_d over the simplex
-    {x ≥ 0, Σ x = ln K} — the clamped (boundary) case the closed form
-    cannot express.  The objective Σ r_j exp(−Σ_{d∈D_j} x_d) is convex
-    in x, so this converges to the constrained optimum."""
+    {x ≥ 0, Σ x = ln K} — the clamped (boundary) case the closed forms
+    cannot express, for an arbitrary incidence ``Dj`` (per-relation
+    pinned-dim tuples).  The objective Σ r_j exp(−Σ_{d∈D_j} x_d) is
+    convex in x, so this converges to the constrained optimum."""
     import numpy as np
-    n = len(sizes)
-    dims = n - 1
     L = math.log(k)
     r = np.asarray(sizes, np.float64) / max(sizes)
-    Dj = [_hashed_dims(j, n) for j in range(n)]
     x = np.full(dims, L / dims)
 
     def project(y):
@@ -210,6 +209,21 @@ def _chain_shares_projected(sizes: Sequence[float], k: int,
                 break
             last = cost
     return tuple(math.exp(v) for v in x)
+
+
+def _shares_clamped(sizes: Sequence[float], rel_dims, dims: int, k: int,
+                    ) -> Tuple[float, ...]:
+    """Shares optimum with the k_d ≥ 1 constraints potentially active:
+    the pairwise Lagrangean alternation (box clamping built into each
+    closed-form move) against the projected-gradient refinement as a
+    safety net — the cheaper answer wins.  (Plain gradient descent
+    descends slowly when the optimum sits on the boundary; the
+    alternation lands there directly.)"""
+    balanced = _shares_alternation(sizes, rel_dims, dims, k)
+    projected = _shares_projected(sizes, rel_dims, dims, k)
+    cost_b = cost_query_one_round(rel_dims, sizes, k, shares=balanced)
+    cost_p = cost_query_one_round(rel_dims, sizes, k, shares=projected)
+    return balanced if cost_b <= cost_p else projected
 
 
 def integer_shares(sizes: Sequence[float], k: int) -> Tuple[int, ...]:
@@ -280,6 +294,227 @@ def cost_chain_one_round_agg(sizes: Sequence[float], k: int,
     """1,NJA cost: the one-round join + 2·|full join| — the raw result
     must be materialized and shipped to the aggregators."""
     return cost_chain_one_round(sizes, k, shares) + 2.0 * full_join
+
+
+# ---------------------------------------------------------------------------
+# General hypergraph formulas (Shares over an arbitrary query hypergraph)
+# ---------------------------------------------------------------------------
+#
+# A query hypergraph assigns each *join attribute* (one shared by >= 2
+# relations) a hypercube dim with share k_d; relation j pins the dims of
+# its own join attributes, D_j.  With m_j := prod_{d in D_j} k_d and
+# K = prod k_d, one-round communication is read Σ r_j + shuffle
+# Σ r_j · K/m_j — the chain formulas above are the special case where
+# D_j = {j−1, j}.  ``rel_dims`` below is the incidence: one tuple of
+# pinned dims per relation (``JoinQuery.rel_dims()``).
+
+def _incidence_dims(rel_dims: Sequence[Sequence[int]]) -> int:
+    return 1 + max(d for D in rel_dims for d in D) if any(rel_dims) else 0
+
+
+def query_replications(rel_dims: Sequence[Sequence[int]],
+                       shares: Sequence[float]) -> Tuple[float, ...]:
+    """Per-relation replication factor K/m_j for explicit shares on an
+    arbitrary hypergraph incidence."""
+    K = math.prod(shares)
+    out = []
+    for D in rel_dims:
+        m = math.prod(shares[d] for d in D)
+        out.append(K / m)
+    return tuple(out)
+
+
+def cost_query_one_round(rel_dims: Sequence[Sequence[int]],
+                         sizes: Sequence[float], k: int,
+                         shares: Optional[Sequence[float]] = None) -> float:
+    """One-round Shares cost on an arbitrary hypergraph: Σ r_j +
+    Σ r_j · K/m_j.  With ``shares`` omitted, the optimal share vector
+    from :func:`optimal_shares_query` is used.  On a chain incidence
+    this equals :func:`cost_chain_one_round`; on the uniform triangle at
+    the optimum it is 3r + 3r·k^{1/3}."""
+    if shares is None:
+        shares = optimal_shares_query(rel_dims, sizes, k)
+    repl = query_replications(rel_dims, shares)
+    return sum(sizes) + sum(r * f for r, f in zip(sizes, repl))
+
+
+def cost_query_cascade(ordered_sizes: Sequence[float],
+                       intermediates: Sequence[float]) -> float:
+    """Cascade cost along one left-deep join order: Σ rounds 2·(left +
+    right), with ``intermediates[i]`` the size of the running
+    intermediate *after* round i+1 — post-filter, when the round closes
+    a cycle (the closing predicate is applied reduce-side, so only the
+    filtered tuples are shipped onward).  The last entry is the output,
+    never charged.  Identical in form to :func:`cost_chain_cascade`."""
+    return cost_chain_cascade(ordered_sizes, intermediates)
+
+
+def _is_chain_incidence(rel_dims: Sequence[Sequence[int]]) -> bool:
+    """True iff the incidence is exactly the chain pattern D_j =
+    {j−1, j} ∩ [0, n−2] — the case the closed form solves."""
+    n = len(rel_dims)
+    if n < 2 or _incidence_dims(rel_dims) != n - 1:
+        return False
+    return all(tuple(rel_dims[j]) == _hashed_dims(j, n) for j in range(n))
+
+
+def _shares_alternation(sizes: Sequence[float],
+                        rel_dims: Sequence[Sequence[int]], dims: int, k: int,
+                        sweeps: int = 400) -> Tuple[float, ...]:
+    """Lagrangean alternation for the Shares optimum on an arbitrary
+    hypergraph, with the k_d ≥ 1 constraints native.
+
+    The KKT conditions of min Σ r_j K/m_j s.t. ∏ k_d = K say every dim
+    carries the same total communication.  The alternation enforces this
+    pairwise: moving share mass δ between dims (d1, d2) in log space
+    keeps Σ ln k_d fixed, and only relations pinning *exactly one* of
+    the two feel it, so the objective restricted to the move is
+    ``A·e^{−δ} + B·e^{δ} + C`` (A/B = the traffic pinned by d1/d2
+    alone) — minimized in closed form at δ = ½·ln(A/B), clamped to the
+    box ``x ≥ 0``.  Every move is exact and the objective convex, with
+    the pairwise directions spanning the constraint surface, so cyclic
+    sweeps converge to the constrained optimum — boundary (clamped)
+    optima included, which is where plain gradient descent stalls.
+    Symmetric hypergraphs are exact at the uniform start: the uniform
+    triangle keeps ln k/3 per dim, i.e. the classic k^{1/3} shares."""
+    L = math.log(k)
+    scale = max(sizes)
+    r = [s / scale for s in sizes]
+    x = [L / dims] * dims
+    for _ in range(sweeps):
+        moved = 0.0
+        for d1 in range(dims):
+            for d2 in range(d1 + 1, dims):
+                A = B = 0.0
+                for rj, D in zip(r, rel_dims):
+                    in1, in2 = d1 in D, d2 in D
+                    if in1 == in2:
+                        continue     # pins both or neither: e^{−δ}·e^{δ} = 1
+                    t = rj * math.exp(-sum(x[d] for d in D))
+                    if in1:
+                        A += t
+                    else:
+                        B += t
+                if A <= 0.0 and B <= 0.0:
+                    continue
+                if B <= 0.0:
+                    delta = x[d2]          # all pressure on d1: push to the box
+                elif A <= 0.0:
+                    delta = -x[d1]
+                else:
+                    delta = 0.5 * math.log(A / B)
+                delta = min(max(delta, -x[d1]), x[d2])
+                if delta != 0.0:
+                    x[d1] += delta
+                    x[d2] -= delta
+                    moved = max(moved, abs(delta))
+        if moved <= 1e-14:
+            break
+    return tuple(math.exp(v) for v in x)
+
+
+def optimal_shares_query(rel_dims: Sequence[Sequence[int]],
+                         sizes: Sequence[float], k: int) -> Tuple[float, ...]:
+    """Optimal (real-valued) share vector for an arbitrary query
+    hypergraph — the Afrati–Ullman Shares optimum.
+
+    Chain incidences delegate to :func:`optimal_shares_chain`
+    (bit-for-bit: same closed form, same clamping path).  Otherwise the
+    pairwise Lagrangean alternation (:func:`_shares_alternation`) does
+    the work — exact at the uniform start for symmetric hypergraphs
+    (the uniform triangle gets k^{1/3} per attribute), with the
+    k_d ≥ 1 box built into every move — and the projected-gradient
+    refinement stands by as a safety net (:func:`_shares_clamped`)."""
+    rel_dims = tuple(tuple(D) for D in rel_dims)
+    if len(rel_dims) != len(sizes):
+        raise ValueError(f"{len(sizes)} sizes for {len(rel_dims)} relations")
+    dims = _incidence_dims(rel_dims)
+    if dims == 0:
+        raise ValueError("query has no join attributes (cross product)")
+    if dims == 1:
+        return (float(max(k, 1)),)   # one shared attribute: hash, no replication
+    if k <= 1:
+        return (1.0,) * dims         # single reducer: nothing to split
+    if _is_chain_incidence(rel_dims):
+        return optimal_shares_chain(sizes, k)
+    return _shares_clamped(sizes, rel_dims, dims, k)
+
+
+def integer_shares_query(rel_dims: Sequence[Sequence[int]],
+                         sizes: Sequence[float], k: int) -> Tuple[int, ...]:
+    """Executable share vector for an arbitrary hypergraph: greedy
+    factor-2 refinement of (1,..,1) towards the optimum, keeping
+    ∏ shares ≤ k — the general counterpart of :func:`integer_shares`
+    (identical choices on chain incidences)."""
+    rel_dims = tuple(tuple(D) for D in rel_dims)
+    dims = _incidence_dims(rel_dims)
+    if dims == 0:
+        raise ValueError("query has no join attributes (cross product)")
+    if dims == 1:
+        return (max(1, k),)
+    shares = [1] * dims
+    while math.prod(shares) * 2 <= k:
+        best_d, best_cost = None, None
+        for d in range(dims):
+            trial = list(shares)
+            trial[d] *= 2
+            c = cost_query_one_round(rel_dims, sizes, math.prod(trial),
+                                     shares=trial)
+            if best_cost is None or c < best_cost:
+                best_d, best_cost = d, c
+        shares[best_d] *= 2
+    return tuple(shares)
+
+
+@dataclasses.dataclass(frozen=True)
+class QueryStats:
+    """Cardinality statistics for a general join query.
+
+    sizes:         per-relation tuple counts (query order).
+    orders:        candidate connected left-deep join orders (tuples of
+                   relation indices).
+    intermediates: per order, the running intermediate sizes after each
+                   round — *post-filter* at cycle-closing hops; the
+                   last entry is the full output (never charged).
+    hop_joins:     per order, the raw per-hop local-join sizes *before*
+                   cycle-closing filters — what sizes the executor's
+                   join buffers (equals ``intermediates`` on acyclic
+                   hops).
+    agg_groups:    |Γ(result)| for the query's aggregate, if any.
+    chain:         the :class:`ChainStats` view when the query is a
+                   chain — lets the planner delegate to the chain
+                   machinery (pushdown pricing, SharesSkew) unchanged.
+    """
+    sizes: Tuple[float, ...]
+    orders: Tuple[Tuple[int, ...], ...]
+    intermediates: Tuple[Tuple[float, ...], ...]
+    hop_joins: Tuple[Tuple[float, ...], ...]
+    agg_groups: Optional[float] = None
+    chain: Optional["ChainStats"] = None
+
+    def __post_init__(self):
+        if not (len(self.orders) == len(self.intermediates)
+                == len(self.hop_joins)) or not self.orders:
+            raise ValueError("need parallel, non-empty orders/intermediates/"
+                             "hop_joins")
+
+    @property
+    def n_relations(self) -> int:
+        return len(self.sizes)
+
+    @property
+    def full_output(self) -> float:
+        """Size of the query result (same along every order)."""
+        return self.intermediates[0][-1]
+
+    def best_order(self) -> Tuple[Tuple[int, ...], float]:
+        """The cheapest cascade order and its cost."""
+        best, best_cost = None, math.inf
+        for order, inter in zip(self.orders, self.intermediates):
+            c = cost_query_cascade([self.sizes[i] for i in order], inter)
+            if c < best_cost:
+                best, best_cost = order, c
+        return best, best_cost
 
 
 # ---------------------------------------------------------------------------

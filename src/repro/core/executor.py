@@ -1,33 +1,40 @@
-"""Physical executor: lower a :class:`ChainQuery` onto a reducer Grid.
+"""Physical executor: lower a :class:`JoinQuery` onto a reducer Grid.
 
-Three lowering strategies, written once for any chain length N (the
-first two run on any grid backend, SimGrid / ShardGrid):
+The lowerings are written once for *any* connected query hypergraph —
+chains, cycles (triangles), stars, cliques — and run on either grid
+backend (SimGrid / ShardGrid):
 
-* :func:`one_round_chain` — the Afrati–Ullman *Shares* join on an
-  (N−1)-dimensional hypercube.  Dim d hashes join attribute A_{d+2};
-  relation R_j pins the dims of its own join attributes and is
-  replicated (``broadcast_along``) over every other dim — the
-  generalization of 1,3J's "S to one device, R to its row, T to its
-  column".  For N=3 on a k1×k2 grid this is exactly ``one_round.py``.
+* :func:`one_round_query` — the Afrati–Ullman *Shares* join on a
+  hypercube with one dimension per join attribute.  Relation R_j pins
+  the dims of its own join attributes and is replicated
+  (``broadcast_along``) over every other dim — the generalization of
+  1,3J's "S to one device, R to its row, T to its column".  The reduce
+  side chains local joins along a connected left-deep order; when a
+  hop closes a cycle (the incoming relation shares more than one
+  attribute with the accumulated result), the extra equalities are
+  applied as post-join *filters* at that hop.  For a chain on its
+  (N−1)-dim grid this is bit-for-bit the historical
+  :func:`one_round_chain` (kept as a thin alias).
 
-* :func:`cascade_chain` — the left-deep cascade of ``two_way_join``
-  rounds, with the paper's aggregation *pushdown* applied greedily
-  after every non-final round (Γ over the running endpoint attribute
-  pair shrinks each intermediate before it is shuffled again).  For
-  N=3 this is exactly 2,3J / 2,3JA.
+* :func:`cascade_query` — the left-deep cascade of ``two_way_join``
+  rounds along a planner-chosen join order, cycle-closing predicates
+  again filtering at the closing hop; aggregated queries run one final
+  charged aggregation round.  Chain queries with endpoint aggregates
+  should use :func:`cascade_chain`, which adds the paper's aggregation
+  *pushdown* (sound only for chains) after every non-final round.
 
 * :func:`shares_skew_chain` — the skew-aware *SharesSkew* union: one
   Shares sub-join per heavy/residual combination of the join
   attributes, each on the plain hypercube with its heavy dims clamped
   to share 1 (heavy tuples broadcast there).  Driven by a
-  :class:`repro.core.skew.SkewSplitPlan`; SimGrid only.
+  :class:`repro.core.skew.SkewSplitPlan`; SimGrid only; chains only.
 
 Every lowering takes a ``join_impl`` knob selecting the reduce-side
 join kernel — ``"sort_merge"`` (default, the sorted-probe data plane)
 or ``"all_pairs"`` (the quadratic oracle) — and
-:func:`jit_execute_chain` compiles a whole (plan, caps) execution into
-one cached XLA program with donated input buffers, instead of per-hop
-dispatch.
+:func:`jit_execute_query` / :func:`jit_execute_chain` compile a whole
+(plan, caps) execution into one cached XLA program with donated input
+buffers, instead of per-hop dispatch.
 
 Cost accounting is paper-faithful and identical to the three-way
 implementations: each round charges read + shuffled tuples; the final
@@ -53,7 +60,7 @@ from . import hashing
 from .aggregation import distributed_groupby_sum, project_product
 from .cost_model import ChainStats, chain_replications
 from .local import groupby_sum, local_join
-from .plan import ChainQuery
+from .plan import ChainQuery, JoinQuery
 from .relation import Relation, concat
 from .shuffle import Grid, SimGrid, broadcast_along, shuffle_by_bucket
 from .two_way import two_way_join
@@ -111,20 +118,65 @@ def _hop_load(grid: Grid, rel: Relation, key: str, n_buckets: int,
 
 
 # ---------------------------------------------------------------------------
-# One-round Shares join on the (N-1)-dim hypercube
+# One-round Shares join on the join-attribute hypercube
 # ---------------------------------------------------------------------------
 
-def one_round_chain(grid: Grid, query: ChainQuery, rels: Sequence[Relation], *,
-                    caps: ChainCaps, measure_skew: bool = False,
+_CLOSE = "_cc_"        # rename prefix for cycle-closing duplicate attrs
+
+
+def _join_steps(query: JoinQuery, order: Sequence[int]):
+    """Left-deep reduce-side plan along ``order``: per hop, the incoming
+    relation index, the equi-join attribute (the first shared one, in
+    the relation's attribute order), and the remaining shared attributes
+    — the cycle-closing equalities applied as post-join filters."""
+    order = tuple(order)
+    if sorted(order) != list(range(query.n_relations)):
+        raise ValueError(f"join order {order} is not a permutation of "
+                         f"the {query.n_relations} relations")
+    acc = set(query.relations[order[0]])
+    steps = []
+    for j in order[1:]:
+        shared = [a for a in query.relations[j] if a in acc]
+        if not shared:
+            raise ValueError(f"join order {order} disconnects at relation {j}")
+        steps.append((j, shared[0], tuple(shared[1:])))
+        acc |= set(query.relations[j])
+    return steps
+
+
+def _close_cycle(acc: Relation, extras: Sequence[str]) -> Relation:
+    """Apply the closing hop's extra equalities (`attr == _cc_attr`) and
+    drop the renamed duplicates."""
+    mask = jnp.ones(acc.valid.shape, jnp.bool_)
+    for a in extras:
+        mask = mask & (acc.col(a) == acc.col(_CLOSE + a))
+    cols = {n: c for n, c in acc.cols.items()
+            if n not in {_CLOSE + a for a in extras}}
+    return Relation(cols, acc.valid & mask)
+
+
+def one_round_query(grid: Grid, query: JoinQuery, rels: Sequence[Relation], *,
+                    caps: ChainCaps, join_order: Optional[Sequence[int]] = None,
+                    measure_skew: bool = False,
                     join_impl: str = "sort_merge",
                     ) -> Tuple[Relation, Stats, jnp.ndarray]:
-    """One MapReduce round: place every relation on the hypercube, then
-    join locally.  Shuffled cost is Σ_j r_j · K / (∏ shares R_j pins) —
-    the N-way Shares communication charge, measured exactly."""
+    """One MapReduce round: place every relation on the join-attribute
+    hypercube, then join locally.  Shuffled cost is Σ_j r_j · K /
+    (∏ shares R_j pins) — the Shares communication charge for an
+    arbitrary query hypergraph, measured exactly.
+
+    The reduce side chains local joins along ``join_order`` (default:
+    the query's greedy connected order); a hop whose relation shares
+    several attributes with the running result equi-joins on the first
+    and filters the rest — the cycle-closing predicates.  Tuples that
+    agree on *all* their join attributes land on the same device (each
+    relation is hashed on every join attribute it contains), so the
+    per-device joins compose to the global result."""
     n = query.n_relations
     query.check_relations(rels)
-    if len(grid.shape) != n - 1:
-        raise ValueError(f"a {n}-way chain needs a rank-{n - 1} grid, "
+    ndims = query.n_dims
+    if len(grid.shape) != ndims:
+        raise ValueError(f"a {n}-relation query needs a rank-{ndims} grid, "
                          f"got shape {grid.shape}")
 
     read = sum(_count(grid, r) for r in rels)
@@ -148,7 +200,7 @@ def one_round_chain(grid: Grid, query: ChainQuery, rels: Sequence[Relation], *,
             cur, ovf, _ = shuffle_by_bucket(grid, cur, bucket, d, caps.recv,
                                             local_capacity=caps.local)
             overflow = overflow | ovf
-        for d in range(n - 1):               # replicate over the rest
+        for d in range(ndims):               # replicate over the rest
             if d in hashed or grid.shape[d] == 1:
                 continue
             cur, ovf = broadcast_along(grid, cur, d, caps.local)
@@ -156,17 +208,24 @@ def one_round_chain(grid: Grid, query: ChainQuery, rels: Sequence[Relation], *,
         placed.append(cur)
 
     # Reduce side: left-deep chain of local joins (pure per-device work).
+    order = tuple(join_order) if join_order is not None \
+        else query.default_join_order()
+    steps = _join_steps(query, order)
     out_caps = [caps.mid] * (n - 2) + [caps.join if (query.aggregate and
                                                      caps.join) else caps.out]
 
     def reduce_side(*shards: Relation):
-        acc = shards[0]
+        acc = shards[order[0]]
         ovf = jnp.zeros((), jnp.bool_)
-        for j in range(1, n):
-            key = query.attrs[j]
-            acc, o = local_join(acc, shards[j], key, key, out_caps[j - 1],
+        for i, (j, key, extras) in enumerate(steps):
+            right = shards[j]
+            if extras:
+                right = right.rename({a: _CLOSE + a for a in extras})
+            acc, o = local_join(acc, right, key, key, out_caps[i],
                                 impl=join_impl)
             ovf = ovf | o
+            if extras:
+                acc = _close_cycle(acc, extras)
         return acc, ovf
 
     joined, ovf_j = grid.map_devices(reduce_side, *placed)
@@ -198,9 +257,108 @@ def one_round_chain(grid: Grid, query: ChainQuery, rels: Sequence[Relation], *,
     return out, merge_stats(stats, st_a), overflow | ovf_a
 
 
+def one_round_chain(grid: Grid, query: ChainQuery, rels: Sequence[Relation], *,
+                    caps: ChainCaps, measure_skew: bool = False,
+                    join_impl: str = "sort_merge",
+                    ) -> Tuple[Relation, Stats, jnp.ndarray]:
+    """The historical chain entry point — now the chain instance of
+    :func:`one_round_query` (default join order ``0..N−1`` on the
+    rank-(N−1) grid), bit-for-bit unchanged."""
+    return one_round_query(grid, query, rels, caps=caps,
+                           measure_skew=measure_skew, join_impl=join_impl)
+
+
 # ---------------------------------------------------------------------------
-# Left-deep cascade with greedy aggregation pushdown
+# Left-deep cascade: general queries (cycle-closing filters), then chains
+# (with the paper's aggregation pushdown)
 # ---------------------------------------------------------------------------
+
+def cascade_query(grid: Grid, query: JoinQuery, rels: Sequence[Relation], *,
+                  caps: ChainCaps, join_order: Optional[Sequence[int]] = None,
+                  local_combine: bool = False,
+                  measure_skew: bool = False,
+                  join_impl: str = "sort_merge",
+                  ) -> Tuple[Relation, Stats, jnp.ndarray]:
+    """N−1 rounds of two-way joins along a connected left-deep
+    ``join_order`` (default: the query's greedy order).
+
+    Each round equi-joins the running intermediate with the next
+    relation on their first shared attribute across the whole grid; any
+    further shared attributes — the cycle-closing predicates — are
+    applied as per-device post-join filters at that hop, so only tuples
+    satisfying the closing equalities ship onward.  Aggregated queries
+    run one final *charged* aggregation round (general queries have no
+    sound intermediate pushdown; chains should use
+    :func:`cascade_chain`, which pushes the aggregation down between
+    rounds).
+
+    Cost accounting is the paper's: each round charges read + shuffled
+    on both inputs, so the measured total equals
+    :func:`repro.core.cost_model.cost_query_cascade` over the order's
+    post-filter intermediate sizes, exactly.
+    """
+    n = query.n_relations
+    query.check_relations(rels)
+    agg = query.aggregate
+    order = tuple(join_order) if join_order is not None \
+        else query.default_join_order()
+    steps = _join_steps(query, order)
+
+    k_flat = 1
+    for s in grid.shape:
+        k_flat *= s
+
+    all_stats: List[Stats] = []
+    overflow = jnp.zeros((), jnp.bool_)
+    skew = jnp.zeros((), jnp.float32)
+
+    left = rels[order[0]]
+    left_cap = None                       # None => first round uses caps.recv
+    value_cols: List[str] = \
+        [query.values[order[0]]] if query.values[order[0]] else []
+
+    for i, (j, key, extras) in enumerate(steps):
+        right = rels[j]
+        if extras:
+            right = right.rename({a: _CLOSE + a for a in extras})
+        recv = caps.recv if left_cap is None else max(left_cap, caps.recv)
+        local = caps.local if left_cap is None else max(left_cap, caps.recv)
+        out_cap = caps.out if i == n - 2 else caps.mid
+        if measure_skew:
+            skew = jnp.maximum(skew, _hop_load(grid, left, key, k_flat,
+                                               salt=i))
+            skew = jnp.maximum(skew, _hop_load(grid, right, key, k_flat,
+                                               salt=i))
+        left, st, ovf = two_way_join(
+            grid, left, right, key, key,
+            recv_capacity=recv, out_capacity=out_cap,
+            local_capacity=local, salt=i, join_impl=join_impl)
+        if extras:
+            left = grid.map_devices(
+                lambda r, _e=extras: _close_cycle(r, _e), left)
+        all_stats.append(st)
+        overflow = overflow | ovf
+        left_cap = out_cap
+        if query.values[j]:
+            value_cols.append(query.values[j])
+
+    if agg is not None:
+        # Final Γ_{keys; SUM ∏ values} — a charged aggregation round
+        # (the raw result ships to the aggregators: the 2·|result| term).
+        proj = project_product(grid, left, keys=tuple(agg.keys),
+                               value_cols=value_cols, out_name=agg.out)
+        fin_cap = caps.out
+        left, st_f, ovf_f = distributed_groupby_sum(
+            grid, proj, keys=tuple(agg.keys), value=agg.out,
+            recv_capacity=fin_cap, out_capacity=fin_cap,
+            local_capacity=fin_cap, local_combine=local_combine)
+        overflow = overflow | ovf_f
+        all_stats.append(st_f)
+
+    stats = merge_stats(*all_stats)
+    if measure_skew:
+        stats["max_bucket_load"] = skew
+    return left, stats, overflow
 
 def cascade_chain(grid: Grid, query: ChainQuery, rels: Sequence[Relation], *,
                   caps: ChainCaps, pushdown: bool = True,
@@ -452,6 +610,63 @@ def execute_chain(grid: Grid, query: ChainQuery, rels: Sequence[Relation], *,
     raise ValueError(f"unknown strategy {strategy!r}")
 
 
+def execute_query(grid: Grid, query: JoinQuery, rels: Sequence[Relation], *,
+                  strategy: str, caps: ChainCaps,
+                  join_order: Optional[Sequence[int]] = None,
+                  measure_skew: bool = False, local_combine: bool = False,
+                  include_final_agg: bool = False,
+                  join_impl: str = "sort_merge",
+                  ) -> Tuple[Relation, Stats, jnp.ndarray]:
+    """Execute a general :class:`JoinQuery` — chain, cycle, star, or any
+    connected hypergraph — with a planner-chosen strategy:
+
+    * ``"one_round"``        — Shares hypercube, one dim per join
+      attribute (:func:`one_round_query`);
+    * ``"cascade"``          — left-deep two-way rounds along
+      ``join_order``, cycle-closing predicates filtering at their hop
+      (:func:`cascade_query`); aggregated queries add a charged final
+      aggregation round;
+    * ``"cascade_pushdown"`` — the chain-only pushdown cascade
+      (:func:`cascade_chain`); requires the query hypergraph to be a
+      chain in relation order (``chain_attr_order()``), since pushing
+      Γ between rounds is only sound for endpoint aggregates.
+
+    ``join_order`` defaults to the query's greedy connected order; the
+    planner's :class:`~repro.core.planner.QueryPlan` carries the
+    cost-chosen one.  ``join_impl`` selects the reduce-side kernel as
+    everywhere else.  The skew-aware ``"shares_skew"`` strategy stays
+    chain-only — see :func:`shares_skew_chain`.
+    """
+    if strategy == "one_round":
+        return one_round_query(grid, query, rels, caps=caps,
+                               join_order=join_order,
+                               measure_skew=measure_skew,
+                               join_impl=join_impl)
+    if strategy == "cascade":
+        return cascade_query(grid, query, rels, caps=caps,
+                             join_order=join_order,
+                             measure_skew=measure_skew,
+                             local_combine=local_combine,
+                             join_impl=join_impl)
+    if strategy == "cascade_pushdown":
+        order = query.chain_attr_order()
+        if query.aggregate is None or order is None or order != query.attrs:
+            raise ValueError("cascade_pushdown needs an aggregated chain "
+                             "query (pushdown between rounds is only sound "
+                             "for endpoint aggregates on a chain)")
+        return cascade_chain(grid, query, rels, caps=caps, pushdown=True,
+                             measure_skew=measure_skew,
+                             local_combine=local_combine,
+                             include_final_agg=include_final_agg,
+                             join_impl=join_impl)
+    if strategy == "shares_skew":
+        raise ValueError(
+            "shares_skew runs per-combination grids and is chain-only; call "
+            "shares_skew_chain(query, flat_rels, plan, caps=...) with the "
+            "SkewSplitPlan from repro.core.skew.detect_chain_skew")
+    raise ValueError(f"unknown strategy {strategy!r}")
+
+
 # ---------------------------------------------------------------------------
 # Whole-plan compilation: one XLA program per (plan, caps)
 # ---------------------------------------------------------------------------
@@ -510,6 +725,44 @@ def jit_execute_chain(grid: Grid, query: ChainQuery, *, strategy: str,
     return _compiled_grid_chain(grid, query, strategy, caps, opts_key, donate)
 
 
+@functools.lru_cache(maxsize=128)
+def _compiled_sim_query(grid_shape: Tuple[int, ...], query: JoinQuery,
+                        strategy: str, caps: ChainCaps, opts: Tuple,
+                        donate: bool):
+    return _jit_query(SimGrid(grid_shape), query, strategy, caps, opts,
+                      donate)
+
+
+@functools.lru_cache(maxsize=32)
+def _compiled_grid_query(grid: Grid, query: JoinQuery, strategy: str,
+                         caps: ChainCaps, opts: Tuple, donate: bool):
+    return _jit_query(grid, query, strategy, caps, opts, donate)
+
+
+def _jit_query(grid: Grid, query: JoinQuery, strategy: str, caps: ChainCaps,
+               opts: Tuple, donate: bool):
+    def run(rels):
+        return execute_query(grid, query, list(rels), strategy=strategy,
+                             caps=caps, **dict(opts))
+
+    return jax.jit(run, donate_argnums=(0,) if donate else ())
+
+
+def jit_execute_query(grid: Grid, query: JoinQuery, *, strategy: str,
+                      caps: ChainCaps, donate: bool = True, **opts):
+    """Compile an *entire* general-query execution into one XLA program
+    — :func:`jit_execute_chain` lifted to :class:`JoinQuery` (same
+    caching, donation, and reuse semantics).  Options (``join_order``,
+    ``measure_skew``, ``local_combine``, ``include_final_agg``,
+    ``join_impl``) forward to :func:`execute_query`; a ``join_order``
+    list must be passed as a tuple (the cache key hashes it)."""
+    opts_key = tuple(sorted(opts.items()))
+    if isinstance(grid, SimGrid):
+        return _compiled_sim_query(grid.shape, query, strategy, caps,
+                                   opts_key, donate)
+    return _compiled_grid_query(grid, query, strategy, caps, opts_key, donate)
+
+
 # ---------------------------------------------------------------------------
 # Driver helpers: input placement and capacity sizing
 # ---------------------------------------------------------------------------
@@ -540,6 +793,63 @@ def chain_edge_inputs(query: ChainQuery, edge_lists,
         rels.append(scatter_to_grid(
             edge_relation(src, dst, names=(a, b, v)), grid_shape))
     return rels
+
+
+def query_table_inputs(query: JoinQuery, tables,
+                       grid_shape: Sequence[int]) -> List[Relation]:
+    """Column tables -> scattered per-relation inputs named by the query
+    schema.  ``tables[j]`` is a tuple of equal-length key column arrays
+    matching relation j's attribute tuple; a trailing value column may
+    be included, otherwise a ones value column is synthesized when the
+    schema asks for one (so edge lists ``(src, dst)`` work for any
+    binary relation — the general counterpart of
+    :func:`chain_edge_inputs`)."""
+    rels = []
+    for j, cols in enumerate(tables):
+        names = query.schema(j)
+        arity = len(query.relations[j])
+        if len(cols) not in (arity, len(names)):
+            raise ValueError(f"relation {j} needs {arity} key columns "
+                             f"(+ optional value), got {len(cols)}")
+        arrays = {names[i]: jnp.asarray(c, jnp.int32)
+                  for i, c in enumerate(cols[:arity])}
+        if query.values[j] is not None:
+            val = (jnp.asarray(cols[arity], jnp.float32)
+                   if len(cols) > arity
+                   else jnp.ones_like(arrays[names[0]], dtype=jnp.float32))
+            arrays[query.values[j]] = val
+        rels.append(scatter_to_grid(Relation.from_arrays(**arrays),
+                                    grid_shape))
+    return rels
+
+
+def default_query_caps(query: JoinQuery, stats, grid_shape: Sequence[int],
+                       slack: int = 6) -> ChainCaps:
+    """Size ChainCaps for a general query from exact
+    :class:`~repro.core.cost_model.QueryStats`: every buffer gets its
+    expected per-device share times a skew-slack factor.  Join buffers
+    are sized by the largest *raw* per-hop join over the candidate
+    orders (cycle-closing hops equi-join before they filter, so their
+    buffers must hold the pre-filter matches)."""
+    from .cost_model import query_replications
+    n_dev = 1
+    for s in grid_shape:
+        n_dev *= s
+
+    def per(total):
+        return int(total * slack / n_dev) + 256
+
+    repl = max(query_replications(query.rel_dims(), grid_shape)) \
+        if len(grid_shape) == query.n_dims else 1.0
+    biggest = max(max(stats.sizes),
+                  max((h for hops in stats.hop_joins for h in hops),
+                      default=0.0))
+    return ChainCaps(
+        recv=per(max(stats.sizes) * repl),
+        mid=per(biggest), out=per(biggest),
+        local=per(max(stats.sizes) * repl),
+        agg=per(stats.agg_groups or 256.0),
+        join=per(biggest))
 
 
 def default_chain_caps(stats: ChainStats, grid_shape: Sequence[int],

@@ -4,6 +4,16 @@ A sparse matrix is a relation M(row, col, val).  One join + group-by =
 one matmul; the three-way self-join + aggregation = A³ restricted to
 listed entries — friend-of-friend path counts; its diagonal / 3 is the
 triangle count.
+
+Triangle counting is now *a query, not an algorithm*: the primary path
+(:func:`triangle_count_cycle`) plans and executes ``JoinQuery.triangle()``
+— the cyclic R(a,b) ⋈ S(b,c) ⋈ T(c,a) — through the general engine.
+The historical chain+filter path (enumerate the full 3-chain via
+:func:`a_cubed`, then keep the ``a == d`` diagonal with
+:func:`triangle_count_from_a3`, wrapped as
+:func:`triangle_count_chain_filter`) is retained as the engine-level
+oracle the cycle path is regression-tested against, alongside the
+host-side :func:`oracle_triangles`.
 """
 
 from __future__ import annotations
@@ -77,9 +87,64 @@ def a_cubed(grid: Grid, src, dst, *, algorithm: str, caps: Dict[str, int],
 def triangle_count_from_a3(a3: Relation) -> jnp.ndarray:
     """#triangles = Σ_{a=d} p(a,d) / 3 for a directed cycle count — the
     paper's diagonal rule (each directed 3-cycle is counted at each of
-    its 3 starting nodes)."""
+    its 3 starting nodes).  With :func:`a_cubed` this is the chain+filter
+    path: enumerate/aggregate the full 3-chain, then post-filter the
+    diagonal — the engine-level oracle the cycle query
+    (:func:`triangle_count_cycle`) is checked against."""
     diag = (a3.col("a") == a3.col("d")) & a3.valid
     return jnp.sum(jnp.where(diag, a3.col("p"), 0.0)) / 3.0
+
+
+def triangle_count_cycle(src, dst, *, k: int = 8,
+                         strategy: "str | None" = None,
+                         caps_slack: int = 6, join_impl: str = "sort_merge"):
+    """Count directed 3-cycles by *running the triangle query*: plan
+    ``JoinQuery.triangle()`` over three copies of the edge list, execute
+    the planner's strategy on a :class:`SimGrid`, and divide the result
+    tuple count by 3 (each cycle appears once per rotation).
+
+    This is the primary triangle path — a query through the general
+    engine, not an algorithm.  ``strategy`` overrides the planner's
+    choice (``"one_round"`` runs the cycle-Shares hypercube with its
+    ``k^{1/3}``-style integer shares; ``"cascade"`` the two-round
+    cascade with the closing ``a == filter`` at the second hop).
+
+    Returns ``(count, plan, stats, overflow)`` — count as a float,
+    the :class:`~repro.core.planner.QueryPlan`, the measured
+    communication stats, and the overflow flag (callers should assert
+    it is False; capacities come from ``default_query_caps`` with
+    ``caps_slack``).
+    """
+    from .executor import default_query_caps, execute_query, query_table_inputs
+    from .plan import JoinQuery
+    from .planner import plan_query, query_stats_exact
+    from .shuffle import SimGrid
+
+    query = JoinQuery.triangle()
+    tables = [(src, dst)] * 3
+    stats = query_stats_exact(query, tables)
+    plan = plan_query(query, stats, k)
+    strategy = strategy or plan.strategy
+    grid_shape = plan.grid_shape if strategy == "one_round" else (max(k, 1),)
+    grid = SimGrid(grid_shape)
+    rels = query_table_inputs(query, tables, grid_shape)
+    caps = default_query_caps(query, stats, grid_shape, slack=caps_slack)
+    out, st, ovf = execute_query(grid, query, rels, strategy=strategy,
+                                 caps=caps, join_order=plan.join_order,
+                                 join_impl=join_impl)
+    count = float(jnp.sum(out.valid)) / 3.0
+    return count, plan, st, ovf
+
+
+def triangle_count_chain_filter(grid: Grid, src, dst, *,
+                                algorithm: str = "2,3JA",
+                                caps: Dict[str, int]):
+    """The chain+filter oracle path: compute A³'s listed entries with
+    the chosen three-way algorithm, then take the diagonal / 3.  Kept
+    (and regression-tested) as the engine-level cross-check for
+    :func:`triangle_count_cycle`.  Returns (count, stats, overflow)."""
+    a3, stats, ovf = a_cubed(grid, src, dst, algorithm=algorithm, caps=caps)
+    return float(triangle_count_from_a3(a3)), stats, ovf
 
 
 # ---------------------------------------------------------------------------

@@ -24,12 +24,14 @@ from typing import Dict, Optional, Tuple
 
 import numpy as np
 
-from .cost_model import (ChainStats, JoinStats, cost_chain_one_round,
-                         cost_chain_shares_skew, crossover_reducers,
-                         estimate_join_size, estimate_skew_combos,
-                         integer_shares, optimal_shares_chain,
-                         sketch_heavy_entries, skew_excess_cascade,
-                         skew_excess_one_round)
+from .cost_model import (ChainStats, JoinStats, QueryStats,
+                         cost_chain_one_round, cost_chain_shares_skew,
+                         cost_query_cascade, cost_query_one_round,
+                         crossover_reducers, estimate_join_size,
+                         estimate_skew_combos, integer_shares,
+                         integer_shares_query, optimal_shares_chain,
+                         optimal_shares_query, sketch_heavy_entries,
+                         skew_excess_cascade, skew_excess_one_round)
 
 
 # ---------------------------------------------------------------------------
@@ -256,6 +258,209 @@ def chain_stats_exact(edges, sketch_top_k: Optional[int] = None) -> ChainStats:
                       prefix_aggs=tuple(prefix_nnz[:-1]),
                       pushdown_joins=tuple(pushdown_joins[:-1]) or None,
                       key_freqs=key_freqs)
+
+
+# ---------------------------------------------------------------------------
+# General hypergraph planning (cycles, stars, cliques — plan_query)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class QueryPlan:
+    """A priced, executable choice for one general join query.
+
+    ``algorithm`` keeps the paper's rounds-relations naming (``1,3J``
+    for the one-round triangle, ``2,3J`` for its cascade, ``..A``
+    aggregated, ``..JS`` skew-aware); ``strategy`` is the
+    ``execute_query`` strategy; ``grid_shape`` the integer share vector
+    for a one-round execution (one dim per join *attribute* now, not
+    per chain position); ``join_order`` the left-deep reduce-side /
+    cascade order the executor should follow.  When the query is a
+    chain, planning delegates to :func:`plan_chain` unchanged and the
+    full :class:`ChainPlan` rides along as ``chain_plan`` (including
+    skew detection and the SharesSkew candidate)."""
+
+    algorithm: str
+    strategy: str
+    k: int
+    shares: Tuple[float, ...]
+    grid_shape: Tuple[int, ...]
+    join_order: Tuple[int, ...]
+    costs: Dict[str, float]
+    chain_plan: Optional[ChainPlan] = None
+
+    @property
+    def predicted_cost(self) -> float:
+        return self.costs[self.algorithm]
+
+
+def plan_query(query, stats: QueryStats, k: int, *,
+               skew_slack: float = 1.25) -> QueryPlan:
+    """Choose the cheapest physical plan for a general join query.
+
+    Candidates:
+
+    * one-round Shares on the full hypercube (one dim per join
+      attribute, shares from :func:`optimal_shares_query` /
+      :func:`integer_shares_query`);
+    * the best left-deep cascade over ``stats.orders`` (cycle-closing
+      predicates are free reduce-side filters, so an order's cost is
+      the plain cascade formula over its post-filter intermediates);
+      aggregated queries add the charged final aggregation round
+      ``2·|result|`` — pushdown is only sound for chains;
+    * for chain queries (``stats.chain`` present and the hypergraph is
+      a path) the whole decision — including cascade+pushdown and the
+      skew-aware SharesSkew candidate — delegates to
+      :func:`plan_chain`, whose behavior is unchanged.
+    """
+    n = query.n_relations
+    agg = query.aggregate is not None
+    if stats.chain is not None and query.chain_attr_order() is not None:
+        cp = plan_chain(stats.chain, k, aggregate=agg, skew_slack=skew_slack)
+        return QueryPlan(algorithm=cp.algorithm, strategy=cp.strategy, k=k,
+                         shares=cp.shares, grid_shape=cp.grid_shape,
+                         join_order=tuple(range(n)), costs=cp.costs,
+                         chain_plan=cp)
+    rel_dims = query.rel_dims()
+    shares = optimal_shares_query(rel_dims, stats.sizes, k)
+    grid_shape = integer_shares_query(rel_dims, stats.sizes, k)
+    order, cascade_cost = stats.best_order()
+    suffix = "A" if agg else ""
+    one_cost = cost_query_one_round(rel_dims, stats.sizes, k, shares)
+    if agg:
+        # Both strategies materialize the raw result and ship it to the
+        # final (charged) aggregation round.
+        one_cost += 2.0 * stats.full_output
+        cascade_cost += 2.0 * stats.full_output
+    # At n=2 both candidates are one round of two relations and share
+    # the paper name "1,2J" — the dict keeps the cheaper; the strategy
+    # choice below still compares both costs.
+    candidates = [(f"1,{n}J{suffix}", "one_round", one_cost),
+                  (f"{n - 1},{n}J{suffix}", "cascade", cascade_cost)]
+    costs: Dict[str, float] = {}
+    for name, _, c in candidates:
+        costs[name] = min(costs.get(name, float("inf")), c)
+    algorithm, strategy, _ = min(candidates, key=lambda t: t[2])
+    return QueryPlan(algorithm=algorithm, strategy=strategy, k=k,
+                     shares=shares, grid_shape=grid_shape,
+                     join_order=tuple(order), costs=costs)
+
+
+def _connected_orders(query, max_relations: int = 6):
+    """Every connected left-deep order of the query's relations (each
+    prefix shares an attribute with the next relation).  Beyond
+    ``max_relations`` relations, only the default greedy order — the
+    factorial enumeration is for experiment-scale queries."""
+    import itertools
+    n = query.n_relations
+    if n > max_relations:
+        return [query.default_join_order()]
+    attr_sets = [set(r) for r in query.relations]
+    orders = []
+    for perm in itertools.permutations(range(n)):
+        seen = set(attr_sets[perm[0]])
+        ok = True
+        for j in perm[1:]:
+            if not (seen & attr_sets[j]):
+                ok = False
+                break
+            seen |= attr_sets[j]
+        if ok:
+            orders.append(perm)
+    return orders
+
+
+def query_stats_exact(query, tables, *, sketch_top_k: Optional[int] = None,
+                      ) -> QueryStats:
+    """Exact QueryStats for a general join query, by simulating every
+    connected left-deep order with host-side hash joins (cheap at
+    experiment scales — the general counterpart of
+    :func:`chain_stats_exact`).
+
+    ``tables`` is one entry per relation: a tuple of equal-length int
+    column arrays matching the relation's attribute tuple (a value
+    column may ride along at the end and is ignored here — statistics
+    count tuples).  For every order the simulation records the per-hop
+    raw join sizes (``hop_joins``) and the post-filter intermediates
+    (cycle-closing predicates applied at their hop), plus the aggregate
+    group count when the query aggregates.  Chain queries additionally
+    get the :class:`ChainStats` view (prefix joins, aggregated
+    intermediates, optional ``sketch_top_k`` skew sketch) so
+    :func:`plan_query` can delegate to the chain planner.
+    """
+    n = query.n_relations
+    if len(tables) != n:
+        raise ValueError(f"query has {n} relations, got {len(tables)} tables")
+    rows = []
+    for j, cols in enumerate(tables):
+        arity = len(query.relations[j])
+        cols = [np.asarray(c) for c in cols[:arity]]
+        if len(cols) != arity or any(len(c) != len(cols[0]) for c in cols):
+            raise ValueError(f"relation {j} needs {arity} equal-length key "
+                             f"columns")
+        rows.append(list(zip(*(c.tolist() for c in cols))))
+    sizes = tuple(float(len(r)) for r in rows)
+
+    orders, intermediates, hop_joins = [], [], []
+    final_rows, final_pos = None, None
+    for order in _connected_orders(query):
+        acc, attr_pos, inter, raw = _run_order(query, rows, order)
+        orders.append(tuple(order))
+        intermediates.append(tuple(inter))
+        hop_joins.append(tuple(raw))
+        if final_rows is None:
+            final_rows, final_pos = acc, attr_pos
+
+    agg_groups = None
+    if query.aggregate is not None:
+        kidx = [final_pos[a] for a in query.aggregate.keys]
+        agg_groups = float(len({tuple(t[i] for i in kidx)
+                                for t in final_rows}))
+
+    chain = None
+    if query.chain_attr_order() is not None:
+        edge_lists = [(np.asarray(cols[0]), np.asarray(cols[1]))
+                      for cols in tables]
+        chain = chain_stats_exact(edge_lists, sketch_top_k=sketch_top_k)
+    return QueryStats(sizes=sizes, orders=tuple(orders),
+                      intermediates=tuple(intermediates),
+                      hop_joins=tuple(hop_joins), agg_groups=agg_groups,
+                      chain=chain)
+
+
+def _run_order(query, rows, order):
+    """Multiplicity-preserving host hash joins along one left-deep
+    order: joins on the first shared attribute, applies the remaining
+    shared attributes (cycle-closing predicates) as per-hop filters.
+    Returns (result rows, attr→position, post-filter intermediate sizes,
+    raw pre-filter join sizes)."""
+    from collections import defaultdict
+    acc = list(rows[order[0]])
+    attr_pos = {a: i for i, a in enumerate(query.relations[order[0]])}
+    inter, raw = [], []
+    for j in order[1:]:
+        rel_attrs = query.relations[j]
+        shared = [a for a in rel_attrs if a in attr_pos]
+        key, extras = shared[0], shared[1:]
+        kpos = rel_attrs.index(key)
+        by_key = defaultdict(list)
+        for t in rows[j]:
+            by_key[t[kpos]].append(t)
+        new_cols = [a for a in rel_attrs if a not in attr_pos]
+        new_pos = [rel_attrs.index(a) for a in new_cols]
+        extra_pairs = [(attr_pos[a], rel_attrs.index(a)) for a in extras]
+        raw_count = 0
+        out = []
+        for t in acc:
+            for u in by_key.get(t[attr_pos[key]], ()):
+                raw_count += 1
+                if all(t[i] == u[p] for i, p in extra_pairs):
+                    out.append(t + tuple(u[p] for p in new_pos))
+        for a in new_cols:
+            attr_pos[a] = len(attr_pos)
+        acc = out
+        raw.append(float(raw_count))
+        inter.append(float(len(acc)))
+    return acc, attr_pos, inter, raw
 
 
 # ---------------------------------------------------------------------------

@@ -106,6 +106,35 @@ def zipf_edges(n_nodes: int, n_edges: int, alpha: float,
     return src, dst
 
 
+def star_edges(n_hubs: int, n_leaves: int, n_edges: int,
+               fanout_skew: float = 0.0,
+               seed: int = 0) -> Tuple[np.ndarray, np.ndarray]:
+    """Random bipartite hub→leaf edge list — the native workload for
+    *star* queries (``JoinQuery.star(n)``: n relations sharing only the
+    hub attribute).
+
+    Hubs and leaves live in disjoint id ranges (hubs ``[0, n_hubs)``,
+    leaves ``[n_hubs, n_hubs + n_leaves)``), so the bipartite structure
+    survives self-joins: feeding the same list to every star relation
+    joins strictly on hubs.  The hub of each edge is drawn with
+    probability ∝ (rank+1)^−``fanout_skew`` — ``0.0`` gives uniform
+    fan-out, larger values concentrate edges on a few heavy hubs (the
+    skewed-hub regime where hashing the hub attribute overloads one
+    reducer slice).  Leaves are uniform.  Deterministic in ``seed``.
+    """
+    if n_hubs < 1 or n_leaves < 1 or n_edges < 1:
+        raise ValueError("need n_hubs, n_leaves, n_edges >= 1")
+    if fanout_skew < 0:
+        raise ValueError(f"fanout_skew must be >= 0, got {fanout_skew}")
+    rng = np.random.default_rng(seed)
+    ranks = np.arange(1, n_hubs + 1, dtype=np.float64)
+    p = ranks ** -fanout_skew
+    p /= p.sum()
+    hub = rng.choice(n_hubs, size=n_edges, p=p).astype(np.int32)
+    leaf = (n_hubs + rng.integers(0, n_leaves, n_edges)).astype(np.int32)
+    return hub, leaf
+
+
 def degree_stats(src: np.ndarray, dst: np.ndarray) -> Dict[str, float]:
     n = len(src)
     outdeg = np.bincount(src)

@@ -1,12 +1,14 @@
-"""The data-plane swap must change seconds, not semantics.
+"""Engine refactors must change seconds, not semantics.
 
 ``tests/data/bench_counts_seed.json`` snapshots every tuple-count
 accounting field (``read`` / ``shuffled`` / ``max_bucket_load`` /
-``total``) of the checked-in ``BENCH_nway.json`` and ``BENCH_skew.json``
-as they stood *before* the sort-merge data plane landed.  Regenerating
-those files with the new reduce-side kernels must reproduce each field
-bit-identically: the join kernel decides how fast matches are found,
-never which tuples move.
+``total``) of the checked-in benchmark reports: ``BENCH_nway.json``
+and ``BENCH_skew.json`` as they stood *before* the sort-merge data
+plane landed (the hypergraph generalization re-verified them
+byte-identical), and ``BENCH_triangles.json`` as pinned when the cycle
+query landed.  Regenerating those files must reproduce each field
+bit-identically: neither the join kernel nor the hypergraph surface
+decides which tuples move — only the physical plan does.
 """
 
 import json
@@ -35,7 +37,8 @@ def extract_counts(obj, path=""):
     return out
 
 
-@pytest.mark.parametrize("bench", ["BENCH_nway.json", "BENCH_skew.json"])
+@pytest.mark.parametrize("bench", ["BENCH_nway.json", "BENCH_skew.json",
+                                   "BENCH_triangles.json"])
 def test_accounting_bit_identical_to_seed(bench):
     path = REPO / bench
     if not path.exists():
@@ -43,5 +46,5 @@ def test_accounting_bit_identical_to_seed(bench):
     snapshot = json.loads(SNAPSHOT.read_text())[bench]
     current = extract_counts(json.loads(path.read_text()))
     assert current == snapshot, (
-        f"{bench} tuple-count accounting drifted from the pre-swap "
-        f"snapshot — the data plane changed semantics, not just speed")
+        f"{bench} tuple-count accounting drifted from its pinned "
+        f"snapshot — the engine changed semantics, not just speed")

@@ -1,0 +1,196 @@
+"""General-shares solver + integer shares: properties and closed forms.
+
+The hypergraph Shares machinery must (a) reproduce the chain closed
+forms bit-for-bit on chain incidences, (b) recover the classic
+``k^{1/3}`` symmetric shares on the uniform triangle, and (c) hold the
+structural invariants for arbitrary incidences: executable share
+products never exceed the budget, real share products use exactly the
+budget, the solver never loses to other feasible share vectors, and the
+(1,…,1) grid is the replication-free communication lower bound every
+share vector pays at least.
+"""
+
+import math
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    JoinQuery, cost_query_one_round, integer_shares, integer_shares_query,
+    optimal_shares_chain, optimal_shares_query, query_replications,
+)
+
+pytest.importorskip(
+    "hypothesis",
+    reason="property tests need hypothesis (pip install -e .[dev])")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+SETTINGS = dict(max_examples=40, deadline=None)
+
+# A pool of genuinely different incidences: chains, cycles, stars, a
+# clique, and a mixed shape (per-relation pinned-dim tuples).
+INCIDENCES = {
+    "chain3": ((0,), (0, 1), (1,)),
+    "chain4": ((0,), (0, 1), (1, 2), (2,)),
+    "triangle": ((0, 1), (1, 2), (0, 2)),
+    "cycle4": ((0, 1), (1, 2), (2, 3), (0, 3)),
+    "star3": ((0,), (0,), (0,)),
+    "clique3": ((0, 1), (0, 2), (1, 2), (0, 1)),
+    "mixed": ((0, 1, 2), (0,), (1,), (2,)),
+}
+
+sizes_for = st.floats(min_value=1.0, max_value=1e6)
+budgets = st.integers(min_value=1, max_value=4096)
+incidences = st.sampled_from(sorted(INCIDENCES))
+
+
+@given(name=incidences, k=budgets, data=st.data())
+@settings(**SETTINGS)
+def test_integer_shares_feasible(name, k, data):
+    """∏ shares ≤ k, every share a positive int."""
+    rel_dims = INCIDENCES[name]
+    sizes = data.draw(st.lists(sizes_for, min_size=len(rel_dims),
+                               max_size=len(rel_dims)))
+    shares = integer_shares_query(rel_dims, sizes, k)
+    assert all(isinstance(s, int) and s >= 1 for s in shares)
+    assert math.prod(shares) <= k
+
+
+@given(name=incidences, k=budgets, data=st.data())
+@settings(**SETTINGS)
+def test_real_shares_use_the_budget_and_stay_feasible(name, k, data):
+    rel_dims = INCIDENCES[name]
+    sizes = data.draw(st.lists(sizes_for, min_size=len(rel_dims),
+                               max_size=len(rel_dims)))
+    shares = optimal_shares_query(rel_dims, sizes, k)
+    assert min(shares) >= 1.0 - 1e-6
+    if k > 1:
+        assert math.prod(shares) == pytest.approx(k, rel=1e-3)
+
+
+@given(name=incidences, k=budgets, data=st.data())
+@settings(**SETTINGS)
+def test_ones_grid_is_the_replication_free_lower_bound(name, k, data):
+    """Cost on the (1,…,1) grid is exactly 2·Σr (read + unreplicated
+    shuffle); every share vector — the solver's included — pays at
+    least that."""
+    rel_dims = INCIDENCES[name]
+    dims = 1 + max(d for D in rel_dims for d in D)
+    sizes = data.draw(st.lists(sizes_for, min_size=len(rel_dims),
+                               max_size=len(rel_dims)))
+    ones_cost = cost_query_one_round(rel_dims, sizes, 1,
+                                     shares=(1.0,) * dims)
+    assert ones_cost == pytest.approx(2.0 * sum(sizes), rel=1e-12)
+    opt_cost = cost_query_one_round(rel_dims, sizes, k)
+    int_shares = integer_shares_query(rel_dims, sizes, k)
+    int_cost = cost_query_one_round(rel_dims, sizes, math.prod(int_shares),
+                                    shares=int_shares)
+    assert opt_cost >= ones_cost * (1 - 1e-9)
+    assert int_cost >= ones_cost * (1 - 1e-9)
+
+
+@given(name=incidences, k=st.integers(min_value=2, max_value=4096),
+       data=st.data())
+@settings(**SETTINGS)
+def test_solver_never_loses_to_feasible_alternatives(name, k, data):
+    """The solver's cost ≤ the cost of uniform shares, axis-aligned
+    corners, and random feasible vectors with the same budget."""
+    rel_dims = INCIDENCES[name]
+    dims = 1 + max(d for D in rel_dims for d in D)
+    sizes = data.draw(st.lists(sizes_for, min_size=len(rel_dims),
+                               max_size=len(rel_dims)))
+    opt = cost_query_one_round(rel_dims, sizes, k)
+
+    candidates = [(float(k ** (1.0 / dims)),) * dims]
+    for d in range(dims):
+        corner = [1.0] * dims
+        corner[d] = float(k)
+        candidates.append(tuple(corner))
+    # Mixed-boundary candidates (some dims clamped at 1, the budget
+    # split over the rest) — the regime where gradient descent stalls.
+    for mask in range(1, 2 ** dims - 1):
+        free = [d for d in range(dims) if mask >> d & 1]
+        cand = [1.0] * dims
+        for d in free:
+            cand[d] = float(k ** (1.0 / len(free)))
+        candidates.append(tuple(cand))
+    # Random feasible interior vectors: exp of random points on the
+    # positive simplex scaled to ln k.
+    for _ in range(6):
+        w = np.asarray(data.draw(st.lists(
+            st.floats(min_value=0.05, max_value=1.0),
+            min_size=dims, max_size=dims)))
+        candidates.append(tuple(math.exp(v) for v in
+                                np.log(k) * w / w.sum()))
+    for cand in candidates:
+        c = cost_query_one_round(rel_dims, sizes, k, shares=cand)
+        assert opt <= c * (1 + 1e-4)
+
+
+@given(k=budgets, data=st.data())
+@settings(**SETTINGS)
+def test_chain_incidence_reproduces_chain_solver_bit_for_bit(k, data):
+    """Acceptance: on chains the general solver must equal
+    `optimal_shares_chain` exactly — it delegates to the same closed
+    form — and the integer refinement must equal `integer_shares`."""
+    n = data.draw(st.integers(min_value=3, max_value=6))
+    sizes = data.draw(st.lists(sizes_for, min_size=n, max_size=n))
+    rel_dims = JoinQuery.chain(n).rel_dims()
+    assert optimal_shares_query(rel_dims, sizes, k) == \
+        optimal_shares_chain(sizes, k)
+    assert integer_shares_query(rel_dims, sizes, k) == \
+        integer_shares(sizes, k)
+
+
+class TestTriangleClosedForm:
+    def test_uniform_triangle_gets_cuberoot_shares(self):
+        """Acceptance: the symmetric triangle recovers the classic
+        k^{1/3} per-attribute share."""
+        rel_dims = JoinQuery.triangle().rel_dims()
+        for r, k in [(100.0, 8), (1e5, 64), (3e4, 1000)]:
+            shares = optimal_shares_query(rel_dims, (r, r, r), k)
+            want = k ** (1.0 / 3.0)
+            for s in shares:
+                assert s == pytest.approx(want, rel=1e-9)
+            # ... and the cost is the classic 3r + 3r·k^{1/3}.
+            got = cost_query_one_round(rel_dims, (r, r, r), k, shares)
+            assert got == pytest.approx(3 * r + 3 * r * want, rel=1e-9)
+
+    def test_asymmetric_triangle_balances_kkt(self):
+        """At the interior optimum every dim carries equal total
+        communication (the Lagrangean alternation's fixed point)."""
+        rel_dims = JoinQuery.triangle().rel_dims()
+        sizes, k = (100.0, 400.0, 900.0), 4096
+        shares = optimal_shares_query(rel_dims, sizes, k)
+        repl = query_replications(rel_dims, shares)
+        t = [r * f for r, f in zip(sizes, repl)]
+        g = [t[0] + t[2], t[0] + t[1], t[1] + t[2]]  # per-dim totals
+        assert max(g) == pytest.approx(min(g), rel=1e-6)
+
+    def test_mixed_boundary_optima_are_found(self):
+        """Regression: asymmetric chains whose optimum clamps *interior*
+        dims (e.g. (1, 32, 1, 32)) — where plain projected gradient
+        stalls far from the boundary — must be priced at the true
+        constrained optimum."""
+        from repro.core import cost_chain_one_round
+        sizes, k = (1.0, 1000.0, 1000.0, 1000.0, 1000.0), 1024
+        shares = optimal_shares_chain(sizes, k)
+        got = cost_chain_one_round(sizes, k, shares)
+        want = cost_chain_one_round(sizes, k, (1.0, 32.0, 1.0, 32.0))
+        assert got == pytest.approx(want, rel=1e-9)
+
+        sizes6, k6 = (1.0, 10.0, 1e6, 1e8, 1e8, 1.0), 1024
+        rel_dims = JoinQuery.chain(6).rel_dims()
+        got6 = cost_query_one_round(rel_dims, sizes6, k6)
+        # True optimum puts the whole budget on the two heavy interior
+        # dims (≈ (1, 1, 3.2, 320, 1)): verified by grid search.
+        assert got6 <= 941.1e6
+
+    def test_star_degenerates_to_hub_hashing(self):
+        rel_dims = JoinQuery.star(4).rel_dims()
+        sizes = (10.0, 20.0, 30.0, 40.0)
+        assert optimal_shares_query(rel_dims, sizes, 64) == (64.0,)
+        assert integer_shares_query(rel_dims, sizes, 64) == (64,)
+        # No replication: the one-round cost is the 2Σr lower bound.
+        assert cost_query_one_round(rel_dims, sizes, 64) == \
+            pytest.approx(2 * sum(sizes), rel=1e-12)
