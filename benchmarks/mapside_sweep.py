@@ -1,0 +1,242 @@
+"""Map-side sweep: zero-shuffle cascades over the partitioned store.
+
+A 4-hop chain (5 relations, selective keys) at increasing scale,
+executed two ways on the same 8-way SimGrid:
+
+* **always-shuffle cascade** — the PR-4 data plane: every hop
+  hash-partitions both inputs (``cost_chain_cascade`` tuples moved);
+* **map-side cascade** — all five relations are persisted through the
+  partitioned store (``save_partitioned`` → ``load_partitioned``, CRCs
+  verified), the planner proves the chain certificate from the
+  manifests alone and picks the ``MS,5J`` plan, and the executor feeds
+  the stored partitions straight into presorted merge joins with
+  ``place_output`` landing each intermediate already partitioned on
+  the next hop's key.
+
+Gates (all enforced under ``--check``):
+
+* measured per-hop shuffled == analytic, and exactly **zero** on every
+  proven hop; measured placed == analytic; measured total ==
+  ``cost_chain_mapside`` exactly;
+* both executions return the same tuple count;
+* planning the same stats with ``partitioning=None`` reproduces the
+  PR-5 plan bit-for-bit (the new machinery is invisible without a
+  certificate);
+* jitted wall-clock speedup of map-side over the shuffle cascade is
+  ≥ 5x at the largest swept size (full mode only — ``--fast``, the CI
+  smoke configuration, skips the timing gate but keeps every
+  accounting gate).
+
+Emits ``BENCH_mapside.json`` (``--out`` to override).
+
+  PYTHONPATH=src python benchmarks/mapside_sweep.py [--fast] [--check]
+"""
+
+import argparse
+import json
+import sys
+import tempfile
+import time
+
+from pathlib import Path
+
+try:
+    import repro  # noqa: F401 — installed, or on PYTHONPATH (ROADMAP: PYTHONPATH=src)
+except ImportError:  # checkout fallback: src/ relative to this file, not the cwd
+    sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+import numpy as np
+
+import jax
+
+from repro.checkpoint import load_partitioned, save_partitioned
+from repro.core import (ChainQuery, SimGrid, chain_edge_inputs,
+                        chain_mapside_placed, chain_mapside_shuffles,
+                        chain_partitioning, chain_stats_exact,
+                        cost_chain_cascade, cost_chain_mapside,
+                        default_chain_caps, default_mapside_caps,
+                        default_part_capacity, edge_relation,
+                        jit_execute_chain, partition_relation, plan_chain)
+
+N = 5                         # relations → 4 hops
+EXEC_K = 8                    # devices == stored partitions
+SIZES_FULL = (800, 3200, 12800, 25600)
+SIZES_FAST = (800, 3200)
+SPEEDUP_GATE = 5.0            # at the largest size, full mode only
+TIMING_REPEATS = 7
+
+
+def _block(tree):
+    jax.tree.map(lambda a: a.block_until_ready()
+                 if hasattr(a, "block_until_ready") else a, tree)
+
+
+def _time_ms(run, rels):
+    ts = []
+    for _ in range(TIMING_REPEATS):
+        t0 = time.perf_counter()
+        _block(run(rels))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts) * 1e3)
+
+
+def store_roundtrip(query, flat, part_cap, tmpdir):
+    """Persist every relation hash-partitioned on its join attribute and
+    load it back — the planner sees only what the manifests prove."""
+    prels = []
+    for j, rel in enumerate(flat):
+        key = query.attrs[1] if j == 0 else query.attrs[j]
+        pr, ovf = partition_relation(rel, key, EXEC_K, salt=0,
+                                     part_capacity=part_cap)
+        assert not bool(ovf), "partition overflow — raise part capacity"
+        save_partitioned(tmpdir, f"rel_{j}", pr)
+        prels.append(load_partitioned(tmpdir, f"rel_{j}"))
+    return prels
+
+
+def bench_size(m: int, rng, tmpdir) -> dict:
+    # Selective keys (domain 2m): intermediates shrink ~2x per hop, the
+    # regime where co-partitioned storage pays — base relations dwarf
+    # the intermediates, and the shuffle cascade moves all of them.
+    dom = 2 * m
+    query = ChainQuery.chain(N)
+    edges = [(rng.integers(0, dom, m).astype(np.int32),
+              rng.integers(0, dom, m).astype(np.int32))
+             for _ in range(N)]
+    stats = chain_stats_exact(edges)
+    flat = [edge_relation(s, d, names=query.schema(j))
+            for j, (s, d) in enumerate(edges)]
+
+    prels = store_roundtrip(query, flat, default_part_capacity(m, EXEC_K),
+                            tmpdir)
+    part = chain_partitioning(query, [pr.spec for pr in prels])
+    assert part is not None and all(part.right_proven) and part.left0_proven
+
+    # --- planning ---------------------------------------------------------
+    plan_ms = plan_chain(stats, EXEC_K, aggregate=False, partitioning=part)
+    # Without a certificate the new machinery must be invisible: the
+    # PR-5 plan comes back bit-for-bit.
+    pr5 = all(plan_chain(stats, EXEC_K, aggregate=agg, partitioning=None)
+              == plan_chain(stats, EXEC_K, aggregate=agg)
+              for agg in (False, True))
+
+    # --- measured runs ----------------------------------------------------
+    grid = SimGrid((EXEC_K,))
+    caps_c = default_chain_caps(stats, (EXEC_K,), slack=6)
+    caps_m = default_mapside_caps(stats, EXEC_K)
+    run_c = jit_execute_chain(grid, query, strategy="cascade", caps=caps_c,
+                              donate=False)
+    run_m = jit_execute_chain(grid, query, strategy="mapside", caps=caps_m,
+                              donate=False, partitioning=part,
+                              hop_modes=plan_ms.hop_modes, place_output=True)
+    rels_c = tuple(chain_edge_inputs(query, edges, (EXEC_K,)))
+    rels_m = tuple(prels)
+
+    out_c, st_c, ovf_c = run_c(rels_c)
+    out_m, st_m, ovf_m = run_m(rels_m)
+    _block((out_c, out_m))
+    assert not bool(ovf_c) and not bool(ovf_m), "overflow — capacities"
+    count_c = int(np.sum(np.asarray(out_c.valid)))
+    count_m = int(np.sum(np.asarray(out_m.valid)))
+
+    an_sh = chain_mapside_shuffles(stats.sizes, stats.prefix_joins, part,
+                                   plan_ms.hop_modes, place_output=True)
+    an_pl = chain_mapside_placed(stats.sizes, stats.prefix_joins, part,
+                                 plan_ms.hop_modes)
+    me_sh = tuple(float(x) for x in np.asarray(st_m["hop_shuffled"]))
+    me_pl = tuple(float(x) for x in np.asarray(st_m["hop_placed"]))
+    hops = [{"mode": plan_ms.hop_modes[h],
+             "shuffled": me_sh[h], "analytic_shuffled": an_sh[h],
+             "placed": me_pl[h], "analytic_placed": an_pl[h],
+             "match": me_sh[h] == an_sh[h] and me_pl[h] == an_pl[h]}
+            for h in range(N - 1)]
+
+    casc = {k: float(v) for k, v in st_c.items()}
+    maps = {k: float(v) for k, v in st_m.items()
+            if k not in ("hop_shuffled", "hop_placed")}
+    casc_analytic = cost_chain_cascade(stats.sizes, stats.prefix_joins)
+    maps_analytic = cost_chain_mapside(stats.sizes, stats.prefix_joins, part,
+                                       plan_ms.hop_modes)
+
+    t_c = _time_ms(run_c, rels_c)
+    t_m = _time_ms(run_m, rels_m)
+
+    return {
+        "m_edges": m,
+        "sizes": list(stats.sizes),
+        "prefix_joins": list(stats.prefix_joins),
+        "count": count_c,
+        "planner_choice": {"algorithm": plan_ms.algorithm,
+                           "strategy": plan_ms.strategy,
+                           "hop_modes": list(plan_ms.hop_modes),
+                           "grid_shape": list(plan_ms.grid_shape)},
+        "pr5_plan_unchanged": pr5,
+        "cascade": {**casc, "analytic_total": casc_analytic,
+                    "match": casc["total"] == casc_analytic},
+        "mapside": {**maps, "hops": hops,
+                    "analytic_total": maps_analytic,
+                    "match": maps["total"] == maps_analytic
+                    and all(h["match"] for h in hops)},
+        "counts_equal": count_c == count_m,
+        "zero_shuffle": me_sh == (0.0,) * (N - 1),
+        "cascade_ms": t_c,
+        "mapside_ms": t_m,
+        "speedup": t_c / t_m,
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="small sizes only, no timing gate (CI smoke)")
+    ap.add_argument("--check", action="store_true",
+                    help="exit non-zero unless every gate holds")
+    ap.add_argument("--seed", type=int, default=7)
+    ap.add_argument("--out", default="BENCH_mapside.json")
+    args = ap.parse_args()
+
+    sizes = SIZES_FAST if args.fast else SIZES_FULL
+    report = {
+        "benchmark": "mapside_sweep",
+        "n_relations": N,
+        "exec_k": EXEC_K,
+        "num_partitions": EXEC_K,
+        "fast": args.fast,
+        "speedup_gate": None if args.fast else SPEEDUP_GATE,
+        "sweep": {},
+    }
+    all_ok = True
+    with tempfile.TemporaryDirectory() as tmpdir:
+        for m in sizes:
+            rng = np.random.default_rng(args.seed)
+            row = bench_size(m, rng, tmpdir)
+            report["sweep"][str(m)] = row
+            ok = (row["cascade"]["match"] and row["mapside"]["match"]
+                  and row["counts_equal"] and row["zero_shuffle"]
+                  and row["pr5_plan_unchanged"]
+                  and row["planner_choice"]["strategy"] == "mapside")
+            all_ok &= ok
+            print(f"m={m}: plan={row['planner_choice']['algorithm']} "
+                  f"modes={row['planner_choice']['hop_modes']} "
+                  f"{'MATCH' if ok else 'MISMATCH'}; "
+                  f"shuffled/hop={[h['shuffled'] for h in row['mapside']['hops']]} "
+                  f"cascade={row['cascade_ms']:.1f}ms "
+                  f"mapside={row['mapside_ms']:.1f}ms "
+                  f"speedup={row['speedup']:.2f}x")
+
+    largest = report["sweep"][str(sizes[-1])]
+    if not args.fast:
+        gate = largest["speedup"] >= SPEEDUP_GATE
+        all_ok &= gate
+        print(f"speedup gate (>= {SPEEDUP_GATE}x at m={sizes[-1]}): "
+              f"{largest['speedup']:.2f}x {'PASS' if gate else 'FAIL'}")
+
+    with open(args.out, "w") as f:
+        json.dump(report, f, indent=2)
+    print(f"wrote {args.out}")
+    if args.check and not all_ok:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

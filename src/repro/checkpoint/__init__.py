@@ -1,3 +1,5 @@
-from .store import (CheckpointManager, latest_step, restore, save)
+from .store import (CheckpointManager, latest_step, load_partition_spec,
+                    load_partitioned, restore, save, save_partitioned)
 
-__all__ = ["CheckpointManager", "save", "restore", "latest_step"]
+__all__ = ["CheckpointManager", "save", "restore", "latest_step",
+           "save_partitioned", "load_partitioned", "load_partition_spec"]

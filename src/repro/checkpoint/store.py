@@ -3,8 +3,22 @@
 Layout:  <dir>/step_<n>/  arrays.npz + manifest.json (tree structure,
 shapes, dtypes, crc32 per leaf).  Writes go to step_<n>.tmp and are
 renamed only after fsync — a preempted writer never corrupts the latest
-checkpoint.  The async mode runs serialization on a worker thread so the
-train loop's critical path only pays for the host transfer.
+checkpoint.  Replacing an existing checkpoint is atomic too: the old
+directory is first renamed aside to ``<name>.old``, the new one renamed
+in, and only then is the ``.old`` copy deleted — a crash at any point
+leaves either the old or the new checkpoint intact
+(:func:`_recover_replaced` finishes an interrupted swap on next read).
+The async mode runs serialization on a worker thread so the train
+loop's critical path only pays for the host transfer.
+
+The module also persists the map-side-join storage layout
+(:class:`~repro.core.partition.PartitionedRelation`):
+:func:`save_partitioned` / :func:`load_partitioned` write one npz per
+partition plus a ``manifest.json`` recording the partition function,
+key attribute, partition count, salt, sort order and per-partition
+per-column CRCs — enough to rebuild the
+:class:`~repro.core.partition.PartitionSpec` and re-prove
+co-partitioning without touching the data (``docs/storage.md``).
 """
 
 from __future__ import annotations
@@ -18,6 +32,39 @@ from typing import Any, Optional, Tuple
 
 import jax
 import numpy as np
+
+
+def _atomic_replace(tmp: str, final: str) -> None:
+    """Replace ``final`` with ``tmp`` without a window where neither
+    exists: rename the old aside, rename the new in, then delete the
+    old.  A crash between the renames is healed by
+    :func:`_recover_replaced`."""
+    old = final + ".old"
+    if os.path.exists(old):  # leftover from an earlier interrupted swap
+        shutil.rmtree(old, ignore_errors=True)
+    if os.path.exists(final):
+        os.rename(final, old)
+    os.rename(tmp, final)
+    if os.path.exists(old):
+        shutil.rmtree(old, ignore_errors=True)
+
+
+def _recover_replaced(directory: str) -> None:
+    """Finish interrupted :func:`_atomic_replace` swaps under
+    ``directory``: a ``<name>.old`` with no ``<name>`` means the crash
+    hit between the two renames — restore the old copy; otherwise the
+    swap completed and the ``.old`` is garbage."""
+    if not os.path.isdir(directory):
+        return
+    for name in os.listdir(directory):
+        if not name.endswith(".old"):
+            continue
+        old = os.path.join(directory, name)
+        base = old[:-len(".old")]
+        if os.path.exists(base):
+            shutil.rmtree(old, ignore_errors=True)
+        else:
+            os.rename(old, base)
 
 
 def _flatten(tree) -> Tuple[list, Any]:
@@ -56,18 +103,18 @@ def save(directory: str, step: int, tree, extra: Optional[dict] = None) -> str:
         json.dump(manifest, f)
         f.flush()
         os.fsync(f.fileno())
-    if os.path.exists(final):
-        shutil.rmtree(final)
-    os.rename(tmp, final)
+    _atomic_replace(tmp, final)
     return final
 
 
 def latest_step(directory: str) -> Optional[int]:
     if not os.path.isdir(directory):
         return None
+    _recover_replaced(directory)
     steps = []
     for name in os.listdir(directory):
-        if name.startswith("step_") and not name.endswith(".tmp"):
+        if (name.startswith("step_") and not name.endswith(".tmp")
+                and not name.endswith(".old")):
             try:
                 steps.append(int(name.split("_")[1]))
             except ValueError:
@@ -77,6 +124,7 @@ def latest_step(directory: str) -> Optional[int]:
 
 def restore(directory: str, step: int, like) -> Tuple[Any, dict]:
     """Restore into the structure of ``like`` (shape/dtype verified)."""
+    _recover_replaced(directory)
     path = os.path.join(directory, f"step_{step}")
     with open(os.path.join(path, "manifest.json")) as f:
         manifest = json.load(f)
@@ -143,7 +191,117 @@ class CheckpointManager:
     def _gc(self):
         steps = sorted(
             int(n.split("_")[1]) for n in os.listdir(self.directory)
-            if n.startswith("step_") and not n.endswith(".tmp"))
+            if n.startswith("step_") and not n.endswith(".tmp")
+            and not n.endswith(".old"))
         for s in steps[:-self.keep_n]:
             shutil.rmtree(os.path.join(self.directory, f"step_{s}"),
                           ignore_errors=True)
+
+
+# ---------------------------------------------------------------------------
+# Partitioned relation store — the on-disk side of map-side joins
+# ---------------------------------------------------------------------------
+
+#: Manifest format tag; bumped if the layout ever changes shape.
+PARTITIONED_FORMAT = "partitioned-relation-v1"
+
+
+def save_partitioned(directory: str, name: str, prel) -> str:
+    """Persist a :class:`~repro.core.partition.PartitionedRelation` as
+    ``<directory>/<name>/`` — ``part_00000.npz`` … one npz per
+    partition, plus a fsynced ``manifest.json`` recording the
+    :class:`~repro.core.partition.PartitionSpec` (partition function,
+    key, P, salt, sort order) and per-partition per-column CRCs.  The
+    write is staged in ``<name>.tmp`` and swapped in atomically."""
+    from ..core.partition import PARTITION_FN
+
+    spec = prel.spec
+    tmp = os.path.join(directory, f"{name}.tmp")
+    final = os.path.join(directory, name)
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp, exist_ok=True)
+    columns = sorted(prel.parts.cols)
+    valid = np.asarray(prel.parts.valid)
+    cols = {c: np.asarray(prel.parts.cols[c]) for c in columns}
+    crcs = []
+    for p in range(prel.num_partitions):
+        part_arrays = {c: cols[c][p] for c in columns}
+        part_arrays["valid"] = valid[p]
+        np.savez(os.path.join(tmp, f"part_{p:05d}.npz"),
+                 **{k: _storable(a) for k, a in part_arrays.items()})
+        crcs.append({k: int(zlib.crc32(a.tobytes()))
+                     for k, a in part_arrays.items()})
+    manifest = {
+        "format": PARTITIONED_FORMAT,
+        "partition_fn": PARTITION_FN,
+        "key": spec.key,
+        "num_partitions": spec.num_partitions,
+        "salt": spec.salt,
+        "sort_order": spec.sort_order,
+        "part_capacity": prel.part_capacity,
+        "columns": columns,
+        "dtypes": {c: cols[c].dtype.name for c in columns},
+        "crc": crcs,
+    }
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+        f.flush()
+        os.fsync(f.fileno())
+    _atomic_replace(tmp, final)
+    return final
+
+
+def load_partition_spec(directory: str, name: str):
+    """Read just the manifest of a persisted partitioned relation and
+    rebuild its :class:`~repro.core.partition.PartitionSpec` — what the
+    planner needs to prove co-partitioning, without touching the data.
+    Returns None when the relation is absent or was written by a
+    different partition hash (its proof would be unsound)."""
+    from ..core.partition import PARTITION_FN, PartitionSpec
+
+    _recover_replaced(directory)
+    path = os.path.join(directory, name, "manifest.json")
+    if not os.path.exists(path):
+        return None
+    with open(path) as f:
+        manifest = json.load(f)
+    if (manifest.get("format") != PARTITIONED_FORMAT
+            or manifest.get("partition_fn") != PARTITION_FN):
+        return None
+    return PartitionSpec(key=manifest["key"],
+                         num_partitions=manifest["num_partitions"],
+                         salt=manifest["salt"],
+                         sort_order=manifest["sort_order"])
+
+
+def load_partitioned(directory: str, name: str):
+    """Load a persisted partitioned relation back into a
+    :class:`~repro.core.partition.PartitionedRelation` (per-column CRCs
+    verified; raises IOError on corruption)."""
+    from ..core.partition import PartitionedRelation
+    from ..core.relation import Relation
+    import jax.numpy as jnp
+
+    spec = load_partition_spec(directory, name)
+    if spec is None:
+        raise FileNotFoundError(
+            f"no partitioned relation {name!r} under {directory}")
+    path = os.path.join(directory, name)
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    columns = manifest["columns"]
+    per_part = {c: [] for c in columns}
+    per_part["valid"] = []
+    for p in range(manifest["num_partitions"]):
+        data = np.load(os.path.join(path, f"part_{p:05d}.npz"))
+        for k in list(columns) + ["valid"]:
+            a = data[k]
+            if int(zlib.crc32(a.tobytes())) != manifest["crc"][p][k]:
+                raise IOError(f"partition {p} column {k!r} corrupt in {path}")
+            per_part[k].append(a)
+    cols = {c: jnp.asarray(
+                np.stack(per_part[c]).astype(manifest["dtypes"][c]))
+            for c in columns}
+    valid = jnp.asarray(np.stack(per_part["valid"]).astype(bool))
+    return PartitionedRelation(Relation(cols, valid), spec)

@@ -1,0 +1,43 @@
+"""Runtime configuration: 64-bit join keys.
+
+JAX defaults to 32-bit integers; billion-vertex graphs alias int32 node
+ids (2^31 distinct keys).  :func:`enable_x64` flips jax's ``x64`` mode
+— it must run before the first jax computation (dtypes are baked into
+traced programs), so production entry points call it first thing, and
+tests exercise it in a subprocess (tests/_x64_check.py) to keep the
+main process 32-bit.
+
+The ``JAX_ENABLE_X64`` environment variable wins over the in-code
+default, matching jax's own convention, so a launcher can flip a whole
+job without touching code.
+"""
+
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+
+
+def enable_x64(use_x64: bool = True) -> bool:
+    """Enable (or disable) 64-bit mode, honoring ``JAX_ENABLE_X64``.
+
+    Returns the mode actually set.  Call before any jax computation:
+    already-traced programs keep the dtypes they were traced with.
+    """
+    env = os.getenv("JAX_ENABLE_X64")
+    if env is not None:
+        use_x64 = env not in ("0", "false", "False", "")
+    jax.config.update("jax_enable_x64", bool(use_x64))
+    return bool(use_x64)
+
+
+def x64_enabled() -> bool:
+    return bool(jax.config.read("jax_enable_x64"))
+
+
+def default_key_dtype():
+    """Join-key dtype for newly built relations: int64 once x64 is on
+    (ids above 2^31 stop aliasing), int32 otherwise."""
+    return jnp.int64 if x64_enabled() else jnp.int32

@@ -18,6 +18,8 @@ Public API, by layer:
     cascade_query              — left-deep cascade with cycle-closing filters
     execute_chain / jit_execute_chain / one_round_chain / cascade_chain
                                — the chain surface (pushdown cascades)
+    mapside_cascade_chain      — zero-shuffle merge-join cascade over the
+                                 partitioned store (MS,NJ[A], docs/storage.md)
     shares_skew_chain          — SharesSkew heavy/residual union (1,NJS)
     two_way_join, distributed_groupby_sum — per-round building blocks
     one_round_three_way, cascade_three_way[_agg], one_round_three_way_agg
@@ -40,6 +42,13 @@ Public API, by layer:
     join-tree cascade} for any query; plan_chain / plan_three_way —
     chains, adding {cascade+pushdown, SharesSkew}
 
+  Partitioned storage (docs/storage.md)
+    PartitionSpec, PartitionedRelation, partition_relation, sort_rows
+    co_partitioned, chain_partitioning — the co-location proof
+    ChainPartitioning, chain_mapside_modes, chain_mapside_shuffles,
+    cost_chain_mapside — the map-side candidate's pricing
+    (persistence: repro.checkpoint.save_partitioned / load_partitioned)
+
   Skew layer (docs/skew.md)
     heavy_hitters, chain_key_sketch, detect_chain_skew,
     SkewSplitPlan, SkewCombo, balance_threshold
@@ -56,19 +65,27 @@ from .plan import ChainAggregate, ChainQuery, JoinQuery, QueryAggregate
 from .two_way import two_way_join
 from .executor import (ChainCaps, cascade_chain, cascade_query,
                        chain_edge_inputs, default_chain_caps,
-                       default_query_caps, execute_chain, execute_query,
-                       jit_execute_chain, jit_execute_query, one_round_chain,
+                       default_mapside_caps, default_query_caps,
+                       execute_chain, execute_query,
+                       jit_execute_chain, jit_execute_query,
+                       mapside_cascade_chain, one_round_chain,
                        one_round_query, query_table_inputs, scatter_to_grid,
                        shares_skew_chain)
 from .local import (groupby_sum, groupby_sum_multipass, local_join,
-                    local_join_allpairs, sort_merge_join)
+                    local_join_allpairs, sort_merge_join, sort_rows)
+from .partition import (PartitionSpec, PartitionedRelation,
+                        chain_partitioning, co_partitioned,
+                        default_part_capacity, partition_relation)
 from .one_round import one_round_three_way
 from .cascade import cascade_three_way, cascade_three_way_agg, one_round_three_way_agg
 from .aggregation import distributed_groupby_sum, project_product
-from .cost_model import (ChainStats, JoinStats, QueryStats,
-                         balance_threshold, chain_replications, cost_cascade,
-                         cost_cascade_agg, cost_chain_cascade,
-                         cost_chain_cascade_pushdown, cost_chain_one_round,
+from .cost_model import (ChainPartitioning, ChainStats, JoinStats, QueryStats,
+                         balance_threshold, chain_mapside_modes,
+                         chain_mapside_placed,
+                         chain_mapside_shuffles, chain_replications,
+                         cost_cascade, cost_cascade_agg, cost_chain_cascade,
+                         cost_chain_cascade_pushdown, cost_chain_mapside,
+                         cost_chain_one_round,
                          cost_chain_one_round_agg, cost_chain_shares_skew,
                          cost_one_round, cost_one_round_agg,
                          cost_query_cascade, cost_query_one_round,
@@ -94,11 +111,16 @@ __all__ = [
     "JoinQuery", "QueryAggregate", "ChainQuery", "ChainAggregate", "ChainCaps",
     "execute_query", "jit_execute_query", "one_round_query", "cascade_query",
     "execute_chain", "jit_execute_chain", "one_round_chain", "cascade_chain",
-    "shares_skew_chain",
+    "mapside_cascade_chain", "shares_skew_chain",
     "scatter_to_grid", "query_table_inputs", "chain_edge_inputs",
-    "default_query_caps", "default_chain_caps",
+    "default_query_caps", "default_chain_caps", "default_mapside_caps",
     "sort_merge_join", "local_join", "local_join_allpairs",
-    "groupby_sum", "groupby_sum_multipass",
+    "groupby_sum", "groupby_sum_multipass", "sort_rows",
+    "PartitionSpec", "PartitionedRelation", "partition_relation",
+    "default_part_capacity",
+    "co_partitioned", "chain_partitioning", "ChainPartitioning",
+    "chain_mapside_modes", "chain_mapside_shuffles", "chain_mapside_placed",
+    "cost_chain_mapside",
     "two_way_join", "one_round_three_way",
     "cascade_three_way", "cascade_three_way_agg", "one_round_three_way_agg",
     "distributed_groupby_sum", "project_product",

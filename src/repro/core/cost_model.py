@@ -297,6 +297,179 @@ def cost_chain_one_round_agg(sizes: Sequence[float], k: int,
 
 
 # ---------------------------------------------------------------------------
+# Map-side cascade over co-partitioned storage (MS,NJ)
+# ---------------------------------------------------------------------------
+#
+# When relation j is stored hash-partitioned AND per-partition sorted on
+# the hop's join attribute (the proof is a ChainPartitioning
+# certificate, built by repro.core.partition.chain_partitioning), the
+# cascade's hop j can run entirely map-side on a 1-D grid of P =
+# num_partitions devices: the stored partitions ARE the placement, so
+# the hop ships zero input tuples; the running intermediate is
+# repartitioned at most once per hop (it lands partitioned on the
+# *current* key, the next hop hashes the next key).  Small right sides
+# can instead broadcast (P·r_j tuples, no repartition of the left), and
+# unproven hops fall back to the plain shuffle (left + right).  Reads
+# are charged exactly like the plain cascade: every hop reads both
+# inputs.
+
+@dataclasses.dataclass(frozen=True)
+class ChainPartitioning:
+    """Co-partitioning certificate for one chain cascade.
+
+    num_partitions: P — the 1-D grid size the map-side cascade runs on.
+    salt:           partition-hash salt every proof shares; the executor
+                    repartitions intermediates with the *same* (P, salt)
+                    hash so they land where the stored partitions live.
+    right_proven:   per hop j=1..N−1, whether relation j is stored
+                    partitioned+sorted on that hop's join attribute.
+    left0_proven:   whether relation 0 is pre-partitioned on the first
+                    join attribute (hop 1 then ships nothing at all).
+    """
+
+    num_partitions: int
+    salt: int
+    right_proven: Tuple[bool, ...]
+    left0_proven: bool = False
+
+
+_MODE_RANK = {"mapside": 0, "broadcast": 1, "shuffle": 2}
+
+
+def chain_mapside_modes(sizes: Sequence[float],
+                        prefix_joins: Sequence[float],
+                        part: ChainPartitioning,
+                        broadcast_threshold: Optional[float] = None,
+                        ) -> Tuple[str, ...]:
+    """Cheapest physical mode per cascade hop, given the certificate:
+
+    * ``"mapside"``   — right side proven: 0 shuffled tuples when the
+      left is already partitioned on the hop key (hop 1 with
+      ``left0_proven``), else one |left| repartition;
+    * ``"broadcast"`` — replicate the right side to all P devices
+      (P·r_j tuples), the left stays in place; considered only below
+      ``broadcast_threshold`` when one is given;
+    * ``"shuffle"``   — the plain hash-partition hop (left + right).
+
+    Greedy per-hop choice is optimal for chains: consecutive hops join
+    on *different* attributes, so no partition state survives a hop
+    except relation 0's (consumed by hop 1) — each hop's cheapest mode
+    is independent of the others.  Ties prefer map-side, then
+    broadcast (fewer shuffle rounds at equal tuples).
+    """
+    n = len(sizes)
+    if len(part.right_proven) != n - 1:
+        raise ValueError(f"certificate proves {len(part.right_proven)} hops "
+                         f"for an {n}-relation chain")
+    P = part.num_partitions
+    modes = []
+    left, left_on_key = sizes[0], part.left0_proven
+    for j in range(1, n):
+        opts = {"shuffle": left + sizes[j]}
+        if broadcast_threshold is None or sizes[j] <= broadcast_threshold:
+            opts["broadcast"] = float(P) * sizes[j]
+        if part.right_proven[j - 1]:
+            opts["mapside"] = 0.0 if left_on_key else left
+        modes.append(min(opts, key=lambda m: (opts[m], _MODE_RANK[m])))
+        left, left_on_key = prefix_joins[j - 1], False
+    return tuple(modes)
+
+
+def chain_mapside_shuffles(sizes: Sequence[float],
+                           prefix_joins: Sequence[float],
+                           part: ChainPartitioning,
+                           modes: Sequence[str],
+                           place_output: bool = False) -> Tuple[float, ...]:
+    """Per-hop shuffled-tuple counts of the map-side cascade — the
+    analytic numbers the executor's measured stats must equal exactly
+    (zero on proven hops with an already-partitioned left).
+
+    With ``place_output`` the executor repartitions each hop's output
+    onto the *next* hop's key right away whenever the next hop is
+    proven (the movement is then charged to :func:`chain_mapside_placed`
+    instead), so every proven hop's shuffle is exactly zero; the total
+    moved tuples are identical either way — placement only re-times the
+    single move each intermediate tuple makes."""
+    n = len(sizes)
+    P = part.num_partitions
+    out = []
+    left, left_on_key = sizes[0], part.left0_proven
+    for j, mode in zip(range(1, n), modes):
+        if mode == "mapside":
+            out.append(0.0 if left_on_key else left)
+        elif mode == "broadcast":
+            out.append(float(P) * sizes[j])
+        elif mode == "shuffle":
+            out.append(left + sizes[j])
+        else:
+            raise ValueError(f"unknown hop mode {mode!r}")
+        left = prefix_joins[j - 1]
+        left_on_key = (place_output and j < n - 1
+                       and modes[j] == "mapside")
+    return tuple(out)
+
+
+def chain_mapside_placed(sizes: Sequence[float],
+                         prefix_joins: Sequence[float],
+                         part: ChainPartitioning,
+                         modes: Sequence[str]) -> Tuple[float, ...]:
+    """Per-hop *placed*-tuple counts under ``place_output``: hop j's
+    output (size ``prefix_joins[j-1]``) moves once, at birth, iff the
+    next hop is proven map-side — landing already partitioned on the
+    next hop's join key.  Shuffled + placed together never move any
+    tuple more than once."""
+    n = len(sizes)
+    del part
+    return tuple(
+        prefix_joins[j - 1] if (j < n - 1 and modes[j] == "mapside") else 0.0
+        for j in range(1, n))
+
+
+def cost_chain_mapside(sizes: Sequence[float],
+                       prefix_joins: Sequence[float],
+                       part: ChainPartitioning,
+                       modes: Sequence[str]) -> float:
+    """MS,NJ cost: every hop reads both inputs (same charge as the
+    plain cascade) plus the per-hop shuffles of
+    :func:`chain_mapside_shuffles` — which vanish on proven hops, so a
+    fully co-partitioned chain costs Σ reads alone and each tuple is
+    shuffled at most once across the whole cascade.  ``place_output``
+    does not change this total (it only re-attributes each
+    intermediate's single move from the consuming hop to the producing
+    one), so one cost prices both executor variants."""
+    n = len(sizes)
+    read, left = 0.0, sizes[0]
+    for j in range(1, n):
+        read += left + sizes[j]
+        left = prefix_joins[j - 1]
+    return read + sum(chain_mapside_shuffles(sizes, prefix_joins, part,
+                                             modes))
+
+
+def skew_excess_mapside(stats: "ChainStats", part: ChainPartitioning,
+                        modes: Sequence[str]) -> float:
+    """Hop excess of the map-side cascade: proven hops hash nothing
+    (stored partitions are read in place) except the one left
+    repartition, broadcast hops hash nothing at all, and shuffle hops
+    pay the cascade's usual both-input excess at k=P."""
+    if stats.key_freqs is None:
+        return 0.0
+    P = part.num_partitions
+    total = 0.0
+    left_on_key = part.left0_proven
+    for d, mode in enumerate(modes):
+        entries = stats.key_freqs[d]
+        if mode == "shuffle":
+            total += hop_excess(stats.sizes[d], P, _sketch_top(entries, 1))
+            total += hop_excess(stats.sizes[d + 1], P,
+                                _sketch_top(entries, 2))
+        elif mode == "mapside" and not left_on_key:
+            total += hop_excess(stats.sizes[d], P, _sketch_top(entries, 1))
+        left_on_key = False
+    return total
+
+
+# ---------------------------------------------------------------------------
 # General hypergraph formulas (Shares over an arbitrary query hypergraph)
 # ---------------------------------------------------------------------------
 #

@@ -451,6 +451,199 @@ def cascade_chain(grid: Grid, query: ChainQuery, rels: Sequence[Relation], *,
 
 
 # ---------------------------------------------------------------------------
+# Map-side cascade: merge-join stored partitions, shuffle only when unproven
+# ---------------------------------------------------------------------------
+
+def _device_layout(rel) -> Tuple[Relation, bool]:
+    """Per-device form of a cascade input: a
+    :class:`~repro.core.partition.PartitionedRelation`'s ``parts`` ARE
+    its placement (partition p lives on device p) and are known sorted;
+    a plain grid-scattered :class:`Relation` is used as-is, unsorted."""
+    from .partition import PartitionedRelation
+    if isinstance(rel, PartitionedRelation):
+        return rel.parts, rel.spec.sorted
+    return rel, False
+
+
+def mapside_cascade_chain(grid: Grid, query: ChainQuery, rels, *,
+                          caps: ChainCaps, partitioning, hop_modes,
+                          place_output: bool = False,
+                          measure_skew: bool = False,
+                          join_impl: str = "sort_merge",
+                          ) -> Tuple[Relation, Stats, jnp.ndarray]:
+    """The zero-shuffle cascade over the partitioned store (MS,NJ[A]).
+
+    ``rels`` mixes :class:`~repro.core.partition.PartitionedRelation`
+    (stored hash-partitioned + key-sorted — its ``parts`` feed the grid
+    with no placement hop) and grid-scattered plain :class:`Relation`
+    inputs, in query order.  ``partitioning`` is the
+    :class:`~repro.core.cost_model.ChainPartitioning` certificate and
+    ``hop_modes`` the planner's per-hop choice
+    (:func:`~repro.core.cost_model.chain_mapside_modes`):
+
+    * ``"mapside"`` — relation j is proven co-partitioned on the hop
+      key: the running intermediate repartitions by the *stored* hash
+      (``bucket_hash(key, P, salt)``) onto the partition grid — or
+      moves nothing at all on hop 1 when relation 0 is pre-partitioned
+      on the first join key (``left0_proven``) — and every device
+      merge-joins against its resident partition with the sort skipped
+      on the stored side (``presorted_r``).  The stored relation ships
+      **zero tuples**.
+    * ``"broadcast"`` — relation j replicates to all P devices
+      (charged P·|r_j|); the intermediate does not move.
+    * ``"shuffle"`` — the ordinary :func:`two_way_join` hop (both sides
+      hash-shuffle).
+
+    With ``place_output`` each hop's result is repartitioned onto the
+    *next* hop's join key immediately — whenever the next hop is proven
+    — so the cascade's intermediates land already partitioned where the
+    next stored relation lives and every proven hop shuffles exactly
+    zero tuples.  The movement is reported as ``"placed"`` /
+    ``"hop_placed"`` (charged into ``total``): shuffled + placed
+    together move each tuple at most once, and their sum is identical
+    with or without placement — placement only re-times the move.
+
+    Runs on the 1-D partition grid (``grid.shape == (P,)``).  Stats are
+    the uniform convention — read + shuffled per hop, measured — plus
+    ``"hop_shuffled"``: the per-hop shuffled-tuple vector the map-side
+    benchmark pins against the analytic
+    :func:`~repro.core.cost_model.chain_mapside_shuffles` (and
+    ``"hop_placed"`` against
+    :func:`~repro.core.cost_model.chain_mapside_placed`).  Aggregated
+    queries run one final charged Γ round (no pushdown on this path —
+    re-keying the intermediate would destroy nothing, but the paper's
+    pushdown charge model assumes shuffled intermediates, so the plain
+    convention keeps measured == analytic).
+    """
+    n = query.n_relations
+    P = partitioning.num_partitions
+    if len(grid.shape) != 1 or grid.shape[0] != P:
+        raise ValueError(f"map-side cascade needs the 1-D partition grid "
+                         f"({P},), got {grid.shape}")
+    if len(hop_modes) != n - 1:
+        raise ValueError(f"{n - 1} hops need {n - 1} modes, got "
+                         f"{len(hop_modes)}")
+    for j, mode in enumerate(hop_modes):
+        if mode == "mapside" and not partitioning.right_proven[j]:
+            raise ValueError(f"hop {j + 1} is not proven co-partitioned; "
+                             f"mode 'mapside' would be unsound")
+
+    all_stats: List[Stats] = []
+    hop_shuffled: List[jnp.ndarray] = []
+    hop_placed: List[jnp.ndarray] = []
+    overflow = jnp.zeros((), jnp.bool_)
+    skew = jnp.zeros((), jnp.float32)
+    zero = jnp.zeros((), jnp.float32)
+
+    left, left_sorted = _device_layout(rels[0])
+    left_on_key = bool(partitioning.left0_proven)
+    left_cap = None                       # None => first hop uses caps.recv
+    value_cols: List[str] = [query.values[0]] if query.values[0] else []
+
+    for j in range(1, n):
+        key = query.attrs[j]
+        mode = hop_modes[j - 1]
+        right, right_sorted = _device_layout(rels[j])
+        recv = caps.recv if left_cap is None else max(left_cap, caps.recv)
+        local = caps.local if left_cap is None else max(left_cap, caps.recv)
+        out_cap = caps.out if j == n - 1 else caps.mid
+
+        if mode == "shuffle":
+            if measure_skew:
+                skew = jnp.maximum(skew, _hop_load(grid, left, key, P,
+                                                   salt=j - 1))
+                skew = jnp.maximum(skew, _hop_load(grid, right, key, P,
+                                                   salt=j - 1))
+            left, st, ovf = two_way_join(
+                grid, left, right, key, key,
+                recv_capacity=recv, out_capacity=out_cap,
+                local_capacity=local, salt=j - 1, join_impl=join_impl)
+            all_stats.append(st)
+            hop_shuffled.append(st["shuffled"])
+            overflow = overflow | ovf
+        else:
+            read = (_count(grid, left) + _count(grid, right)
+                    ).astype(jnp.float32)
+            if mode == "broadcast":
+                right, ovf_b = broadcast_along(grid, right, 0, local)
+                overflow = overflow | ovf_b
+                shuffled = _count(grid, right).astype(jnp.float32)
+                pre_l, pre_r = False, False   # the gather interleaves runs
+            else:                             # mapside
+                if left_on_key:
+                    shuffled = zero           # both sides already in place
+                    pre_l = left_sorted
+                else:
+                    if measure_skew:
+                        skew = jnp.maximum(skew, _hop_load(
+                            grid, left, key, P, salt=partitioning.salt))
+                    bucket = grid.map_devices(
+                        lambda r, _a=key: hashing.bucket_hash(
+                            r.col(_a), P, salt=partitioning.salt), left)
+                    left, ovf_s, _ = shuffle_by_bucket(
+                        grid, left, bucket, 0, recv, local_capacity=local)
+                    overflow = overflow | ovf_s
+                    shuffled = _count(grid, left).astype(jnp.float32)
+                    pre_l = False
+                pre_r = right_sorted
+
+            def hop(l, r, _k=key, _c=out_cap, _pl=pre_l, _pr=pre_r):
+                return local_join(l, r, _k, _k, _c, impl=join_impl,
+                                  presorted_l=_pl, presorted_r=_pr)
+
+            left, ovf_j = grid.map_devices(hop, left, right)
+            overflow = overflow | jnp.any(grid.reduce_any(ovf_j))
+            all_stats.append({"read": read, "shuffled": shuffled})
+            hop_shuffled.append(shuffled)
+
+        left_sorted = False
+        left_on_key = False
+        if place_output and j < n - 1 and hop_modes[j] == "mapside":
+            # Land the intermediate already partitioned on the next
+            # hop's key (the stored hash) — its one move, made at birth.
+            next_key = query.attrs[j + 1]
+            bucket = grid.map_devices(
+                lambda r, _a=next_key: hashing.bucket_hash(
+                    r.col(_a), P, salt=partitioning.salt), left)
+            # Per-(dest, source) slots carry ~1/P of a device's share, so
+            # the same slack fits in out_cap/P-sized slots — placement
+            # buffers stay a fraction of a shuffle hop's.
+            slot = -(-out_cap // P) + 256
+            left, ovf_p, _ = shuffle_by_bucket(grid, left, bucket, 0,
+                                               slot,
+                                               local_capacity=out_cap)
+            overflow = overflow | ovf_p
+            hop_placed.append(_count(grid, left).astype(jnp.float32))
+            left_on_key = True
+        else:
+            hop_placed.append(zero)
+        left_cap = out_cap
+        if query.values[j]:
+            value_cols.append(query.values[j])
+
+    if query.aggregate is not None:
+        agg = query.aggregate
+        proj = project_product(grid, left, keys=tuple(agg.keys),
+                               value_cols=value_cols, out_name=agg.out)
+        fin_cap = caps.out
+        left, st_f, ovf_f = distributed_groupby_sum(
+            grid, proj, keys=tuple(agg.keys), value=agg.out,
+            recv_capacity=fin_cap, out_capacity=fin_cap,
+            local_capacity=fin_cap)
+        overflow = overflow | ovf_f
+        all_stats.append(st_f)
+
+    stats = merge_stats(*all_stats)
+    stats["hop_shuffled"] = jnp.stack(hop_shuffled)
+    stats["hop_placed"] = jnp.stack(hop_placed)
+    stats["placed"] = sum(hop_placed, zero)
+    stats["total"] = stats["total"] + stats["placed"]
+    if measure_skew:
+        stats["max_bucket_load"] = skew
+    return left, stats, overflow
+
+
+# ---------------------------------------------------------------------------
 # SkewSplit lowering: the SharesSkew union of per-combination sub-joins
 # ---------------------------------------------------------------------------
 
@@ -568,12 +761,21 @@ def execute_chain(grid: Grid, query: ChainQuery, rels: Sequence[Relation], *,
                   measure_skew: bool = False, local_combine: bool = False,
                   include_final_agg: bool = False,
                   join_impl: str = "sort_merge",
+                  partitioning=None, hop_modes=None,
+                  place_output: bool = False,
                   ) -> Tuple[Relation, Stats, jnp.ndarray]:
     """Execute ``query`` with a planner-chosen strategy:
 
     * ``"one_round"``          — Shares hypercube (1,NJ / 1,NJA)
     * ``"cascade"``            — plain left-deep cascade (N−1,NJ)
     * ``"cascade_pushdown"``   — cascade with aggregation pushdown (N−1,NJA)
+    * ``"mapside"``            — merge-join the partitioned store (MS,NJ[A]);
+      needs ``partitioning`` (the
+      :class:`~repro.core.cost_model.ChainPartitioning` certificate) and
+      ``hop_modes`` from the :class:`~repro.core.planner.ChainPlan`, a
+      1-D grid of ``num_partitions`` devices, and ``rels`` entries that
+      are :class:`~repro.core.partition.PartitionedRelation` on every
+      proven position (:func:`mapside_cascade_chain`).
 
     ``join_impl`` selects the reduce-side join kernel for every
     strategy: ``"sort_merge"`` (default) or the ``"all_pairs"`` oracle
@@ -585,6 +787,16 @@ def execute_chain(grid: Grid, query: ChainQuery, rels: Sequence[Relation], *,
     grid — so it has its own entry point, :func:`shares_skew_chain`,
     taking flat relations plus a ``SkewSplitPlan``.
     """
+    if strategy == "mapside":
+        if partitioning is None or hop_modes is None:
+            raise ValueError("mapside needs partitioning and hop_modes "
+                             "(plan with plan_chain(partitioning=...))")
+        return mapside_cascade_chain(grid, query, rels, caps=caps,
+                                     partitioning=partitioning,
+                                     hop_modes=hop_modes,
+                                     place_output=place_output,
+                                     measure_skew=measure_skew,
+                                     join_impl=join_impl)
     if strategy == "shares_skew":
         raise ValueError(
             "shares_skew runs per-combination grids; call "
@@ -796,14 +1008,17 @@ def chain_edge_inputs(query: ChainQuery, edge_lists,
 
 
 def query_table_inputs(query: JoinQuery, tables,
-                       grid_shape: Sequence[int]) -> List[Relation]:
+                       grid_shape: Sequence[int],
+                       key_dtype=None) -> List[Relation]:
     """Column tables -> scattered per-relation inputs named by the query
     schema.  ``tables[j]`` is a tuple of equal-length key column arrays
     matching relation j's attribute tuple; a trailing value column may
     be included, otherwise a ones value column is synthesized when the
     schema asks for one (so edge lists ``(src, dst)`` work for any
     binary relation — the general counterpart of
-    :func:`chain_edge_inputs`)."""
+    :func:`chain_edge_inputs`).  ``key_dtype`` defaults to int32
+    (int64 needs x64 mode — see ``repro.config.enable_x64``)."""
+    key_dtype = jnp.int32 if key_dtype is None else key_dtype
     rels = []
     for j, cols in enumerate(tables):
         names = query.schema(j)
@@ -811,7 +1026,7 @@ def query_table_inputs(query: JoinQuery, tables,
         if len(cols) not in (arity, len(names)):
             raise ValueError(f"relation {j} needs {arity} key columns "
                              f"(+ optional value), got {len(cols)}")
-        arrays = {names[i]: jnp.asarray(c, jnp.int32)
+        arrays = {names[i]: jnp.asarray(c, key_dtype)
                   for i, c in enumerate(cols[:arity])}
         if query.values[j] is not None:
             val = (jnp.asarray(cols[arity], jnp.float32)
@@ -874,5 +1089,27 @@ def default_chain_caps(stats: ChainStats, grid_shape: Sequence[int],
         recv=per(max(stats.sizes) * repl),
         mid=per(biggest), out=per(biggest),
         local=per(max(stats.sizes) * repl),
+        agg=per(max(stats.prefix_aggs or (256.0,))),
+        join=per(stats.prefix_joins[-1]))
+
+
+def default_mapside_caps(stats: ChainStats, num_partitions: int,
+                         slack: int = 6) -> ChainCaps:
+    """Size ChainCaps for ``mapside_cascade_chain``.
+
+    Base relations never leave their stored partitions on proven hops,
+    so ``mid``/``out`` only have to hold the per-device share of the
+    intermediates (``prefix_joins``) — typically a fraction of the
+    shuffle cascade's budget, which must also fit repartitioned base
+    relations.  ``recv``/``local`` keep base-relation sizing for the
+    unproven hops that fall back to shuffle or broadcast."""
+
+    def per(total):
+        return int(total * slack / num_partitions) + 256
+
+    inter = per(max(stats.prefix_joins))
+    return ChainCaps(
+        recv=per(max(stats.sizes)), mid=inter, out=inter,
+        local=per(max(stats.sizes)),
         agg=per(max(stats.prefix_aggs or (256.0,))),
         join=per(stats.prefix_joins[-1]))

@@ -19,7 +19,15 @@ _SALTS = (0x9E3779B9, 0x85EBCA6B, 0xC2B2AE35, 0x27D4EB2F)
 
 
 def bucket_hash(x: jnp.ndarray, n_buckets: int, salt: int = 0) -> jnp.ndarray:
-    """Hash int keys into [0, n_buckets) with a salted multiplicative hash."""
+    """Hash int keys into [0, n_buckets) with a salted multiplicative hash.
+
+    64-bit keys (x64 mode) fold high xor low word first, so ids that
+    differ only above bit 31 stop colliding; 32-bit keys hash as before
+    bit-for-bit (the fold is the identity when the high word is zero
+    — and int32 inputs have no high word at all)."""
+    if x.dtype.itemsize == 8:
+        u64 = x.astype(jnp.uint64)
+        x = (u64 ^ (u64 >> jnp.uint64(32))).astype(jnp.uint32)
     u = x.astype(jnp.uint32)
     u = (u ^ jnp.uint32(_SALTS[salt % len(_SALTS)])) * jnp.uint32(_KNUTH)
     u = u ^ (u >> jnp.uint32(15))

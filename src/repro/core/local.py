@@ -112,26 +112,56 @@ def _emit_join_columns(left: Relation, right: Relation, left_key: str,
     return cols
 
 
-def _sorted_by_key(key: jnp.ndarray, valid: jnp.ndarray
+def _key_sentinel(dtype) -> int:
+    """Padding sentinel for masked sorted keys: the dtype's max value
+    (dtype-aware so int64 keys under x64 mode keep a sentinel above
+    every real 64-bit id)."""
+    return jnp.iinfo(dtype).max if jnp.issubdtype(dtype, jnp.integer) \
+        else _I32_MAX
+
+
+def _sorted_by_key(key: jnp.ndarray, valid: jnp.ndarray,
+                   presorted: bool = False
                    ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Stable sort by (validity, key): valid rows first in ascending key
     order.  Returns (order, masked) where ``masked`` replaces the
-    trailing invalid rows' keys with INT32_MAX — non-decreasing even
-    when a *valid* key equals INT32_MAX (callers clamp searchsorted
-    results by the valid count to keep that collision harmless)."""
+    trailing invalid rows' keys with the dtype's max — non-decreasing
+    even when a *valid* key equals the sentinel (callers clamp
+    searchsorted results by the valid count to keep that collision
+    harmless).
+
+    ``presorted=True`` asserts the rows already satisfy the sort
+    contract — valid rows first, ascending key (the layout
+    :func:`sort_rows` and the partitioned store guarantee) — and skips
+    the ``lax.sort`` entirely: the map-side merge-join fast path."""
     n = key.shape[0]
+    n_valid = jnp.sum(valid).astype(jnp.int32)
+    sentinel = _key_sentinel(key.dtype)
+    if presorted:
+        order = jnp.arange(n, dtype=jnp.int32)
+        masked = jnp.where(jnp.arange(n) < n_valid, key, sentinel)
+        return order, masked
     inv = (~valid).astype(jnp.int32)
     _, sorted_key, order = jax.lax.sort(
         (inv, key, jnp.arange(n, dtype=jnp.int32)), num_keys=2,
         is_stable=True)
-    n_valid = jnp.sum(valid).astype(jnp.int32)
-    masked = jnp.where(jnp.arange(n) < n_valid, sorted_key, _I32_MAX)
+    masked = jnp.where(jnp.arange(n) < n_valid, sorted_key, sentinel)
     return order, masked
+
+
+def sort_rows(rel: Relation, key: str) -> Relation:
+    """Reorder a relation into the sorted-rows contract: valid rows
+    first, ascending ``key`` (stable).  This is the layout
+    :func:`sort_merge_join` can consume with ``presorted=True`` — the
+    partitioned store sorts every partition this way on write."""
+    order, _ = _sorted_by_key(rel.col(key), rel.valid)
+    return rel.gather(order, jnp.ones(rel.valid.shape, jnp.bool_))
 
 
 def sort_merge_join(left: Relation, right: Relation, left_key: str,
                     right_key: str, out_capacity: int,
                     prefix_l: str = "", prefix_r: str = "",
+                    presorted_l: bool = False, presorted_r: bool = False,
                     ) -> Tuple[Relation, jnp.ndarray]:
     """Equi-join two local relations on ``left_key == right_key`` by
     sorted probe — the data-plane fast path.
@@ -148,6 +178,14 @@ def sort_merge_join(left: Relation, right: Relation, left_key: str,
     ``out_capacity``).  Only the row order differs (key order here,
     left-major row order there) — and, under overflow, which subset of
     matches is kept.
+
+    ``presorted_l`` / ``presorted_r`` assert the corresponding input
+    already satisfies the sorted-rows contract (valid first, ascending
+    key — :func:`sort_rows` / the partitioned store) and skip that
+    input's ``lax.sort``: the map-side merge-join fast path.  Rows that
+    violate the contract silently mis-join, so only pass the flags for
+    inputs whose layout is *proven* (e.g. loaded from a sorted
+    partition manifest).
     """
     # Bound so the saturating scan's combine (a + b with a, b <= cap1)
     # stays within int32: 2·(out_capacity + 1) must not reach 2^31.
@@ -159,8 +197,8 @@ def sort_merge_join(left: Relation, right: Relation, left_key: str,
     n_lv = jnp.sum(left.valid).astype(jnp.int32)
     n_rv = jnp.sum(right.valid).astype(jnp.int32)
 
-    l_order, lk_m = _sorted_by_key(lk, left.valid)
-    r_order, rk_m = _sorted_by_key(rk, right.valid)
+    l_order, lk_m = _sorted_by_key(lk, left.valid, presorted=presorted_l)
+    r_order, rk_m = _sorted_by_key(rk, right.valid, presorted=presorted_r)
 
     # Run-length probe: matches of sorted-left row i live in
     # right-sorted positions [lo[i], hi[i]).  Clamping by the valid
@@ -204,6 +242,7 @@ def sort_merge_join(left: Relation, right: Relation, left_key: str,
 def local_join_allpairs(left: Relation, right: Relation, left_key: str,
                         right_key: str, out_capacity: int,
                         prefix_l: str = "", prefix_r: str = "",
+                        presorted_l: bool = False, presorted_r: bool = False,
                         ) -> Tuple[Relation, jnp.ndarray]:
     """Equi-join two local relations on ``left_key == right_key``.
 
@@ -213,8 +252,17 @@ def local_join_allpairs(left: Relation, right: Relation, left_key: str,
     property-based equivalence suite and available to the executor via
     ``join_impl="all_pairs"``.  Structurally limited to nl·nr < 2^31
     (the flat pair index is int32); sort-merge has no such limit.
+    ``presorted_l``/``presorted_r`` are accepted for interface parity
+    and ignored — the all-pairs compare needs no sort either way.
     """
+    del presorted_l, presorted_r
     lk, rk = left.col(left_key), right.col(right_key)
+    if lk.shape[0] * rk.shape[0] >= 2 ** 31:
+        raise ValueError(
+            f"all_pairs flat pair index overflows int32: "
+            f"{lk.shape[0]} x {rk.shape[0]} = {lk.shape[0] * rk.shape[0]} "
+            f">= 2^31 pairs.  Use join_impl='sort_merge' (no pair-count "
+            f"limit) or shrink the per-device capacities.")
     match = (lk[:, None] == rk[None, :]) & left.valid[:, None] & right.valid[None, :]
     flat = match.reshape(-1)
     # Exclusive prefix count = output slot of each matching pair.
@@ -246,13 +294,16 @@ def local_join(left: Relation, right: Relation, left_key: str, right_key: str,
                out_capacity: int,
                prefix_l: str = "", prefix_r: str = "",
                impl: str = "sort_merge",
+               presorted_l: bool = False, presorted_r: bool = False,
                ) -> Tuple[Relation, jnp.ndarray]:
     """Equi-join two local relations on ``left_key == right_key``.
 
     Dispatches to :func:`sort_merge_join` (default) or the all-pairs
     oracle (``impl="all_pairs"``).  Both return the same matched-tuple
     set and overflow flag; only the row order (and, under overflow,
-    which matches are kept) differs.
+    which matches are kept) differs.  ``presorted_l``/``presorted_r``
+    forward the sorted-rows assertion to the sort-merge path (ignored
+    by all-pairs).
     """
     try:
         fn = JOIN_IMPLS[impl]
@@ -260,7 +311,8 @@ def local_join(left: Relation, right: Relation, left_key: str, right_key: str,
         raise ValueError(
             f"unknown join impl {impl!r}; one of {sorted(JOIN_IMPLS)}")
     return fn(left, right, left_key, right_key, out_capacity,
-              prefix_l=prefix_l, prefix_r=prefix_r)
+              prefix_l=prefix_l, prefix_r=prefix_r,
+              presorted_l=presorted_l, presorted_r=presorted_r)
 
 
 # ---------------------------------------------------------------------------
@@ -341,7 +393,8 @@ def groupby_sum_multipass(rel: Relation, keys: Tuple[str, ...], value: str,
     # Stable lexicographic sort: least-significant key first.
     order = jnp.arange(cap, dtype=jnp.int32)
     for k in reversed(keys):
-        col = jnp.where(rel.valid[order], rel.cols[k][order], _I32_MAX)
+        col = rel.cols[k][order]
+        col = jnp.where(rel.valid[order], col, _key_sentinel(col.dtype))
         order = order[jnp.argsort(col, stable=True)]
     # Invalid rows last: final pass on validity.
     order = order[jnp.argsort(~rel.valid[order], stable=True)]

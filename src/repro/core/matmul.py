@@ -31,10 +31,13 @@ from .two_way import two_way_join
 
 
 def edge_relation(src, dst, val=None, capacity=None,
-                  names=("a", "b", "v")) -> Relation:
-    """Edge list -> relation with attribute names (a, b, v) by default."""
-    src = jnp.asarray(src, jnp.int32)
-    dst = jnp.asarray(dst, jnp.int32)
+                  names=("a", "b", "v"), key_dtype=None) -> Relation:
+    """Edge list -> relation with attribute names (a, b, v) by default.
+    ``key_dtype`` defaults to int32 (int64 needs x64 mode — see
+    ``repro.config.enable_x64``)."""
+    key_dtype = jnp.int32 if key_dtype is None else key_dtype
+    src = jnp.asarray(src, key_dtype)
+    dst = jnp.asarray(dst, key_dtype)
     v = jnp.ones_like(src, dtype=jnp.float32) if val is None else jnp.asarray(val, jnp.float32)
     return Relation.from_arrays(capacity, **{names[0]: src, names[1]: dst, names[2]: v})
 

@@ -1,0 +1,203 @@
+"""Hash-partitioned, key-sorted relations — the map-side-join storage
+layout.
+
+A :class:`PartitionedRelation` holds a relation bucketed into
+``num_partitions`` slices by ``bucket_hash(key, num_partitions, salt)``
+with every slice sorted by (validity, key) — the layout "Cascading
+Map-Side Joins over HBase" exploits: when two relations are
+*co-partitioned* (same key attribute role, same partition count, same
+salt, both sorted), partition p of one joins only partition p of the
+other, so the join needs **no shuffle at all** and the per-partition
+:func:`~repro.core.local.sort_merge_join` can skip its ``lax.sort``
+(``presorted=True``).
+
+The proof side lives here too: :func:`co_partitioned` checks two
+:class:`PartitionSpec` manifests, and :func:`chain_partitioning`
+compiles a chain query's per-relation specs into the
+:class:`~repro.core.cost_model.ChainPartitioning` certificate the
+planner prices and the executor trusts (``docs/storage.md`` spells out
+the rules).  Persistence — manifest + per-partition CRCs — is
+``repro.checkpoint.save_partitioned`` / ``load_partitioned``, which
+round-trips the arrays bit-identically.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import hashing
+from .cost_model import ChainPartitioning
+from .local import partition, sort_rows
+from .relation import Relation
+
+#: Identifier of the hash family behind every PartitionSpec — recorded
+#: in persisted manifests so a future hash change cannot silently break
+#: the co-partitioning proof against old data.
+PARTITION_FN = "salted-fibonacci-mul32"
+
+#: The only sort order the presorted fast path understands.
+SORT_ASCENDING = "ascending"
+
+
+@dataclasses.dataclass(frozen=True)
+class PartitionSpec:
+    """The partitioning manifest of one stored relation.
+
+    key:            the attribute the relation is hash-partitioned and
+                    per-partition sorted on.
+    num_partitions: bucket count P of the partition hash.
+    salt:           salt of ``bucket_hash`` — two relations
+                    co-partition only under the *same* salt.
+    sort_order:     per-partition row order; only ``"ascending"``
+                    (valid rows first, ascending key) qualifies for the
+                    presorted merge path.
+    """
+
+    key: str
+    num_partitions: int
+    salt: int = 0
+    sort_order: str = SORT_ASCENDING
+
+    def __post_init__(self):
+        if self.num_partitions < 1:
+            raise ValueError(f"num_partitions must be >= 1, got "
+                             f"{self.num_partitions}")
+
+    @property
+    def sorted(self) -> bool:
+        return self.sort_order == SORT_ASCENDING
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class PartitionedRelation:
+    """A relation laid out as (num_partitions, part_capacity) columns
+    plus its :class:`PartitionSpec`.  On a 1-D grid of ``num_partitions``
+    devices, ``parts`` *is* the per-device placement — feeding it to the
+    executor costs zero shuffle."""
+
+    parts: Relation                    # columns shaped (P, part_capacity)
+    spec: PartitionSpec
+
+    def tree_flatten(self):
+        return (self.parts,), self.spec
+
+    @classmethod
+    def tree_unflatten(cls, spec, children):
+        return cls(parts=children[0], spec=spec)
+
+    @property
+    def num_partitions(self) -> int:
+        return int(self.parts.valid.shape[0])
+
+    @property
+    def part_capacity(self) -> int:
+        return int(self.parts.valid.shape[1])
+
+    def count(self) -> jnp.ndarray:
+        return jnp.sum(self.parts.valid)
+
+    def to_flat(self) -> Relation:
+        """Collapse back to one flat relation (partition order)."""
+        cols = {n: c.reshape(-1) for n, c in self.parts.cols.items()}
+        return Relation(cols, self.parts.valid.reshape(-1))
+
+
+def partition_relation(rel: Relation, key: str, num_partitions: int, *,
+                       salt: int = 0, part_capacity: Optional[int] = None,
+                       ) -> Tuple[PartitionedRelation, jnp.ndarray]:
+    """Partition a flat relation by ``bucket_hash(key, P, salt)`` and
+    sort every partition by (validity, key) — the write path of the
+    partitioned store.
+
+    ``part_capacity`` defaults to the input capacity (lossless for any
+    key distribution); tighter capacities return overflow=True when a
+    bucket spills.  Returns (partitioned relation, overflow flag).
+    """
+    cap = rel.capacity if part_capacity is None else part_capacity
+    bucket = hashing.bucket_hash(rel.col(key), num_partitions, salt=salt)
+    parts, overflow = partition(rel, bucket, num_partitions, cap)
+    parts = jax.vmap(lambda r: sort_rows(r, key))(parts)
+    spec = PartitionSpec(key=key, num_partitions=num_partitions, salt=salt)
+    return PartitionedRelation(parts, spec), overflow
+
+
+def default_part_capacity(n_rows: int, num_partitions: int,
+                          slack: float = 3.0) -> int:
+    """Per-partition capacity for ``partition_relation``: the expected
+    share ``n_rows / P`` times a skew-slack factor, plus a small pad for
+    tiny relations.  Salted Fibonacci hashing spreads uniform and
+    mildly-skewed keys evenly, so modest slack suffices; a spill is
+    reported through the overflow flag, never silently dropped."""
+    return int(n_rows * slack / num_partitions) + 64
+
+
+def co_partitioned(spec_a: Optional[PartitionSpec],
+                   spec_b: Optional[PartitionSpec],
+                   key_a: Optional[str] = None,
+                   key_b: Optional[str] = None) -> bool:
+    """Prove that two stored relations can merge-join with zero shuffle.
+
+    True iff both specs exist, each is partitioned on the join key its
+    side contributes (``key_a``/``key_b`` default to the spec's own
+    key), the bucket counts and salts match (same hash ⇒ same key lands
+    in the same partition index on both sides), and both are sorted
+    (the merge path consumes sorted runs).  Anything unprovable returns
+    False — the planner then prices a shuffle or broadcast instead;
+    False never affects correctness, only cost.
+    """
+    if spec_a is None or spec_b is None:
+        return False
+    if key_a is not None and spec_a.key != key_a:
+        return False
+    if key_b is not None and spec_b.key != key_b:
+        return False
+    return (spec_a.num_partitions == spec_b.num_partitions
+            and spec_a.salt == spec_b.salt
+            and spec_a.sorted and spec_b.sorted)
+
+
+def chain_partitioning(query, specs: Sequence[Optional[PartitionSpec]],
+                       ) -> Optional[ChainPartitioning]:
+    """Compile a chain query's per-relation :class:`PartitionSpec`\\ s
+    into the planner's :class:`ChainPartitioning` certificate.
+
+    Hop j (1-based) of the cascade joins the running intermediate with
+    relation j on ``query.attrs[j]``; the hop can run map-side iff
+    relation j is stored partitioned+sorted on exactly that attribute
+    under the canonical (num_partitions, salt) — taken from the first
+    provable spec; specs with other hash parameters stay unproven (they
+    would need a repartition anyway).  ``left0_proven`` records whether
+    relation 0 is pre-partitioned on the *first* join attribute
+    (``attrs[1]``), which makes hop 1 fully shuffle-free.
+
+    Returns None when no spec proves anything — the planner then never
+    considers the map-side candidate.
+    """
+    n = query.n_relations
+    if len(specs) != n:
+        raise ValueError(f"query has {n} relations, got {len(specs)} specs")
+    expected = [query.attrs[1]] + [query.attrs[j] for j in range(1, n)]
+    canonical: Optional[Tuple[int, int]] = None
+    for j, spec in enumerate(specs):
+        if spec is not None and spec.sorted and spec.key == expected[j]:
+            canonical = (spec.num_partitions, spec.salt)
+            break
+    if canonical is None:
+        return None
+    P, salt = canonical
+
+    def proven(j: int) -> bool:
+        spec = specs[j]
+        return (spec is not None and spec.sorted
+                and spec.key == expected[j]
+                and spec.num_partitions == P and spec.salt == salt)
+
+    return ChainPartitioning(
+        num_partitions=P, salt=salt,
+        right_proven=tuple(proven(j) for j in range(1, n)),
+        left0_proven=proven(0))

@@ -24,14 +24,16 @@ from typing import Dict, Optional, Tuple
 
 import numpy as np
 
-from .cost_model import (ChainStats, JoinStats, QueryStats,
-                         cost_chain_one_round, cost_chain_shares_skew,
-                         cost_query_cascade, cost_query_one_round,
-                         crossover_reducers, estimate_join_size,
-                         estimate_skew_combos, integer_shares,
-                         integer_shares_query, optimal_shares_chain,
-                         optimal_shares_query, sketch_heavy_entries,
-                         skew_excess_cascade, skew_excess_one_round)
+from .cost_model import (ChainPartitioning, ChainStats, JoinStats,
+                         QueryStats, chain_mapside_modes,
+                         cost_chain_mapside, cost_chain_one_round,
+                         cost_chain_shares_skew, cost_query_cascade,
+                         cost_query_one_round, crossover_reducers,
+                         estimate_join_size, estimate_skew_combos,
+                         integer_shares, integer_shares_query,
+                         optimal_shares_chain, optimal_shares_query,
+                         sketch_heavy_entries, skew_excess_cascade,
+                         skew_excess_mapside, skew_excess_one_round)
 
 
 # ---------------------------------------------------------------------------
@@ -53,6 +55,15 @@ class ChainPlan:
     choice is made on ``adjusted_costs`` — communication plus the
     straggler penalty ``k · Σ hop excess`` (see docs/skew.md); ``costs``
     stays pure communication in the paper's units either way.
+
+    With a :class:`~repro.core.cost_model.ChainPartitioning` certificate
+    (stored inputs are hash-partitioned and sorted — docs/storage.md),
+    the map-side cascade ``MS,NJ[A]`` joins the candidates:
+    ``partitioning`` echoes the certificate, ``hop_modes`` the per-hop
+    physical choice (``mapside`` / ``broadcast`` / ``shuffle``), and a
+    map-side winner's ``grid_shape`` is the 1-D ``(num_partitions,)``
+    grid its executor lowering runs on.  Without a certificate both
+    fields stay None and planning is bit-for-bit the historical rule.
     """
 
     algorithm: str
@@ -64,6 +75,8 @@ class ChainPlan:
     crossover_k: Optional[float]   # enumeration crossover k* (exact, any N)
     skew_detected: bool = False
     adjusted_costs: Optional[Dict[str, float]] = None
+    partitioning: Optional[ChainPartitioning] = None
+    hop_modes: Optional[Tuple[str, ...]] = None
 
     @property
     def predicted_cost(self) -> float:
@@ -71,6 +84,8 @@ class ChainPlan:
 
 
 def _strategy_of(algorithm: str) -> str:
+    if algorithm.startswith("MS,"):
+        return "mapside"
     if "JS" in algorithm:
         return "shares_skew"
     if algorithm.startswith("1,"):
@@ -100,7 +115,9 @@ def crossover_reducers_chain(stats: ChainStats) -> float:
 
 
 def plan_chain(stats: ChainStats, k: int, aggregate: bool, *,
-               skew_slack: float = 1.25) -> ChainPlan:
+               skew_slack: float = 1.25,
+               partitioning: Optional[ChainPartitioning] = None,
+               broadcast_threshold: Optional[float] = None) -> ChainPlan:
     """Choose the cheapest physical plan for an N-way chain.
 
     Arguments:
@@ -122,6 +139,16 @@ def plan_chain(stats: ChainStats, k: int, aggregate: bool, *,
                   ``prefix_joins[-1]``) instead of plain enumeration.
       skew_slack: balance-threshold slack factor (a key is heavy when
                   it alone exceeds ``slack`` fair reducer slices).
+      partitioning: optional :class:`ChainPartitioning` certificate
+                  (from ``repro.core.partition.chain_partitioning``)
+                  proving which hops can merge-join stored partitions
+                  with zero shuffle.  Adds the map-side cascade
+                  ``MS,{N}J[A]`` candidate, priced by
+                  :func:`~repro.core.cost_model.cost_chain_mapside`
+                  with its greedy per-hop mode choice.  None (the
+                  default) keeps planning bit-for-bit historical.
+      broadcast_threshold: optional cap on the right-side size eligible
+                  for a broadcast hop; None compares pure cost.
 
     Returns a :class:`ChainPlan`: the chosen ``algorithm`` (paper
     naming), the matching executor ``strategy``, the real-valued and
@@ -134,6 +161,20 @@ def plan_chain(stats: ChainStats, k: int, aggregate: bool, *,
     costs = stats.costs(k, aggregate, shares=shares)
     suffix = "A" if aggregate else ""
     candidates = [f"{n - 1},{n}J{suffix}", f"1,{n}J{suffix}"]
+
+    hop_modes = None
+    ms_alg = None
+    if partitioning is not None:
+        hop_modes = chain_mapside_modes(stats.sizes, stats.prefix_joins,
+                                        partitioning, broadcast_threshold)
+        ms_alg = f"MS,{n}J{suffix}"
+        costs[ms_alg] = cost_chain_mapside(stats.sizes, stats.prefix_joins,
+                                           partitioning, hop_modes)
+        if aggregate:
+            # The map-side cascade has no sound pushdown (aggregation
+            # re-keys the intermediate); the final Γ round is charged.
+            costs[ms_alg] += 2.0 * stats.prefix_joins[-1]
+        candidates.append(ms_alg)
 
     heavy = sketch_heavy_entries(stats, grid_shape, skew_slack)
     skew_detected = any(heavy)
@@ -150,10 +191,16 @@ def plan_chain(stats: ChainStats, k: int, aggregate: bool, *,
             f"{n - 1},{n}J{suffix}": skew_excess_cascade(stats, k),
             skew_alg: skew_excess_one_round(stats, grid_shape, heavy),
         }
+        if ms_alg is not None:
+            excess[ms_alg] = skew_excess_mapside(stats, partitioning,
+                                                 hop_modes)
         adjusted = {a: costs[a] + k * excess[a] for a in candidates}
         algorithm = min(candidates, key=lambda a: adjusted[a])
     else:
         algorithm = min(candidates, key=lambda a: costs[a])
+    if algorithm == ms_alg:
+        # The map-side lowering runs one device per stored partition.
+        grid_shape = (partitioning.num_partitions,)
     return ChainPlan(
         algorithm=algorithm,
         strategy=_strategy_of(algorithm),
@@ -164,6 +211,8 @@ def plan_chain(stats: ChainStats, k: int, aggregate: bool, *,
         crossover_k=crossover_reducers_chain(stats),
         skew_detected=skew_detected,
         adjusted_costs=adjusted,
+        partitioning=partitioning,
+        hop_modes=hop_modes,
     )
 
 

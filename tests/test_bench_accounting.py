@@ -5,8 +5,11 @@ accounting field (``read`` / ``shuffled`` / ``max_bucket_load`` /
 ``total``) of the checked-in benchmark reports: ``BENCH_nway.json``
 and ``BENCH_skew.json`` as they stood *before* the sort-merge data
 plane landed (the hypergraph generalization re-verified them
-byte-identical), and ``BENCH_triangles.json`` as pinned when the cycle
-query landed.  Regenerating those files must reproduce each field
+byte-identical), ``BENCH_triangles.json`` as pinned when the cycle
+query landed, and ``BENCH_mapside.json`` as pinned when the
+partitioned store landed (its per-hop ``shuffled`` fields are exact
+zeros on proven map-side hops — the zero-shuffle claim itself is under
+this gate).  Regenerating those files must reproduce each field
 bit-identically: neither the join kernel nor the hypergraph surface
 decides which tuples move — only the physical plan does.
 """
@@ -38,7 +41,8 @@ def extract_counts(obj, path=""):
 
 
 @pytest.mark.parametrize("bench", ["BENCH_nway.json", "BENCH_skew.json",
-                                   "BENCH_triangles.json"])
+                                   "BENCH_triangles.json",
+                                   "BENCH_mapside.json"])
 def test_accounting_bit_identical_to_seed(bench):
     path = REPO / bench
     if not path.exists():

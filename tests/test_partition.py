@@ -1,0 +1,479 @@
+"""Partitioned storage + map-side joins (ISSUE 6).
+
+* partition_relation / sort_rows layout invariants and flat round-trip
+* save_partitioned / load_partitioned: bit-identical round-trip
+  (deterministic sweep + hypothesis property when available), manifest
+  spec recovery, CRC corruption detection
+* atomic checkpoint replace: interrupted-swap recovery, ``.old``
+  leftovers never break latest_step / CheckpointManager gc
+* co-partitioning proofs: positive and negative cases, chain
+  certificates (full / partial / none)
+* planner: MS,NJ candidate, broadcast-vs-shuffle-vs-mapside mode
+  crossover, bit-for-bit PR-5 plans when no certificate is given
+* executor: mapside == cascade result equivalence (mixed modes and the
+  all-proven ``place_output`` zero-shuffle path), measured == analytic
+  per-hop shuffled/placed counts
+* guards: all-pairs int32 pair-index overflow raises; x64 and ShardGrid
+  subprocess runs
+"""
+
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import (CheckpointManager, latest_step,
+                              load_partition_spec, load_partitioned, restore,
+                              save, save_partitioned)
+from repro.core import (ChainQuery, PartitionSpec, PartitionedRelation,
+                        SimGrid, chain_mapside_modes, chain_mapside_placed,
+                        chain_mapside_shuffles, chain_partitioning,
+                        chain_stats_exact, co_partitioned, cost_chain_mapside,
+                        default_chain_caps, edge_relation, execute_chain,
+                        local_join_allpairs, partition_relation, plan_chain,
+                        scatter_to_grid, sort_rows)
+from repro.core.cost_model import ChainPartitioning
+from repro.core.hashing import bucket_hash
+from repro.core.relation import Relation
+
+
+def _edges(rng, m, dom):
+    return rng.integers(0, dom, m), rng.integers(0, dom, m)
+
+
+def _chain_inputs(rng, query, m, dom):
+    n = query.n_relations
+    edges = [_edges(rng, m, dom) for _ in range(n)]
+    flat = [edge_relation(s, d, names=query.schema(j))
+            for j, (s, d) in enumerate(edges)]
+    return edges, flat
+
+
+def _partition_chain(query, flat, P, salt=0):
+    prels = []
+    for j, rel in enumerate(flat):
+        key = query.attrs[1] if j == 0 else query.attrs[j]
+        pr, ovf = partition_relation(rel, key, P, salt=salt)
+        assert not bool(ovf)
+        prels.append(pr)
+    return prels
+
+
+def _tuples(rel):
+    cols = sorted(rel.cols)
+    arrs = [np.asarray(rel.cols[c]).reshape(-1) for c in cols]
+    valid = np.asarray(rel.valid).reshape(-1)
+    return sorted(tuple(a[i] for a in arrs) for i in np.nonzero(valid)[0])
+
+
+# ---------------------------------------------------------------------------
+# Partition layout
+# ---------------------------------------------------------------------------
+
+class TestPartitionLayout:
+    def test_partition_buckets_and_sort(self):
+        rng = np.random.default_rng(0)
+        rel = edge_relation(*_edges(rng, 300, 50))
+        pr, ovf = partition_relation(rel, "a", 8, salt=2)
+        assert not bool(ovf)
+        assert pr.num_partitions == 8 and pr.part_capacity == rel.capacity
+        assert pr.spec == PartitionSpec(key="a", num_partitions=8, salt=2)
+        for p in range(8):
+            valid = np.asarray(pr.parts.valid[p])
+            keys = np.asarray(pr.parts.cols["a"][p])[valid]
+            assert (np.asarray(bucket_hash(jnp.asarray(keys), 8, salt=2))
+                    == p).all(), "tuple in the wrong partition"
+            assert (np.diff(keys) >= 0).all(), "partition not key-sorted"
+            # sorted-rows contract: valid rows first
+            assert not valid[np.argmin(valid):].any() or valid.all()
+        assert int(pr.count()) == int(rel.count())
+
+    def test_to_flat_preserves_tuples(self):
+        rng = np.random.default_rng(1)
+        rel = edge_relation(*_edges(rng, 123, 37))
+        pr, _ = partition_relation(rel, "b", 4)
+        assert _tuples(pr.to_flat()) == _tuples(rel)
+
+    def test_sort_rows_contract(self):
+        rel = Relation.from_arrays(
+            16, a=jnp.asarray(np.arange(9, -1, -1), jnp.int32),
+            v=jnp.arange(10, dtype=jnp.float32))
+        srt = sort_rows(rel, "a")
+        valid = np.asarray(srt.valid)
+        keys = np.asarray(srt.col("a"))[valid]
+        assert valid[:10].all() and not valid[10:].any()
+        assert (np.diff(keys) >= 0).all()
+
+    def test_part_capacity_overflow_flag(self):
+        rel = edge_relation(np.zeros(64, np.int32), np.zeros(64, np.int32))
+        _, ovf = partition_relation(rel, "a", 4, part_capacity=8)
+        assert bool(ovf), "all keys in one bucket must overflow cap 8"
+
+
+# ---------------------------------------------------------------------------
+# Persistence
+# ---------------------------------------------------------------------------
+
+class TestPartitionedStore:
+    def _roundtrip(self, tmp_path, seed, m, dom, P, salt):
+        rng = np.random.default_rng(seed)
+        rel = edge_relation(*_edges(rng, m, dom))
+        pr, _ = partition_relation(rel, "a", P, salt=salt)
+        save_partitioned(str(tmp_path), f"r{seed}", pr)
+        back = load_partitioned(str(tmp_path), f"r{seed}")
+        assert back.spec == pr.spec
+        for c in pr.parts.cols:
+            assert (np.asarray(back.parts.cols[c])
+                    == np.asarray(pr.parts.cols[c])).all()
+            assert back.parts.cols[c].dtype == pr.parts.cols[c].dtype
+        assert (np.asarray(back.parts.valid)
+                == np.asarray(pr.parts.valid)).all()
+
+    def test_roundtrip_sweep(self, tmp_path):
+        for seed, m, dom, P, salt in [(0, 50, 11, 2, 0), (1, 200, 64, 8, 3),
+                                      (2, 17, 5, 16, 1), (3, 333, 1000, 5, 7)]:
+            self._roundtrip(tmp_path, seed, m, dom, P, salt)
+
+    def test_roundtrip_property(self, tmp_path):
+        hyp = pytest.importorskip(
+            "hypothesis", reason="hypothesis not installed; the "
+            "deterministic sweep above still covers the round-trip")
+        from hypothesis import given, settings, strategies as st
+
+        @settings(max_examples=15, deadline=None)
+        @given(seed=st.integers(0, 2**31 - 1), m=st.integers(1, 128),
+               dom=st.integers(1, 256), P=st.integers(1, 12))
+        def prop(seed, m, dom, P):
+            self._roundtrip(tmp_path, seed, m, dom, P, salt=seed % 5)
+
+        prop()
+
+    def test_spec_only_read(self, tmp_path):
+        rng = np.random.default_rng(5)
+        pr, _ = partition_relation(edge_relation(*_edges(rng, 40, 9)), "b", 4,
+                                   salt=1)
+        save_partitioned(str(tmp_path), "edges", pr)
+        spec = load_partition_spec(str(tmp_path), "edges")
+        assert spec == PartitionSpec(key="b", num_partitions=4, salt=1)
+        assert load_partition_spec(str(tmp_path), "absent") is None
+
+    def test_corruption_detected(self, tmp_path):
+        rng = np.random.default_rng(6)
+        pr, _ = partition_relation(edge_relation(*_edges(rng, 64, 16)), "a", 2)
+        path = save_partitioned(str(tmp_path), "edges", pr)
+        victim = os.path.join(path, "part_00001.npz")
+        data = dict(np.load(victim))
+        data["a"] = data["a"].copy()
+        data["a"][0] ^= 1                      # silent bit flip in a key
+        np.savez(victim, **data)
+        with pytest.raises(IOError, match="corrupt"):
+            load_partitioned(str(tmp_path), "edges")
+
+    def test_overwrite_replaces_atomically(self, tmp_path):
+        rng = np.random.default_rng(7)
+        rel = edge_relation(*_edges(rng, 64, 16))
+        pr_a, _ = partition_relation(rel, "a", 4)
+        pr_b, _ = partition_relation(rel, "b", 8, salt=2)
+        save_partitioned(str(tmp_path), "edges", pr_a)
+        save_partitioned(str(tmp_path), "edges", pr_b)
+        spec = load_partition_spec(str(tmp_path), "edges")
+        assert spec.key == "b" and spec.num_partitions == 8
+        assert not os.path.exists(os.path.join(str(tmp_path), "edges.old"))
+
+    def test_interrupted_swap_recovers(self, tmp_path):
+        rng = np.random.default_rng(8)
+        pr, _ = partition_relation(edge_relation(*_edges(rng, 64, 16)), "a", 4)
+        save_partitioned(str(tmp_path), "edges", pr)
+        # Simulate a crash between the two renames: old moved aside,
+        # new never moved in.
+        os.rename(os.path.join(str(tmp_path), "edges"),
+                  os.path.join(str(tmp_path), "edges.old"))
+        back = load_partitioned(str(tmp_path), "edges")
+        assert back.spec == pr.spec
+
+
+class TestAtomicCheckpointReplace:
+    def test_resave_step_keeps_a_valid_checkpoint(self, tmp_path):
+        tree = {"w": jnp.arange(8, dtype=jnp.float32)}
+        save(str(tmp_path), 3, tree)
+        save(str(tmp_path), 3, jax.tree.map(lambda a: a + 1, tree))
+        got, _ = restore(str(tmp_path), 3, tree)
+        assert (np.asarray(got["w"]) == np.arange(8) + 1).all()
+        assert not os.path.exists(os.path.join(str(tmp_path), "step_3.old"))
+
+    def test_interrupted_swap_restores_old(self, tmp_path):
+        tree = {"w": jnp.arange(4, dtype=jnp.float32)}
+        save(str(tmp_path), 1, tree)
+        os.rename(os.path.join(str(tmp_path), "step_1"),
+                  os.path.join(str(tmp_path), "step_1.old"))
+        assert latest_step(str(tmp_path)) == 1   # recovery ran
+        got, _ = restore(str(tmp_path), 1, tree)
+        assert (np.asarray(got["w"]) == np.arange(4)).all()
+
+    def test_gc_ignores_old_leftovers(self, tmp_path):
+        mgr = CheckpointManager(str(tmp_path), keep_n=2, async_write=False)
+        tree = {"w": jnp.zeros(2)}
+        os.makedirs(os.path.join(str(tmp_path), "step_0.old"))
+        for s in range(4):
+            mgr.save(s, tree, block=True)   # _gc must not crash on .old
+        assert latest_step(str(tmp_path)) == 3
+
+
+# ---------------------------------------------------------------------------
+# Co-partitioning proofs
+# ---------------------------------------------------------------------------
+
+class TestCoPartitioningProof:
+    A4 = PartitionSpec(key="a", num_partitions=4, salt=0)
+
+    def test_positive(self):
+        assert co_partitioned(self.A4, self.A4)
+        b4 = PartitionSpec(key="b", num_partitions=4, salt=0)
+        assert co_partitioned(self.A4, b4, key_a="a", key_b="b")
+
+    @pytest.mark.parametrize("other,kwargs", [
+        (None, {}),
+        (PartitionSpec(key="a", num_partitions=8, salt=0), {}),   # P differs
+        (PartitionSpec(key="a", num_partitions=4, salt=1), {}),   # salt differs
+        (PartitionSpec(key="a", num_partitions=4, salt=0,
+                       sort_order="none"), {}),                   # unsorted
+        (PartitionSpec(key="b", num_partitions=4, salt=0),
+         {"key_b": "a"}),                                         # wrong attr
+    ])
+    def test_negative(self, other, kwargs):
+        assert not co_partitioned(self.A4, other, **kwargs)
+
+    def test_chain_certificate_full(self):
+        query = ChainQuery.chain(4)
+        specs = [PartitionSpec(key=query.attrs[1], num_partitions=8)] + [
+            PartitionSpec(key=query.attrs[j], num_partitions=8)
+            for j in range(1, 4)]
+        part = chain_partitioning(query, specs)
+        assert part == ChainPartitioning(num_partitions=8, salt=0,
+                                         right_proven=(True, True, True),
+                                         left0_proven=True)
+
+    def test_chain_certificate_partial_and_salt_mismatch(self):
+        query = ChainQuery.chain(4)
+        specs = [None,
+                 PartitionSpec(key=query.attrs[1], num_partitions=8, salt=2),
+                 PartitionSpec(key=query.attrs[2], num_partitions=8, salt=5),
+                 PartitionSpec(key="wrong", num_partitions=8, salt=2)]
+        part = chain_partitioning(query, specs)
+        # canonical (P=8, salt=2) from the first provable spec; the
+        # salt-5 and wrong-key specs stay unproven.
+        assert part.right_proven == (True, False, False)
+        assert not part.left0_proven and part.salt == 2
+
+    def test_chain_certificate_none(self):
+        query = ChainQuery.chain(3)
+        assert chain_partitioning(query, [None, None, None]) is None
+        with pytest.raises(ValueError):
+            chain_partitioning(query, [None, None])
+
+
+# ---------------------------------------------------------------------------
+# Planner: the MS,NJ candidate and mode crossover
+# ---------------------------------------------------------------------------
+
+class TestMapsidePlanning:
+    def _stats(self, rng, n=4, m=150, dom=300):
+        return chain_stats_exact([_edges(rng, m, dom) for _ in range(n)])
+
+    def test_mode_crossover(self):
+        part = ChainPartitioning(num_partitions=4, salt=0,
+                                 right_proven=(True, False, False),
+                                 left0_proven=True)
+        sizes = [100.0, 100.0, 10.0, 1000.0]
+        prefix = [50.0, 30.0, 20.0]
+        modes = chain_mapside_modes(sizes, prefix, part)
+        # hop1 proven+left-on-key: free map-side beats everything;
+        # hop2 unproven, tiny right: broadcast 4·10 < shuffle 50+10;
+        # hop3 unproven, huge right: shuffle 30+1000 < broadcast 4000.
+        assert modes == ("mapside", "broadcast", "shuffle")
+        # a threshold below the hop2 right size disables its broadcast
+        modes_t = chain_mapside_modes(sizes, prefix, part,
+                                      broadcast_threshold=5.0)
+        assert modes_t == ("mapside", "shuffle", "shuffle")
+
+    def test_shuffle_and_placed_vectors(self):
+        part = ChainPartitioning(num_partitions=4, salt=0,
+                                 right_proven=(True, True, True),
+                                 left0_proven=True)
+        sizes = [100.0] * 4
+        prefix = [40.0, 30.0, 20.0]
+        modes = ("mapside",) * 3
+        assert chain_mapside_shuffles(sizes, prefix, part, modes) == \
+            (0.0, 40.0, 30.0)
+        # place_output moves each intermediate at birth instead
+        assert chain_mapside_shuffles(sizes, prefix, part, modes,
+                                      place_output=True) == (0.0, 0.0, 0.0)
+        assert chain_mapside_placed(sizes, prefix, part, modes) == \
+            (40.0, 30.0, 0.0)
+        # invariant: total movement identical either way
+        assert sum(chain_mapside_shuffles(sizes, prefix, part, modes)) == \
+            sum(chain_mapside_shuffles(sizes, prefix, part, modes,
+                                       place_output=True)) + \
+            sum(chain_mapside_placed(sizes, prefix, part, modes))
+        reads = sum(sizes) + prefix[0] + prefix[1]
+        assert cost_chain_mapside(sizes, prefix, part, modes) == \
+            reads + 70.0
+
+    def test_plan_picks_mapside_when_proven(self):
+        rng = np.random.default_rng(10)
+        stats = self._stats(rng)
+        part = ChainPartitioning(num_partitions=8, salt=0,
+                                 right_proven=(True, True, True),
+                                 left0_proven=True)
+        plan = plan_chain(stats, k=8, aggregate=False, partitioning=part)
+        assert plan.algorithm == "MS,4J" and plan.strategy == "mapside"
+        assert plan.grid_shape == (8,)
+        assert plan.hop_modes == ("mapside",) * 3
+        assert plan.partitioning == part
+        assert plan.costs["MS,4J"] < plan.costs["3,4J"]
+
+    def test_no_certificate_keeps_plans_bitforbit(self):
+        rng = np.random.default_rng(11)
+        stats = self._stats(rng)
+        for aggregate in (False, True):
+            assert plan_chain(stats, k=8, aggregate=aggregate) == \
+                plan_chain(stats, k=8, aggregate=aggregate, partitioning=None)
+            plan = plan_chain(stats, k=8, aggregate=aggregate)
+            assert plan.partitioning is None and plan.hop_modes is None
+            assert "MS,4J" not in "".join(plan.costs)
+
+
+# ---------------------------------------------------------------------------
+# Executor: map-side cascade == shuffle cascade
+# ---------------------------------------------------------------------------
+
+class TestMapsideExecution:
+    P = 4
+
+    def _setup(self, seed, n, m, dom):
+        rng = np.random.default_rng(seed)
+        query = ChainQuery.chain(n)
+        edges, flat = _chain_inputs(rng, query, m, dom)
+        stats = chain_stats_exact(edges)
+        caps = default_chain_caps(stats, (self.P,), slack=8)
+        grid = SimGrid((self.P,))
+        ref, _, ovf = execute_chain(
+            grid, query, [scatter_to_grid(r, (self.P,)) for r in flat],
+            strategy="cascade", caps=caps)
+        assert not bool(ovf)
+        return query, flat, stats, caps, grid, _tuples(ref)
+
+    def test_all_proven_place_output_zero_shuffle(self):
+        query, flat, stats, caps, grid, want = self._setup(20, 4, 150, 300)
+        prels = _partition_chain(query, flat, self.P)
+        part = chain_partitioning(query, [pr.spec for pr in prels])
+        plan = plan_chain(stats, k=self.P, aggregate=False, partitioning=part)
+        assert plan.hop_modes == ("mapside",) * 3
+        out, st, ovf = execute_chain(
+            grid, query, prels, strategy="mapside", caps=caps,
+            partitioning=part, hop_modes=plan.hop_modes, place_output=True)
+        assert not bool(ovf)
+        assert _tuples(out) == want
+        shuffled = tuple(float(x) for x in np.asarray(st["hop_shuffled"]))
+        placed = tuple(float(x) for x in np.asarray(st["hop_placed"]))
+        assert shuffled == (0.0, 0.0, 0.0)
+        assert placed == chain_mapside_placed(
+            stats.sizes, stats.prefix_joins, part, plan.hop_modes)
+        assert float(st["total"]) == float(st["read"]) + sum(placed)
+
+    def test_mixed_modes_match_cascade_and_analytic(self):
+        query, flat, stats, caps, grid, want = self._setup(21, 4, 120, 24)
+        prels = _partition_chain(query, flat, self.P)
+        # only relation 2 stored partitioned; others arrive scattered
+        specs = [None, None, prels[2].spec, None]
+        part = chain_partitioning(query, specs)
+        plan = plan_chain(stats, k=self.P, aggregate=False, partitioning=part)
+        rels = [scatter_to_grid(r, (self.P,)) for r in flat]
+        rels[2] = prels[2]
+        out, st, ovf = execute_chain(
+            grid, query, rels, strategy="mapside", caps=caps,
+            partitioning=part, hop_modes=plan.hop_modes)
+        assert not bool(ovf)
+        assert _tuples(out) == want
+        measured = tuple(float(x) for x in np.asarray(st["hop_shuffled"]))
+        assert measured == chain_mapside_shuffles(
+            stats.sizes, stats.prefix_joins, part, plan.hop_modes)
+
+    def test_aggregated_mapside_matches_cascade(self):
+        rng = np.random.default_rng(22)
+        query = ChainQuery.chain(3, aggregate=True)
+        edges, flat = _chain_inputs(rng, query, 100, 40)
+        stats = chain_stats_exact(edges)
+        caps = default_chain_caps(stats, (self.P,), slack=8)
+        grid = SimGrid((self.P,))
+        prels = _partition_chain(query, flat, self.P)
+        part = chain_partitioning(query, [pr.spec for pr in prels])
+        plan = plan_chain(stats, k=self.P, aggregate=True, partitioning=part)
+        assert plan.algorithm.startswith(("MS,", "1,", "2,"))
+        out, st, ovf = execute_chain(
+            grid, query, prels, strategy="mapside", caps=caps,
+            partitioning=part, hop_modes=("mapside", "mapside"))
+        assert not bool(ovf)
+        ref, _, _ = execute_chain(
+            grid, query, [scatter_to_grid(r, (self.P,)) for r in flat],
+            strategy="cascade", caps=caps)
+        assert _tuples(out) == _tuples(ref)
+
+    def test_unproven_mapside_mode_rejected(self):
+        query, flat, stats, caps, grid, _ = self._setup(23, 3, 40, 10)
+        part = ChainPartitioning(num_partitions=self.P, salt=0,
+                                 right_proven=(False, True),
+                                 left0_proven=False)
+        with pytest.raises(ValueError, match="not proven"):
+            execute_chain(grid, query,
+                          [scatter_to_grid(r, (self.P,)) for r in flat],
+                          strategy="mapside", caps=caps, partitioning=part,
+                          hop_modes=("mapside", "mapside"))
+
+    def test_mapside_needs_certificate(self):
+        query, flat, stats, caps, grid, _ = self._setup(24, 3, 40, 10)
+        with pytest.raises(ValueError, match="partitioning"):
+            execute_chain(grid, query,
+                          [scatter_to_grid(r, (self.P,)) for r in flat],
+                          strategy="mapside", caps=caps)
+
+
+# ---------------------------------------------------------------------------
+# Guards + subprocess acceptance runs
+# ---------------------------------------------------------------------------
+
+class TestGuards:
+    def test_allpairs_pair_index_overflow_raises(self):
+        big = Relation.from_arrays(
+            50_000, a=jnp.zeros(50_000, jnp.int32),
+            v=jnp.zeros(50_000, jnp.float32))
+        with pytest.raises(ValueError, match="overflows int32"):
+            local_join_allpairs(big, big.rename({"v": "w"}), "a", "a",
+                                out_capacity=64)
+
+
+def test_mapside_on_shard_grid_subprocess():
+    """Acceptance: the fully proven map-side cascade executes on a real
+    8-device ShardGrid with zero per-hop shuffled tuples (subprocess
+    keeps pytest single-device)."""
+    out = subprocess.run(
+        [sys.executable, "tests/_mapside_shard_check.py"],
+        capture_output=True, text=True, timeout=600)
+    assert out.returncode == 0, out.stdout + out.stderr
+    assert "OK" in out.stdout
+
+
+def test_x64_keys_subprocess():
+    """Acceptance: int64 join keys above 2^32 join correctly under
+    jax_enable_x64 (subprocess: the flag must be set before JAX arrays
+    exist)."""
+    out = subprocess.run(
+        [sys.executable, "tests/_x64_check.py"],
+        capture_output=True, text=True, timeout=600)
+    assert out.returncode == 0, out.stdout + out.stderr
+    assert "OK" in out.stdout
