@@ -1,0 +1,161 @@
+#!/usr/bin/env python
+"""Pass 3 — repo-specific AST lint (no third-party deps).
+
+Rules (docs/analysis.md):
+
+R001  No iteration over unsorted sets in the planner / cost model /
+      plan IR (``plan.py``, ``planner.py``, ``cost_model.py``).  Plan
+      enumeration must be deterministic: two runs over the same stats
+      must pick the same plan, or BENCH artifacts and the verifier's
+      cost cross-check drift.  Wrap the iterable in ``sorted(...)``.
+
+R002  No host synchronization (``.item()``, ``.block_until_ready()``)
+      inside ``src/repro/core`` lowering bodies.  A host sync inside a
+      traced function either fails under jit or silently serializes
+      the device pipeline.
+
+R003  No bare ``np.int32``/``jnp.int32`` casts applied to key-ish
+      expressions (``key``, ``src``, ``dst``, ``heavy``, ``col``,
+      ``vals``) outside ``repro.config``.  Key columns must be cast
+      with ``repro.config.default_key_dtype()`` so x64 mode widens
+      them everywhere at once.  A deliberate narrow cast is allowed
+      with a ``# lint: allow-key-cast`` comment on the same line.
+
+Usage: ``python scripts/lint_repro.py [--root DIR]``.  Prints
+``path:line: RULE message`` per violation; exit 1 iff any.
+"""
+
+from __future__ import annotations
+
+import argparse
+import ast
+import pathlib
+import re
+import sys
+from typing import List, Tuple
+
+R001_FILES = ("plan.py", "planner.py", "cost_model.py")
+KEYISH = re.compile(r"(?i)\b(key|src|dst|heavy|col|vals)\w*\b")
+PRAGMA = "lint: allow-key-cast"
+
+Violation = Tuple[pathlib.Path, int, str, str]
+
+
+def _is_set_producing(node: ast.expr) -> bool:
+    """True if ``node`` evaluates to a set with no deterministic order."""
+    if isinstance(node, (ast.Set, ast.SetComp)):
+        return True
+    if isinstance(node, ast.Call):
+        fn = node.func
+        if isinstance(fn, ast.Name) and fn.id in ("set", "frozenset"):
+            return True
+        if isinstance(fn, ast.Attribute) and fn.attr in (
+                "union", "intersection", "difference",
+                "symmetric_difference"):
+            # Only set methods have these names in this codebase.
+            return True
+    if isinstance(node, ast.BinOp) and isinstance(
+            node.op, (ast.BitOr, ast.BitAnd, ast.Sub, ast.BitXor)):
+        return _is_set_producing(node.left) or _is_set_producing(node.right)
+    return False
+
+
+def _is_int32_attr(node: ast.expr) -> bool:
+    return (isinstance(node, ast.Attribute) and node.attr == "int32"
+            and isinstance(node.value, ast.Name)
+            and node.value.id in ("np", "jnp", "numpy"))
+
+
+class _Linter(ast.NodeVisitor):
+    def __init__(self, path: pathlib.Path, lines: List[str],
+                 check_r001: bool) -> None:
+        self.path = path
+        self.lines = lines
+        self.check_r001 = check_r001
+        self.violations: List[Violation] = []
+
+    def _add(self, node: ast.AST, rule: str, message: str) -> None:
+        line = node.lineno
+        if rule == "R003" and PRAGMA in self.lines[line - 1]:
+            return
+        self.violations.append((self.path, line, rule, message))
+
+    # -- R001 ------------------------------------------------------------
+    def _check_iterable(self, node: ast.expr) -> None:
+        if self.check_r001 and _is_set_producing(node):
+            self._add(node, "R001",
+                      "iteration over an unsorted set makes plan "
+                      "enumeration nondeterministic; wrap in sorted(...)")
+
+    def visit_For(self, node: ast.For) -> None:
+        self._check_iterable(node.iter)
+        self.generic_visit(node)
+
+    def _visit_comp(self, node) -> None:
+        for gen in node.generators:
+            self._check_iterable(gen.iter)
+        self.generic_visit(node)
+
+    visit_ListComp = _visit_comp
+    visit_SetComp = _visit_comp
+    visit_DictComp = _visit_comp
+    visit_GeneratorExp = _visit_comp
+
+    # -- R002 / R003 -----------------------------------------------------
+    def visit_Call(self, node: ast.Call) -> None:
+        fn = node.func
+        if isinstance(fn, ast.Attribute):
+            if fn.attr in ("item", "block_until_ready"):
+                self._add(node, "R002",
+                          f".{fn.attr}() is a host sync inside a lowering "
+                          "body; return the array and reduce on the host "
+                          "boundary instead")
+            if (fn.attr == "astype" and node.args
+                    and _is_int32_attr(node.args[0])
+                    and KEYISH.search(ast.unparse(fn.value))):
+                self._add(node, "R003",
+                          "bare int32 cast on a key expression; use "
+                          "repro.config.default_key_dtype() so x64 mode "
+                          "widens it (or annotate # lint: allow-key-cast)")
+        if _is_int32_attr(fn) and node.args and KEYISH.search(
+                ast.unparse(node.args[0])):
+            self._add(node, "R003",
+                      "bare int32 constructor on a key expression; use "
+                      "repro.config.default_key_dtype() (or annotate "
+                      "# lint: allow-key-cast)")
+        self.generic_visit(node)
+
+
+def lint_file(path: pathlib.Path, check_r001: bool) -> List[Violation]:
+    source = path.read_text()
+    tree = ast.parse(source, filename=str(path))
+    linter = _Linter(path, source.splitlines(), check_r001)
+    linter.visit(tree)
+    return linter.violations
+
+
+def main(argv=None) -> int:
+    parser = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    parser.add_argument("--root", default=".",
+                        help="repository root (default: cwd)")
+    args = parser.parse_args(argv)
+    root = pathlib.Path(args.root)
+    core = root / "src" / "repro" / "core"
+    if not core.is_dir():
+        print(f"error: {core} not found (run from the repo root or pass "
+              f"--root)", file=sys.stderr)
+        return 2
+
+    violations: List[Violation] = []
+    for path in sorted(core.glob("*.py")):
+        violations.extend(lint_file(path, path.name in R001_FILES))
+
+    for path, line, rule, message in violations:
+        print(f"{path}:{line}: {rule} {message}")
+    n = len(violations)
+    print(f"lint_repro: {n} violation(s) in src/repro/core")
+    return 1 if n else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

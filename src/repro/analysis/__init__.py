@@ -1,0 +1,45 @@
+"""Static analysis: certify every plan before it runs.
+
+Three passes over the planner's output and the executor's lowerings —
+none of which execute a join (docs/analysis.md):
+
+1. **Plan checker** (:mod:`.plan_verifier`) — grid/budget arithmetic,
+   capacity pigeonhole floors, cycle-closing filters, int32 pair-index
+   overflow, partitioning-certificate soundness, and Afrati–Ullman
+   replication lower bounds with per-plan gap metrics.
+2. **Jaxpr audit** (:mod:`.jaxpr_audit`) — abstract traces of every
+   lowering, walked for key-dtype narrowing, float count accumulation,
+   donation violations, weak types, and jit cache-key coverage.
+3. **Source lint** (``scripts/lint_repro.py``) — AST rules keeping the
+   planner deterministic and the lowerings host-sync-free.
+
+``repro-verify`` (:mod:`.cli`) drives passes 1–2 over the bench corpus
+(:mod:`.bench_targets`); findings are :class:`.report.Finding`\\ s in
+:class:`.report.VerifierReport`\\ s.
+"""
+
+from .report import (ERROR, WARNING, Finding, VerifierReport,
+                     reports_to_json)
+from .plan_verifier import (COST_RTOL, GAP_WARN_FACTOR,
+                            verify_chain_caps, verify_chain_costs,
+                            verify_chain_plan, verify_grid,
+                            verify_join_steps, verify_partitioning,
+                            verify_query_caps, verify_query_plan,
+                            verify_replication_bound)
+from .bench_targets import BenchTarget, TARGET_BUILDERS, all_bench_targets
+from .jaxpr_audit import (audit_donation, audit_jit_cache,
+                          audit_lowerings, audit_traced)
+from .cli import main as verify_main, verify_bench_targets
+
+__all__ = [
+    "ERROR", "WARNING", "Finding", "VerifierReport", "reports_to_json",
+    "COST_RTOL", "GAP_WARN_FACTOR",
+    "verify_grid", "verify_join_steps", "verify_chain_caps",
+    "verify_query_caps", "verify_partitioning",
+    "verify_replication_bound", "verify_chain_costs",
+    "verify_chain_plan", "verify_query_plan",
+    "BenchTarget", "TARGET_BUILDERS", "all_bench_targets",
+    "audit_traced", "audit_donation", "audit_jit_cache",
+    "audit_lowerings",
+    "verify_main", "verify_bench_targets",
+]

@@ -1,0 +1,100 @@
+"""``repro-verify`` — certify plans before anything runs.
+
+Drives the static analyzer from the command line / CI:
+
+* ``repro-verify --all-bench`` rebuilds every plan behind the five
+  ``BENCH_*.json`` sweeps (:mod:`repro.analysis.bench_targets`) and
+  runs the plan checker on each;
+* ``--bench NAME`` (repeatable) restricts to named sweeps;
+* ``--audit`` adds the jaxpr audit of every executor lowering;
+* ``--out FILE`` writes the JSON report artifact.
+
+Exit status is 0 iff no report contains an error-severity finding —
+warnings are printed and serialized but do not fail certification.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+from typing import List, Optional, Sequence
+
+from .bench_targets import TARGET_BUILDERS, all_bench_targets
+from .plan_verifier import verify_chain_plan, verify_query_plan
+from .report import VerifierReport, reports_to_json
+
+
+def verify_bench_targets(names: Optional[Sequence[str]] = None,
+                         ) -> List[VerifierReport]:
+    """Build the bench corpus and certify every target."""
+    reports: List[VerifierReport] = []
+    for t in all_bench_targets(names):
+        if t.kind == "chain":
+            rep = verify_chain_plan(t.query, t.stats, t.plan, t.caps,
+                                    specs=t.specs, target=t.name)
+        else:
+            rep = verify_query_plan(t.query, t.stats, t.plan, t.caps,
+                                    target=t.name)
+        reports.append(rep)
+    return reports
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    parser = argparse.ArgumentParser(
+        prog="repro-verify",
+        description="Statically certify join plans and executor "
+                    "lowerings (no execution).")
+    parser.add_argument(
+        "--all-bench", action="store_true",
+        help="verify every plan behind the BENCH_*.json sweeps")
+    parser.add_argument(
+        "--bench", action="append", metavar="NAME", default=[],
+        choices=sorted(TARGET_BUILDERS),
+        help="verify one sweep's plans (repeatable); "
+             f"choices: {', '.join(sorted(TARGET_BUILDERS))}")
+    parser.add_argument(
+        "--audit", action="store_true",
+        help="also trace every executor lowering and audit its jaxpr")
+    parser.add_argument(
+        "--out", metavar="FILE", default=None,
+        help="write the JSON report artifact here")
+    args = parser.parse_args(argv)
+
+    if not (args.all_bench or args.bench or args.audit):
+        parser.error("nothing to do: pass --all-bench, --bench NAME "
+                     "and/or --audit")
+
+    reports: List[VerifierReport] = []
+    t0 = time.time()
+    if args.all_bench or args.bench:
+        names = None if args.all_bench else args.bench
+        reports.extend(verify_bench_targets(names))
+    if args.audit:
+        from .jaxpr_audit import audit_lowerings
+        reports.extend(audit_lowerings())
+    elapsed = time.time() - t0
+
+    for rep in reports:
+        print(rep.summary())
+        for f in rep.findings:
+            print(f"    {f.severity.upper()} {f.code} @ {f.where}")
+            print(f"        {f.message}")
+
+    n_err = sum(len(r.errors) for r in reports)
+    n_warn = sum(len(r.findings) for r in reports) - n_err
+    ok = all(r.ok for r in reports)
+    print(f"{len(reports)} target(s) in {elapsed:.1f}s: "
+          f"{n_err} error(s), {n_warn} warning(s) — "
+          f"{'CERTIFIED' if ok else 'REJECTED'}")
+
+    if args.out:
+        with open(args.out, "w") as fh:
+            fh.write(reports_to_json(reports))
+            fh.write("\n")
+        print(f"report written to {args.out}")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

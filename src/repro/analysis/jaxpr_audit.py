@@ -1,0 +1,397 @@
+"""Pass 2 — the jaxpr audit: trace every lowering abstractly and walk
+the jaxpr for dtype, donation and cache hazards.
+
+Nothing executes: each lowering (`one_round_chain`, `one_round_query`,
+`cascade_query`, `mapside_cascade_chain`, and the `jit_execute_*`
+wrappers) is traced with abstract values on tiny static shapes — the
+jaxpr is the same program CI runs at bench size, so defects found here
+are defects there.  Checks:
+
+* **Key-dtype narrowing** (``KEY_DTYPE_NARROWED``): a signed
+  ``int64 → int32`` ``convert_element_type`` reachable from a key
+  column.  Under x64, silently folding keys back to 32 bits re-merges
+  keys that differ only in their high bits — the exact bug class the
+  x64 configuration exists to prevent.  Taint starts at the key-column
+  invars and dies at boolean- and unsigned-valued equations
+  (comparisons, membership masks and the deliberate fold inside
+  ``bucket_hash`` carry no signed key *values* onward).  ``sort`` and
+  sub-jaxpr calls propagate taint per-output, so an ``argsort``
+  permutation or a ``searchsorted`` position — bounded by the buffer
+  size, safe to narrow — is not confused with the key column it was
+  derived from.
+* **Float count accumulation** (``FLOAT_COUNT_ACCUM``): a ≥32-bit
+  integer converted to float32 and *directly* summed — float32 loses
+  count exactness above 2²⁴.  Converting a reduction's scalar *result*
+  for the stats dict is fine and not flagged.
+* **Donation** (``DONATED_INPUT_RETURNED``): a ``jit`` program with
+  donated inputs returning one of those inputs unchanged — the caller
+  would read a buffer XLA may have reused.
+* **Weak types** (``WEAK_TYPE_INPUT``): weak-typed abstract inputs, a
+  Python-scalar recompilation hazard.
+* **Cache key coverage** (``CACHE_KEY_MISS`` / ``CACHE_KEY_COLLISION``):
+  the ``jit_execute_*`` LRU keys must hit on identical plans and miss
+  on any changed option/capacity/donation flag — a collision silently
+  runs the wrong program; a miss retraces every call.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Iterable, List, Optional, Sequence, Set, Tuple
+
+import numpy as np
+
+from .. import config
+from .report import ERROR, WARNING, VerifierReport
+
+#: Attribute names treated as key columns when tracing the standard
+#: chain/triangle lowerings (query attributes are single letters).
+_VALUE_PREFIXES = ("v", "w", "p")
+
+
+# ---------------------------------------------------------------------------
+# Jaxpr walking
+# ---------------------------------------------------------------------------
+
+def _is_signed_int(dtype: Any) -> bool:
+    return np.issubdtype(np.dtype(dtype), np.signedinteger)
+
+
+def _sub_jaxprs(eqn: Any) -> Iterable[Tuple[Any, Optional[Sequence[Any]]]]:
+    """(inner jaxpr, invar-mapping) pairs of one equation.  The mapping
+    pairs the inner jaxpr's invars positionally with the eqn's invars
+    where that correspondence holds (pjit/call/scan-style); ``None``
+    means the correspondence is unknown and taint is propagated
+    conservatively (every inner invar inherits the union)."""
+    out: List[Tuple[Any, Optional[Sequence[Any]]]] = []
+    for name, val in eqn.params.items():
+        vals = val if isinstance(val, (list, tuple)) else [val]
+        for v in vals:
+            jx = getattr(v, "jaxpr", None)
+            if jx is not None and hasattr(jx, "eqns"):
+                # ClosedJaxpr: positional mapping holds for pjit /
+                # core_call / while/cond bodies closely enough for
+                # taint purposes; fall back to conservative when the
+                # arity differs.
+                mapping = (eqn.invars if len(jx.invars) == len(eqn.invars)
+                           else None)
+                out.append((jx, mapping))
+            elif hasattr(v, "eqns") and hasattr(v, "invars"):
+                mapping = (eqn.invars if len(v.invars) == len(eqn.invars)
+                           else None)
+                out.append((v, mapping))
+    return out
+
+
+def _walk(jaxpr: Any, tainted: Set[int], report: VerifierReport,
+          where: str) -> List[bool]:
+    """Propagate key taint through one (open) jaxpr, flagging hazards.
+    Returns a per-outvar taint flag (in outvar order)."""
+    produced_by: Dict[int, Any] = {}
+    for eqn in jaxpr.eqns:
+        in_taint = any(id(v) in tainted for v in eqn.invars
+                       if hasattr(v, "aval"))
+        prim = eqn.primitive.name
+
+        if prim == "convert_element_type" and in_taint:
+            src = eqn.invars[0].aval
+            dst = eqn.outvars[0].aval
+            if (_is_signed_int(src.dtype) and _is_signed_int(dst.dtype)
+                    and np.dtype(src.dtype).itemsize == 8
+                    and np.dtype(dst.dtype).itemsize == 4):
+                report.add(
+                    "KEY_DTYPE_NARROWED", ERROR, f"{where}: {eqn}",
+                    "int64 key values are narrowed to int32 inside the "
+                    "lowering; under x64 this silently folds distinct "
+                    "keys together — cast with the configured key dtype "
+                    "(repro.config.default_key_dtype) instead")
+
+        if prim == "reduce_sum":
+            src_eqn = produced_by.get(id(eqn.invars[0]))
+            if (src_eqn is not None
+                    and src_eqn.primitive.name == "convert_element_type"):
+                conv_src = src_eqn.invars[0].aval
+                conv_dst = src_eqn.outvars[0].aval
+                if (_is_signed_int(conv_src.dtype)
+                        and np.dtype(conv_src.dtype).itemsize >= 4
+                        and np.dtype(conv_dst.dtype) == np.float32
+                        and getattr(conv_src, "shape", ()) != ()):
+                    report.add(
+                        "FLOAT_COUNT_ACCUM", WARNING, f"{where}: {eqn}",
+                        "integer counts are converted to float32 and then "
+                        "summed — exact only below 2^24; sum first (or "
+                        "accumulate in float64/int64) and convert the "
+                        "scalar result")
+
+        # Recurse into inner jaxprs (pjit, scan, cond, while bodies).
+        # When the inner outvars line up with the eqn's outvars, taint
+        # maps per-output: a call whose tainted key input only feeds
+        # some of its outputs (e.g. a searchsorted position alongside a
+        # gathered key column) taints exactly those.
+        per_out: Optional[List[bool]] = None
+        inner_out_taint = False
+        for sub, mapping in _sub_jaxprs(eqn):
+            inner = sub.jaxpr if hasattr(sub, "jaxpr") else sub
+            if mapping is not None:
+                sub_taint = {id(iv) for iv, ov in zip(inner.invars, mapping)
+                             if hasattr(ov, "aval") and id(ov) in tainted}
+            else:
+                sub_taint = ({id(iv) for iv in inner.invars}
+                             if in_taint else set())
+            flags = _walk(inner, sub_taint, report, where)
+            inner_out_taint |= any(flags)
+            if len(flags) == len(eqn.outvars):
+                per_out = (flags if per_out is None
+                           else [a or b for a, b in zip(per_out, flags)])
+            else:
+                per_out = None
+
+        # ``sort`` permutes operands to outputs positionally: the
+        # argsort permutation (iota operand) stays clean while the
+        # sorted key column stays tainted.
+        if prim == "sort" and len(eqn.invars) == len(eqn.outvars):
+            per_out = [hasattr(v, "aval") and id(v) in tainted
+                       for v in eqn.invars]
+
+        for i, ov in enumerate(eqn.outvars):
+            produced_by[id(ov)] = eqn
+            aval = getattr(ov, "aval", None)
+            if aval is None:
+                continue
+            # Taint kills: booleans carry no key values onward, and
+            # unsigned values are the deliberate bucket_hash fold —
+            # bucket ids, not keys.
+            dt = np.dtype(aval.dtype)
+            if dt == np.bool_ or np.issubdtype(dt, np.unsignedinteger):
+                continue
+            t = (per_out[i] if per_out is not None
+                 else (in_taint or inner_out_taint))
+            if t:
+                tainted.add(id(ov))
+    return [hasattr(v, "aval") and id(v) in tainted for v in jaxpr.outvars]
+
+
+def _key_leaf_indices(tree: Any) -> List[int]:
+    """Indices (in flatten order) of the leaves that are key columns.
+
+    Relations flatten to (sorted column names…, valid) with the names
+    in the treedef, not the leaf paths, so the walk mirrors the flatten
+    order structurally: integer columns whose name is not a value
+    column are keys; validity masks and non-relation leaves are not."""
+    from ..core.partition import PartitionedRelation
+    from ..core.relation import Relation
+
+    out: List[int] = []
+    state = {"idx": 0}
+
+    def walk(obj: Any) -> None:
+        if isinstance(obj, PartitionedRelation):
+            walk(obj.parts)
+            return
+        if isinstance(obj, Relation):
+            for name in sorted(obj.cols):   # Relation.tree_flatten order
+                leaf = obj.cols[name]
+                if (not name.startswith(_VALUE_PREFIXES)
+                        and name != "valid"
+                        and np.issubdtype(np.asarray(leaf).dtype,
+                                          np.integer)):
+                    out.append(state["idx"])
+                state["idx"] += 1
+            state["idx"] += 1               # the valid mask
+            return
+        if isinstance(obj, (list, tuple)):
+            for child in obj:
+                walk(child)
+            return
+        if isinstance(obj, dict):
+            for key in sorted(obj):
+                walk(obj[key])
+            return
+        state["idx"] += 1                   # opaque leaf: not a key
+
+    walk(tree)
+    return out
+
+
+def audit_traced(closed_jaxpr: Any, tree_for_taint: Any, target: str,
+                 report: Optional[VerifierReport] = None) -> VerifierReport:
+    """Audit one traced lowering: seed taint at the key-column invars
+    (located by their pytree paths in ``tree_for_taint``, whose flatten
+    order matches the jaxpr invars) and walk the whole program."""
+    report = report if report is not None else VerifierReport(target=target)
+    jaxpr = closed_jaxpr.jaxpr
+    key_idx = set(_key_leaf_indices(tree_for_taint))
+    tainted = {id(v) for i, v in enumerate(jaxpr.invars) if i in key_idx}
+    for i, v in enumerate(jaxpr.invars):
+        aval = getattr(v, "aval", None)
+        if aval is not None and getattr(aval, "weak_type", False):
+            report.add(
+                "WEAK_TYPE_INPUT", WARNING, f"invar {i}",
+                "abstract input is weak-typed: a Python scalar reached "
+                "the trace, so every distinct value recompiles — wrap "
+                "inputs in jnp.asarray with an explicit dtype")
+    _walk(jaxpr, tainted, report, target)
+    report.metrics["n_eqns"] = _count_eqns(jaxpr)
+    return report
+
+
+def _count_eqns(jaxpr: Any) -> int:
+    n = len(jaxpr.eqns)
+    for eqn in jaxpr.eqns:
+        for sub, _ in _sub_jaxprs(eqn):
+            inner = sub.jaxpr if hasattr(sub, "jaxpr") else sub
+            n += _count_eqns(inner)
+    return n
+
+
+def audit_donation(traced: Any, donated_leaf_count: int,
+                   target: str) -> VerifierReport:
+    """A donated invar returned as an output is a use-after-donate for
+    the caller.  ``traced`` is the result of ``jit(f).trace(args)``
+    with ``donate_argnums=(0,)``; the first ``donated_leaf_count``
+    invars are the donated buffers."""
+    report = VerifierReport(target=target)
+    jaxpr = traced.jaxpr.jaxpr if hasattr(traced.jaxpr, "jaxpr") \
+        else traced.jaxpr
+    donated = {id(v) for v in jaxpr.invars[:donated_leaf_count]}
+    for i, ov in enumerate(jaxpr.outvars):
+        if id(ov) in donated:
+            report.add(
+                "DONATED_INPUT_RETURNED", ERROR, f"output {i}",
+                "a donated input buffer is returned unchanged; the "
+                "caller would read memory XLA may already have reused — "
+                "copy the array or drop it from donate_argnums")
+    return report
+
+
+# ---------------------------------------------------------------------------
+# The audited lowerings
+# ---------------------------------------------------------------------------
+
+def _chain_fixture(n: int = 3, rows: int = 16) -> Tuple[Any, Any, Any]:
+    from ..core import ChainCaps, ChainQuery, chain_edge_inputs
+    rng = np.random.default_rng(0)
+    query = ChainQuery.chain(n)
+    dt = config.default_key_dtype()
+    edges = [(rng.integers(0, 8, rows).astype(dt),
+              rng.integers(0, 8, rows).astype(dt)) for _ in range(n)]
+    caps = ChainCaps(recv=64, mid=128, out=256, local=64, agg=64, join=128)
+    return query, edges, caps
+
+
+def audit_lowerings(include_jit: bool = True) -> List[VerifierReport]:
+    """Trace and audit every executor lowering (abstract, no
+    execution).  Returns one report per lowering; runs in seconds on
+    CPU."""
+    import jax
+    from ..core import (ChainQuery, JoinQuery, SimGrid, chain_edge_inputs,
+                        chain_partitioning, default_part_capacity,
+                        jit_execute_chain, partition_relation,
+                        query_table_inputs)
+    from ..core.executor import (cascade_query, mapside_cascade_chain,
+                                 one_round_chain, one_round_query)
+    from ..core.relation import Relation
+
+    reports: List[VerifierReport] = []
+    query, edges, caps = _chain_fixture(3)
+
+    # one_round_chain on its (2, 2) hypercube.
+    grid_shape = (2, 2)
+    rels = chain_edge_inputs(query, edges, grid_shape)
+    closed = jax.make_jaxpr(
+        lambda r: one_round_chain(SimGrid(grid_shape), query, r,
+                                  caps=caps))(rels)
+    reports.append(audit_traced(closed, rels, "jaxpr/one_round_chain"))
+
+    # one_round_query + cascade_query on the triangle.
+    tri = JoinQuery.triangle()
+    tri_tables = [e for e in edges]
+    tri_grid = (2, 2, 2)
+    tri_rels = query_table_inputs(tri, tri_tables, tri_grid)
+    closed = jax.make_jaxpr(
+        lambda r: one_round_query(SimGrid(tri_grid), tri, r,
+                                  caps=caps))(tri_rels)
+    reports.append(audit_traced(closed, tri_rels, "jaxpr/one_round_query"))
+
+    flat_rels = query_table_inputs(tri, tri_tables, (4,))
+    closed = jax.make_jaxpr(
+        lambda r: cascade_query(SimGrid((4,)), tri, r, caps=caps))(flat_rels)
+    reports.append(audit_traced(closed, flat_rels, "jaxpr/cascade_query"))
+
+    # mapside_cascade_chain over a real partitioned store (P = 4).
+    P = 4
+    prels: List[Any] = []
+    specs: List[Any] = []
+    for j, (s, d) in enumerate(edges):
+        key = query.attrs[1] if j == 0 else query.attrs[j]
+        names = (query.attrs[j], query.attrs[j + 1])
+        rel = Relation.from_arrays(**{names[0]: s, names[1]: d})
+        prel, _ = partition_relation(
+            rel, key, P, part_capacity=default_part_capacity(len(s), P))
+        prels.append(prel)
+        specs.append(prel.spec)
+    part = chain_partitioning(query, specs)
+    modes = tuple("mapside" if p else "shuffle" for p in part.right_proven)
+    closed = jax.make_jaxpr(
+        lambda r: mapside_cascade_chain(SimGrid((P,)), query, r,
+                                        partitioning=part, hop_modes=modes,
+                                        caps=caps))(prels)
+    reports.append(audit_traced(closed, prels,
+                                "jaxpr/mapside_cascade_chain"))
+
+    if include_jit:
+        # jit_execute_chain with donation: donation + weak-type checks
+        # on the traced program.
+        run = jit_execute_chain(SimGrid(grid_shape), query,
+                                strategy="one_round", caps=caps,
+                                donate=True)
+        traced = run.trace(rels)
+        n_leaves = len(jax.tree_util.tree_leaves(rels))
+        rep = audit_donation(traced, n_leaves, "jaxpr/jit_execute_chain")
+        audit_traced(traced.jaxpr, rels, "jaxpr/jit_execute_chain",
+                     report=rep)
+        reports.append(rep)
+        reports.append(audit_jit_cache())
+    return reports
+
+
+def audit_jit_cache() -> VerifierReport:
+    """Cache-key coverage of the ``jit_execute_*`` LRU caches: the key
+    must cover every input that changes the traced program.  Identical
+    plans must HIT (no retrace per call); any changed option, capacity
+    or donation flag must MISS (a hit there would silently run the
+    wrong program)."""
+    from ..core import SimGrid, jit_execute_chain
+    from ..core.executor import ChainCaps
+
+    report = VerifierReport(target="jaxpr/jit_cache_key")
+    query, _, caps = _chain_fixture(3)
+    grid = SimGrid((2, 2))
+    base = dict(strategy="one_round", caps=caps, donate=False)
+    f0 = jit_execute_chain(grid, query, **base)
+    if jit_execute_chain(SimGrid((2, 2)), query, **base) is not f0:
+        report.add(
+            "CACHE_KEY_MISS", ERROR, "jit_execute_chain",
+            "two identical (grid shape, query, strategy, caps) plans "
+            "compiled to different programs — the cache key is "
+            "over-specific and every call retraces")
+    variants = {
+        "strategy": dict(base, strategy="cascade"),
+        "caps": dict(base, caps=ChainCaps(recv=65, mid=128, out=256,
+                                          local=64, agg=64, join=128)),
+        "donate": dict(base, donate=True),
+        "opts(measure_skew)": dict(base, measure_skew=True),
+        "opts(join_impl)": dict(base, join_impl="all_pairs"),
+    }
+    for name, kwargs in variants.items():
+        if jit_execute_chain(grid, query, **kwargs) is f0:
+            report.add(
+                "CACHE_KEY_COLLISION", ERROR, f"jit_execute_chain/{name}",
+                f"changing {name} returned the SAME compiled program — "
+                f"the cache key does not cover it, so a different plan "
+                f"silently runs the wrong executable")
+    other_query = _chain_fixture(4)[0]
+    if jit_execute_chain(grid, other_query, **base) is f0:
+        report.add(
+            "CACHE_KEY_COLLISION", ERROR, "jit_execute_chain/query",
+            "a different query hit the same cache entry")
+    return report

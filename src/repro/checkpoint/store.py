@@ -239,6 +239,7 @@ def save_partitioned(directory: str, name: str, prel) -> str:
         "num_partitions": spec.num_partitions,
         "salt": spec.salt,
         "sort_order": spec.sort_order,
+        "key_dtype": spec.key_dtype or cols[spec.key].dtype.name,
         "part_capacity": prel.part_capacity,
         "columns": columns,
         "dtypes": {c: cols[c].dtype.name for c in columns},
@@ -269,10 +270,16 @@ def load_partition_spec(directory: str, name: str):
     if (manifest.get("format") != PARTITIONED_FORMAT
             or manifest.get("partition_fn") != PARTITION_FN):
         return None
+    # Legacy manifests predate the key_dtype field: fall back to the
+    # key column's recorded storage dtype, which is what the partition
+    # hash actually saw at write time.
+    key_dtype = (manifest.get("key_dtype")
+                 or manifest["dtypes"].get(manifest["key"]))
     return PartitionSpec(key=manifest["key"],
                          num_partitions=manifest["num_partitions"],
                          salt=manifest["salt"],
-                         sort_order=manifest["sort_order"])
+                         sort_order=manifest["sort_order"],
+                         key_dtype=key_dtype)
 
 
 def load_partitioned(directory: str, name: str):

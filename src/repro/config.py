@@ -41,3 +41,22 @@ def default_key_dtype():
     """Join-key dtype for newly built relations: int64 once x64 is on
     (ids above 2^31 stop aliasing), int32 otherwise."""
     return jnp.int64 if x64_enabled() else jnp.int32
+
+
+def key_dtype_name() -> str:
+    """Canonical name of the current key dtype (``"int32"`` /
+    ``"int64"``) — what partitioned-store manifests and
+    :class:`~repro.core.cost_model.ChainPartitioning` certificates
+    record, so a certificate minted under one x64 configuration is
+    rejected (not silently merge-joined on folded hashes) under the
+    other."""
+    return "int64" if x64_enabled() else "int32"
+
+
+#: Largest flat pair index the all-pairs join kernel can form without
+#: overflowing its int32 arithmetic — `nl * nr` must stay below this.
+INT32_PAIR_LIMIT = 2 ** 31
+
+#: Exclusive upper bound on sort-merge output capacities (the kernel's
+#: int32 position arithmetic needs out_capacity < 2**30 - 1).
+SORT_MERGE_MAX_CAP = 2 ** 30 - 1

@@ -93,7 +93,9 @@ from .cost_model import (ChainPartitioning, ChainStats, JoinStats, QueryStats,
                          hop_excess, hop_peak_load, integer_shares,
                          integer_shares_query, optimal_k1_k2,
                          optimal_shares_chain, optimal_shares_query,
-                         query_replications, skew_clamped_shape)
+                         query_replications,
+                         replication_lower_bound_chain,
+                         replication_lower_bound_query, skew_clamped_shape)
 from .planner import (ChainPlan, Plan, QueryPlan, chain_stats_exact,
                       chain_stats_from_three_way, crossover_reducers_chain,
                       plan_chain, plan_query, plan_three_way, query_stats_exact,
@@ -130,6 +132,7 @@ __all__ = [
     "cost_chain_cascade", "cost_chain_cascade_pushdown",
     "cost_chain_shares_skew", "skew_clamped_shape",
     "cost_query_one_round", "cost_query_cascade", "query_replications",
+    "replication_lower_bound_chain", "replication_lower_bound_query",
     "optimal_shares_query", "integer_shares_query",
     "balance_threshold", "hop_peak_load", "hop_excess",
     "chain_replications", "optimal_shares_chain", "integer_shares",

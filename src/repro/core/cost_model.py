@@ -246,6 +246,28 @@ def integer_shares(sizes: Sequence[float], k: int) -> Tuple[int, ...]:
     return tuple(shares)
 
 
+def replication_lower_bound_chain(sizes: Sequence[float], k: int) -> float:
+    """Afrati–Ullman lower bound on one-round chain communication at
+    cluster size k: the cost at the *real-valued* optimal share vector
+    (PAPERS.md, "Optimizing Multiway Joins in a Map-Reduce Environment"
+    — the replication rate of any hypercube assignment is bounded below
+    by the Lagrangean optimum).  Any executable integer-share plan must
+    cost at least this; the static verifier reports the gap
+    ``chosen/floor − 1`` per plan and rejects a chosen cost below the
+    floor (a cost-model inconsistency)."""
+    return cost_chain_one_round(sizes, k)
+
+
+def replication_lower_bound_query(rel_dims: Sequence[Sequence[int]],
+                                  sizes: Sequence[float], k: int) -> float:
+    """The general-hypergraph counterpart of
+    :func:`replication_lower_bound_chain`: the one-round Shares cost at
+    the real-valued optimum of :func:`optimal_shares_query` — the floor
+    for any integer-share grid on the same incidence (for the uniform
+    triangle this is the classic ``3r + 3r·k^{1/3}``)."""
+    return cost_query_one_round(rel_dims, sizes, k)
+
+
 def cost_chain_cascade(sizes: Sequence[float],
                        prefix_joins: Sequence[float]) -> float:
     """(N−1),NJ cost: Σ_{rounds} 2·(left input + right input), left-deep.
@@ -325,12 +347,20 @@ class ChainPartitioning:
                     partitioned+sorted on that hop's join attribute.
     left0_proven:   whether relation 0 is pre-partitioned on the first
                     join attribute (hop 1 then ships nothing at all).
+    key_dtype:      dtype name the proof's key columns were partitioned
+                    under (``"int32"``/``"int64"``).  The partition hash
+                    folds 64-bit keys before bucketing, so a certificate
+                    minted under one x64 configuration is *unsound* under
+                    the other — the executor rejects the mismatch instead
+                    of silently merge-joining on folded hashes.  ``None``
+                    (legacy certificates) skips the check.
     """
 
     num_partitions: int
     salt: int
     right_proven: Tuple[bool, ...]
     left0_proven: bool = False
+    key_dtype: Optional[str] = None
 
 
 _MODE_RANK = {"mapside": 0, "broadcast": 1, "shuffle": 2}

@@ -55,6 +55,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 import jax
 import jax.numpy as jnp
 
+from .. import config
 from ..kernels.hash_partition import bucket_counts
 from . import hashing
 from .aggregation import distributed_groupby_sum, project_product
@@ -125,23 +126,11 @@ _CLOSE = "_cc_"        # rename prefix for cycle-closing duplicate attrs
 
 
 def _join_steps(query: JoinQuery, order: Sequence[int]):
-    """Left-deep reduce-side plan along ``order``: per hop, the incoming
-    relation index, the equi-join attribute (the first shared one, in
-    the relation's attribute order), and the remaining shared attributes
-    — the cycle-closing equalities applied as post-join filters."""
-    order = tuple(order)
-    if sorted(order) != list(range(query.n_relations)):
-        raise ValueError(f"join order {order} is not a permutation of "
-                         f"the {query.n_relations} relations")
-    acc = set(query.relations[order[0]])
-    steps = []
-    for j in order[1:]:
-        shared = [a for a in query.relations[j] if a in acc]
-        if not shared:
-            raise ValueError(f"join order {order} disconnects at relation {j}")
-        steps.append((j, shared[0], tuple(shared[1:])))
-        acc |= set(query.relations[j])
-    return steps
+    """Left-deep reduce-side plan along ``order`` — the query IR's
+    :meth:`~repro.core.plan.JoinQuery.join_steps`, which the static
+    verifier introspects so the plan it certifies is exactly the plan
+    the executor runs."""
+    return query.join_steps(order)
 
 
 def _close_cycle(acc: Relation, extras: Sequence[str]) -> Relation:
@@ -527,6 +516,14 @@ def mapside_cascade_chain(grid: Grid, query: ChainQuery, rels, *,
         if mode == "mapside" and not partitioning.right_proven[j]:
             raise ValueError(f"hop {j + 1} is not proven co-partitioned; "
                              f"mode 'mapside' would be unsound")
+    if (partitioning.key_dtype is not None
+            and partitioning.key_dtype != config.key_dtype_name()):
+        raise ValueError(
+            f"partitioning certificate was minted over "
+            f"{partitioning.key_dtype} keys but the current configuration "
+            f"uses {config.key_dtype_name()}; the partition hash folds "
+            f"64-bit keys, so the stored layout proves nothing here — "
+            f"repartition under the current dtype")
 
     all_stats: List[Stats] = []
     hop_shuffled: List[jnp.ndarray] = []
@@ -653,7 +650,9 @@ def _heavy_member(col: jnp.ndarray, heavy) -> jnp.ndarray:
     heavy = np.asarray(heavy)
     if heavy.size == 0:
         return jnp.zeros(col.shape, jnp.bool_)
-    hv = jnp.asarray(heavy.astype(np.int32))
+    # Compare in the column's own dtype: an int32 cast here would
+    # truncate int64 heavy keys and misclassify their tuples.
+    hv = jnp.asarray(heavy).astype(col.dtype)  # lint: allow-key-cast
     return jnp.any(col[:, None] == hv[None, :], axis=1)
 
 
@@ -716,12 +715,19 @@ def shares_skew_chain(query: ChainQuery, rels: Sequence[Relation], plan, *,
         stats: Stats = {"read": zero, "shuffled": zero, "total": zero}
         if measure_skew:
             stats["max_bucket_load"] = zero
+        # Key dtypes come from the actual input columns so an empty
+        # result under x64 still carries int64 keys.
+        key_dt: dict = {}
+        for j, rel in enumerate(rels):
+            for a in query.relations[j]:
+                key_dt.setdefault(a, rel.col(a).dtype)
         if query.aggregate is not None:
-            schema = {query.aggregate.keys[0]: jnp.int32,
-                      query.aggregate.keys[1]: jnp.int32,
-                      query.aggregate.out: jnp.float32}
+            schema = {k: key_dt.get(k, config.default_key_dtype())
+                      for k in query.aggregate.keys}
+            schema[query.aggregate.out] = jnp.float32
         else:
-            schema = {a: jnp.int32 for a in query.attrs}
+            schema = {a: key_dt.get(a, config.default_key_dtype())
+                      for a in query.attrs}
             for j, v in enumerate(query.values):
                 if v is not None:
                     schema[v] = rels[j].col(v).dtype
@@ -1016,9 +1022,10 @@ def query_table_inputs(query: JoinQuery, tables,
     be included, otherwise a ones value column is synthesized when the
     schema asks for one (so edge lists ``(src, dst)`` work for any
     binary relation — the general counterpart of
-    :func:`chain_edge_inputs`).  ``key_dtype`` defaults to int32
-    (int64 needs x64 mode — see ``repro.config.enable_x64``)."""
-    key_dtype = jnp.int32 if key_dtype is None else key_dtype
+    :func:`chain_edge_inputs`).  ``key_dtype`` defaults to the
+    configured key dtype — int64 under x64 mode, else int32 (see
+    ``repro.config.default_key_dtype``)."""
+    key_dtype = config.default_key_dtype() if key_dtype is None else key_dtype
     rels = []
     for j, cols in enumerate(tables):
         names = query.schema(j)

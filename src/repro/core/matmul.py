@@ -33,9 +33,10 @@ from .two_way import two_way_join
 def edge_relation(src, dst, val=None, capacity=None,
                   names=("a", "b", "v"), key_dtype=None) -> Relation:
     """Edge list -> relation with attribute names (a, b, v) by default.
-    ``key_dtype`` defaults to int32 (int64 needs x64 mode — see
-    ``repro.config.enable_x64``)."""
-    key_dtype = jnp.int32 if key_dtype is None else key_dtype
+    ``key_dtype`` defaults to the configured key dtype — int64 under
+    x64 mode, else int32 (see ``repro.config.default_key_dtype``)."""
+    from .. import config
+    key_dtype = config.default_key_dtype() if key_dtype is None else key_dtype
     src = jnp.asarray(src, key_dtype)
     dst = jnp.asarray(dst, key_dtype)
     v = jnp.ones_like(src, dtype=jnp.float32) if val is None else jnp.asarray(val, jnp.float32)

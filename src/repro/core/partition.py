@@ -55,12 +55,19 @@ class PartitionSpec:
     sort_order:     per-partition row order; only ``"ascending"``
                     (valid rows first, ascending key) qualifies for the
                     presorted merge path.
+    key_dtype:      dtype name of the key column the partitioning was
+                    computed over (``"int32"``/``"int64"``).  The
+                    partition hash folds 64-bit keys before bucketing,
+                    so a spec minted under one x64 configuration proves
+                    nothing under the other; ``None`` (legacy manifests)
+                    is a wildcard for backward compatibility.
     """
 
     key: str
     num_partitions: int
     salt: int = 0
     sort_order: str = SORT_ASCENDING
+    key_dtype: Optional[str] = None
 
     def __post_init__(self):
         if self.num_partitions < 1:
@@ -122,7 +129,8 @@ def partition_relation(rel: Relation, key: str, num_partitions: int, *,
     bucket = hashing.bucket_hash(rel.col(key), num_partitions, salt=salt)
     parts, overflow = partition(rel, bucket, num_partitions, cap)
     parts = jax.vmap(lambda r: sort_rows(r, key))(parts)
-    spec = PartitionSpec(key=key, num_partitions=num_partitions, salt=salt)
+    spec = PartitionSpec(key=key, num_partitions=num_partitions, salt=salt,
+                         key_dtype=str(rel.col(key).dtype))
     return PartitionedRelation(parts, spec), overflow
 
 
@@ -145,16 +153,21 @@ def co_partitioned(spec_a: Optional[PartitionSpec],
     True iff both specs exist, each is partitioned on the join key its
     side contributes (``key_a``/``key_b`` default to the spec's own
     key), the bucket counts and salts match (same hash ⇒ same key lands
-    in the same partition index on both sides), and both are sorted
-    (the merge path consumes sorted runs).  Anything unprovable returns
-    False — the planner then prices a shuffle or broadcast instead;
-    False never affects correctness, only cost.
+    in the same partition index on both sides), the recorded key dtypes
+    agree (the hash folds 64-bit keys, so mixed widths bucket
+    differently; a ``None`` legacy dtype is a wildcard), and both are
+    sorted (the merge path consumes sorted runs).  Anything unprovable
+    returns False — the planner then prices a shuffle or broadcast
+    instead; False never affects correctness, only cost.
     """
     if spec_a is None or spec_b is None:
         return False
     if key_a is not None and spec_a.key != key_a:
         return False
     if key_b is not None and spec_b.key != key_b:
+        return False
+    if (spec_a.key_dtype is not None and spec_b.key_dtype is not None
+            and spec_a.key_dtype != spec_b.key_dtype):
         return False
     return (spec_a.num_partitions == spec_b.num_partitions
             and spec_a.salt == spec_b.salt
@@ -182,22 +195,25 @@ def chain_partitioning(query, specs: Sequence[Optional[PartitionSpec]],
     if len(specs) != n:
         raise ValueError(f"query has {n} relations, got {len(specs)} specs")
     expected = [query.attrs[1]] + [query.attrs[j] for j in range(1, n)]
-    canonical: Optional[Tuple[int, int]] = None
+    canonical: Optional[Tuple[int, int, Optional[str]]] = None
     for j, spec in enumerate(specs):
         if spec is not None and spec.sorted and spec.key == expected[j]:
-            canonical = (spec.num_partitions, spec.salt)
+            canonical = (spec.num_partitions, spec.salt, spec.key_dtype)
             break
     if canonical is None:
         return None
-    P, salt = canonical
+    P, salt, key_dtype = canonical
 
     def proven(j: int) -> bool:
         spec = specs[j]
         return (spec is not None and spec.sorted
                 and spec.key == expected[j]
-                and spec.num_partitions == P and spec.salt == salt)
+                and spec.num_partitions == P and spec.salt == salt
+                and (spec.key_dtype is None or key_dtype is None
+                     or spec.key_dtype == key_dtype))
 
     return ChainPartitioning(
         num_partitions=P, salt=salt,
         right_proven=tuple(proven(j) for j in range(1, n)),
-        left0_proven=proven(0))
+        left0_proven=proven(0),
+        key_dtype=key_dtype)

@@ -139,14 +139,14 @@ class JoinQuery:
                 raise ValueError(f"relation {i} has no attributes")
             if len(set(rel)) != len(rel):
                 raise ValueError(f"relation {i} repeats an attribute: {rel}")
-            unknown = set(rel) - universe
+            unknown = sorted(set(rel) - universe)
             if unknown:
                 raise ValueError(f"relation {i} uses attributes {unknown} "
                                  f"outside the universe {self.attrs}")
             covered |= set(rel)
         if covered != universe:
-            raise ValueError(f"attributes {universe - covered} appear in no "
-                             f"relation")
+            raise ValueError(f"attributes {sorted(universe - covered)} "
+                             f"appear in no relation")
         named = list(self.attrs) + [v for v in self.values if v]
         if len(set(named)) != len(named):
             raise ValueError(f"attribute/value names must be distinct: {named}")
@@ -236,6 +236,31 @@ class JoinQuery:
             remaining.discard(nxt)
         return tuple(order)
 
+    def join_steps(self, order: Optional[Sequence[int]] = None):
+        """Left-deep reduce-side plan along ``order`` (default: the
+        greedy connected order): one ``(relation index, equi-join
+        attribute, cycle-closing extras)`` triple per hop.  The equi-join
+        attribute is the first shared one in the relation's attribute
+        order; the remaining shared attributes are the cycle-closing
+        equalities the executor applies as post-join filters — and the
+        static verifier checks are *present* at the closing hop.  This
+        is the executor's lowering plan, exposed for introspection."""
+        order = tuple(order) if order is not None \
+            else self.default_join_order()
+        if sorted(order) != list(range(self.n_relations)):
+            raise ValueError(f"join order {order} is not a permutation of "
+                             f"the {self.n_relations} relations")
+        acc = set(self.relations[order[0]])
+        steps = []
+        for j in order[1:]:
+            shared = [a for a in self.relations[j] if a in acc]
+            if not shared:
+                raise ValueError(f"join order {order} disconnects at "
+                                 f"relation {j}")
+            steps.append((j, shared[0], tuple(shared[1:])))
+            acc |= set(self.relations[j])
+        return steps
+
     def chain_attr_order(self) -> Optional[Tuple[str, ...]]:
         """If the hypergraph is a chain *in relation order* — binary
         relations, consecutive ones sharing exactly one attribute, no
@@ -280,7 +305,7 @@ class JoinQuery:
             raise ValueError(f"query has {self.n_relations} relations, "
                              f"got {len(rels)}")
         for j, rel in enumerate(rels):
-            missing = set(self.schema(j)) - set(rel.names)
+            missing = sorted(set(self.schema(j)) - set(rel.names))
             if missing:
                 raise ValueError(f"relation {j} is missing columns {missing}; "
                                  f"has {rel.names}")

@@ -67,7 +67,7 @@ def heavy_hitters(values: np.ndarray, threshold: float, *,
     vals = np.asarray(values)
     if vals.size == 0 or not np.isfinite(threshold):
         return np.empty((0,), np.int32), np.empty((0,), np.float64)
-    jvals = jnp.asarray(vals, jnp.int32)
+    jvals = jnp.asarray(vals)
     hist = bucket_counts(jvals, jnp.ones(vals.shape, jnp.bool_), n_buckets,
                          salt=_SKETCH_SALT, use_pallas=use_pallas)
     hot = np.asarray(hist) > threshold
@@ -79,7 +79,7 @@ def heavy_hitters(values: np.ndarray, threshold: float, *,
     sel = counts > threshold
     keys, counts = keys[sel], counts[sel].astype(np.float64)
     order = np.argsort(-counts, kind="stable")
-    return keys[order].astype(np.int32), counts[order]
+    return keys[order], counts[order]
 
 
 def chain_key_sketch(edge_lists: Sequence[Tuple[np.ndarray, np.ndarray]],
@@ -197,7 +197,7 @@ def detect_chain_skew(query: ChainQuery,
             np.asarray(edge_lists[d + 1][0]),
             balance_threshold(sizes[d + 1], base[d], slack),
             n_buckets=n_buckets, use_pallas=use_pallas)
-        heavy.append(np.unique(np.concatenate([hl, hr])).astype(np.int32))
+        heavy.append(np.unique(np.concatenate([hl, hr])))
     if all(h.size == 0 for h in heavy):
         return None
 

@@ -1,0 +1,97 @@
+"""Static-verifier x64 acceptance (run in a subprocess:
+``jax_enable_x64`` must be set before any array exists).
+
+Under 64-bit keys:
+
+* a seeded int64→int32 narrow of a key column is caught by the jaxpr
+  audit (``KEY_DTYPE_NARROWED``) while the real lowering traces clean;
+* a partition certificate minted under x64 records ``int64`` and
+  verifies; one recorded as ``int32`` is rejected as stale
+  (``CERT_DTYPE_STALE``) — the mirror image of the x32 test in
+  ``tests/test_verifier.py``.
+"""
+
+import os
+import sys
+from pathlib import Path
+
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+try:
+    import repro  # noqa: F401
+except ImportError:
+    sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+from repro.config import enable_x64, x64_enabled  # noqa: E402
+
+enable_x64()
+
+import dataclasses  # noqa: E402
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.analysis import (VerifierReport, audit_traced,  # noqa: E402
+                            verify_partitioning)
+from repro.analysis.jaxpr_audit import _chain_fixture  # noqa: E402
+from repro.core import (SimGrid, chain_edge_inputs,  # noqa: E402
+                        chain_partitioning, default_part_capacity,
+                        partition_relation)
+from repro.core.executor import one_round_chain  # noqa: E402
+from repro.core.relation import Relation  # noqa: E402
+
+
+def main():
+    assert x64_enabled()
+    query, edges, caps = _chain_fixture(3)
+    assert edges[0][0].dtype == np.int64
+    grid = (2, 2)
+    rels = chain_edge_inputs(query, edges, grid)
+
+    # Clean lowering traces clean.
+    closed = jax.make_jaxpr(
+        lambda r: one_round_chain(SimGrid(grid), query, r, caps=caps))(rels)
+    rep = audit_traced(closed, rels, "x64/one_round_chain")
+    assert rep.ok, rep.summary()
+
+    # Seeded narrow of a key column is caught.
+    def narrowed(rs):
+        bad = []
+        for r in rs:
+            cols = {n: (c.astype(jnp.int32) if n == query.attrs[1] else c)
+                    for n, c in r.cols.items()}
+            bad.append(Relation(cols, r.valid))
+        return one_round_chain(SimGrid(grid), query, bad, caps=caps)
+
+    closed = jax.make_jaxpr(narrowed)(rels)
+    rep = audit_traced(closed, rels, "x64/seeded_narrow")
+    assert "KEY_DTYPE_NARROWED" in rep.codes, rep.summary()
+
+    # Certificates minted under x64 record int64 and verify; an int32
+    # one is stale here.
+    specs = []
+    for j, (s, d) in enumerate(edges):
+        key = query.attrs[1] if j == 0 else query.attrs[j]
+        names = (query.attrs[j], query.attrs[j + 1])
+        rel = Relation.from_arrays(**{names[0]: s, names[1]: d})
+        prel, _ = partition_relation(
+            rel, key, 4, part_capacity=default_part_capacity(len(s), 4))
+        specs.append(prel.spec)
+        assert prel.spec.key_dtype == "int64"
+    cert = chain_partitioning(query, specs)
+    assert cert.key_dtype == "int64"
+    rep = VerifierReport(target="x64/cert")
+    verify_partitioning(query, cert, rep, specs=specs)
+    assert rep.ok, rep.summary()
+
+    stale = dataclasses.replace(cert, key_dtype="int32")
+    rep = VerifierReport(target="x64/stale_cert")
+    verify_partitioning(query, stale, rep)
+    assert "CERT_DTYPE_STALE" in rep.codes
+
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,107 @@
+"""JoinQuery validation error paths: every malformed hypergraph is
+rejected at construction with an actionable message (the static
+verifier builds on these invariants — a query that constructs is a
+query the plan checker can reason about)."""
+
+import pytest
+
+from repro.core import ChainQuery, JoinQuery, QueryAggregate
+
+
+def triangle_parts():
+    return dict(attrs=("a", "b", "c"),
+                relations=(("a", "b"), ("b", "c"), ("a", "c")),
+                values=("v", "w", "x"))
+
+
+class TestStructure:
+    def test_needs_two_relations(self):
+        with pytest.raises(ValueError, match=">= 2 relations"):
+            JoinQuery(attrs=("a", "b"), relations=(("a", "b"),),
+                      values=(None,))
+
+    def test_values_arity_must_match(self):
+        with pytest.raises(ValueError, match="value entries"):
+            JoinQuery(attrs=("a", "b", "c"),
+                      relations=(("a", "b"), ("b", "c")), values=("v",))
+
+    def test_empty_relation(self):
+        with pytest.raises(ValueError, match="no attributes"):
+            JoinQuery(attrs=("a", "b"), relations=((), ("a", "b")),
+                      values=(None, None))
+
+    def test_duplicate_attribute_within_relation(self):
+        with pytest.raises(ValueError, match="repeats an attribute"):
+            JoinQuery(attrs=("a", "b"), relations=(("a", "a"), ("a", "b")),
+                      values=(None, None))
+
+    def test_attribute_outside_universe(self):
+        with pytest.raises(ValueError, match="outside the universe"):
+            JoinQuery(attrs=("a", "b"), relations=(("a", "b"), ("b", "z")),
+                      values=(None, None))
+
+    def test_dangling_attribute(self):
+        """An attribute of the universe no relation mentions."""
+        with pytest.raises(ValueError, match="appear in no relation"):
+            JoinQuery(attrs=("a", "b", "ghost"),
+                      relations=(("a", "b"), ("b", "a")),
+                      values=(None, None))
+
+    def test_attr_value_name_collision(self):
+        with pytest.raises(ValueError, match="must be distinct"):
+            JoinQuery(attrs=("a", "b", "c"),
+                      relations=(("a", "b"), ("b", "c")),
+                      values=("a", None))
+
+    def test_reserved_cycle_closing_prefix(self):
+        with pytest.raises(ValueError, match="reserved '_cc_' prefix"):
+            JoinQuery(attrs=("a", "_cc_b"),
+                      relations=(("a", "_cc_b"), ("_cc_b", "a")),
+                      values=(None, None))
+
+    def test_disconnected_hypergraph(self):
+        with pytest.raises(ValueError, match="must be connected"):
+            JoinQuery(attrs=("a", "b", "c", "d"),
+                      relations=(("a", "b"), ("c", "d")),
+                      values=(None, None))
+
+
+class TestAggregateValidation:
+    def test_aggregate_needs_values_everywhere(self):
+        parts = triangle_parts()
+        parts["values"] = ("v", None, "x")
+        with pytest.raises(ValueError, match="value column on"):
+            JoinQuery(aggregate=QueryAggregate(keys=("a",)), **parts)
+
+    def test_aggregate_needs_a_key(self):
+        with pytest.raises(ValueError, match="at least one group key"):
+            JoinQuery(aggregate=QueryAggregate(keys=()), **triangle_parts())
+
+    def test_aggregate_keys_must_be_attributes(self):
+        with pytest.raises(ValueError, match="distinct"):
+            JoinQuery(aggregate=QueryAggregate(keys=("a", "zz")),
+                      **triangle_parts())
+
+    def test_aggregate_out_collision(self):
+        with pytest.raises(ValueError, match="collides"):
+            JoinQuery(aggregate=QueryAggregate(keys=("a",), out="w"),
+                      **triangle_parts())
+
+
+class TestJoinOrders:
+    def test_non_permutation_order_rejected(self):
+        q = JoinQuery(**triangle_parts())
+        with pytest.raises(ValueError):
+            q.join_steps((0, 2, 2))
+
+    def test_triangle_closing_step(self):
+        """The triangle's final hop carries the cycle-closing filter."""
+        q = JoinQuery(**triangle_parts())
+        _, key, extras = q.join_steps()[-1]
+        assert len(extras) == 1
+        assert {key, *extras} == {"a", "c"}
+
+    def test_chain_query_round_trips(self):
+        q = ChainQuery.chain(4)
+        assert q.default_join_order() == (0, 1, 2, 3)
+        assert all(extras == () for _, _, extras in q.join_steps())

@@ -1,0 +1,286 @@
+"""The static plan verifier: the bench corpus certifies clean, and
+every seeded defect class is rejected with its own distinct diagnostic
+(a verifier that rejects everything for one reason certifies nothing).
+
+Pinned Afrati–Ullman replication floors live in
+``tests/data/replication_bounds.json`` — the bound is part of the
+verifier's contract, so silent cost-model drift must fail loudly here.
+"""
+
+import dataclasses
+import json
+import math
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.analysis import (ERROR, VerifierReport, all_bench_targets,
+                            verify_bench_targets, verify_chain_plan,
+                            verify_grid, verify_join_steps,
+                            verify_partitioning, verify_replication_bound)
+from repro.core import (ChainCaps, ChainQuery, JoinQuery, SimGrid,
+                        chain_partitioning, chain_stats_exact,
+                        default_part_capacity, mapside_cascade_chain,
+                        partition_relation, plan_chain,
+                        replication_lower_bound_chain,
+                        replication_lower_bound_query)
+from repro.core.cost_model import optimal_shares_chain, optimal_shares_query
+from repro.core.relation import Relation
+
+REPO = Path(__file__).resolve().parents[1]
+BOUNDS = REPO / "tests" / "data" / "replication_bounds.json"
+
+
+def small_chain(n=3, rows=64, seed=0):
+    rng = np.random.default_rng(seed)
+    edges = [(rng.integers(0, 16, rows).astype(np.int32),
+              rng.integers(0, 16, rows).astype(np.int32))
+             for _ in range(n)]
+    query = ChainQuery.chain(n)
+    stats = chain_stats_exact(edges)
+    plan = plan_chain(stats, 8, aggregate=False)
+    return query, stats, plan, edges
+
+
+def partitioned_store(query, edges, P=4):
+    """Partition every relation on its hop key; returns (prels, specs,
+    cert)."""
+    prels, specs = [], []
+    for j, (s, d) in enumerate(edges):
+        key = query.attrs[1] if j == 0 else query.attrs[j]
+        names = (query.attrs[j], query.attrs[j + 1])
+        rel = Relation.from_arrays(**{names[0]: s, names[1]: d})
+        prel, _ = partition_relation(
+            rel, key, P, part_capacity=default_part_capacity(len(s), P))
+        prels.append(prel)
+        specs.append(prel.spec)
+    return prels, specs, chain_partitioning(query, specs)
+
+
+# ---------------------------------------------------------------------------
+# Positive: the bench corpus certifies
+# ---------------------------------------------------------------------------
+
+def test_bench_corpus_certifies_zero_errors():
+    """Every plan behind the five BENCH_*.json sweeps passes the plan
+    checker with zero error findings (warnings allowed — they are
+    headroom advisories, not soundness defects)."""
+    reports = verify_bench_targets()
+    assert len(reports) >= 15
+    bad = [r.summary() for r in reports if not r.ok]
+    assert not bad, "\n".join(bad)
+    # Replication-gap metrics are recorded for every certified plan.
+    assert all("replication_floor" in r.metrics for r in reports)
+
+
+def test_bench_target_names_cover_all_sweeps():
+    names = {t.name.split("/")[0] for t in all_bench_targets()}
+    assert names == {"nway", "skew", "triangles", "mapside",
+                     "join_kernels"}
+
+
+# ---------------------------------------------------------------------------
+# Negative: seeded defect classes, each with a distinct diagnostic
+# ---------------------------------------------------------------------------
+
+class TestDefectClasses:
+    def check(self, report, code):
+        assert not report.ok
+        assert code in report.codes
+        f = next(f for f in report.findings if f.code == code)
+        assert f.severity == ERROR
+        assert len(f.message) > 20, "diagnostic must be actionable"
+        return f
+
+    def test_grid_rank_mismatch(self):
+        query, stats, plan, _ = small_chain()
+        rep = VerifierReport(target="t")
+        verify_grid(query, "one_round", (8,), 8, rep)  # needs rank n-1=2
+        self.check(rep, "GRID_RANK_MISMATCH")
+
+    def test_shares_budget_exceeded(self):
+        query, *_ = small_chain()
+        rep = VerifierReport(target="t")
+        verify_grid(query, "one_round", (4, 4), 8, rep)  # 16 devs > k=8
+        self.check(rep, "SHARES_BUDGET_EXCEEDED")
+
+    def test_caps_undersized(self):
+        query, stats, plan, _ = small_chain()
+        caps = ChainCaps(recv=1, mid=1, out=1)
+        rep = verify_chain_plan(query, stats, plan, caps)
+        self.check(rep, "CAPS_UNDERSIZED")
+
+    def test_sort_merge_cap_range(self):
+        query, stats, plan, _ = small_chain()
+        caps = ChainCaps(recv=64, mid=128, out=0)  # zero-size buffer
+        rep = verify_chain_plan(query, stats, plan, caps)
+        self.check(rep, "SORT_MERGE_CAP_RANGE")
+
+    def test_join_order_invalid(self):
+        tri = JoinQuery.triangle()
+        rep = VerifierReport(target="t")
+        verify_join_steps(tri, (0, 2, 2), rep)
+        self.check(rep, "JOIN_ORDER_INVALID")
+
+    def test_closing_filter_dropped(self):
+        """Strip the cycle-closing equality off the triangle's last
+        hop — the exact bug that counts paths instead of triangles."""
+        tri = JoinQuery.triangle()
+        order = tri.default_join_order()
+        tampered = [(rj, key, ()) for rj, key, _ in tri.join_steps(order)]
+        rep = VerifierReport(target="t")
+        verify_join_steps(tri, order, rep, steps=tampered)
+        f = self.check(rep, "CLOSING_FILTER_DROPPED")
+        assert "filter" in f.message
+
+    def test_cert_salt_mismatch(self):
+        query, _, _, edges = small_chain()
+        _, specs, cert = partitioned_store(query, edges)
+        bad = list(specs)
+        bad[1] = dataclasses.replace(bad[1], salt=3)
+        rep = VerifierReport(target="t")
+        verify_partitioning(query, cert, rep, specs=bad)
+        self.check(rep, "CERT_SALT_MISMATCH")
+
+    def test_cert_partitions_mismatch(self):
+        query, _, _, edges = small_chain()
+        _, specs, cert = partitioned_store(query, edges)
+        bad = list(specs)
+        bad[1] = dataclasses.replace(bad[1], num_partitions=8)
+        rep = VerifierReport(target="t")
+        verify_partitioning(query, cert, rep, specs=bad)
+        self.check(rep, "CERT_PARTITIONS_MISMATCH")
+
+    def test_cert_key_dtype_mismatch(self):
+        query, _, _, edges = small_chain()
+        _, specs, cert = partitioned_store(query, edges)
+        bad = list(specs)
+        bad[1] = dataclasses.replace(bad[1], key_dtype="int64")
+        rep = VerifierReport(target="t")
+        verify_partitioning(query, cert, rep, specs=bad)
+        self.check(rep, "CERT_KEY_DTYPE_MISMATCH")
+
+    def test_cert_dtype_stale(self):
+        """A certificate minted under the other key width proves
+        nothing: the partition hash folds 64-bit keys."""
+        query, _, _, edges = small_chain()
+        _, _, cert = partitioned_store(query, edges)
+        stale = dataclasses.replace(cert, key_dtype="int64")
+        rep = VerifierReport(target="t")
+        verify_partitioning(query, stale, rep)
+        self.check(rep, "CERT_DTYPE_STALE")
+
+    def test_unproven_mapside_hop(self):
+        query, _, _, edges = small_chain()
+        _, _, cert = partitioned_store(query, edges)
+        assert all(cert.right_proven)
+        broken = dataclasses.replace(
+            cert, right_proven=(False,) + cert.right_proven[1:])
+        rep = VerifierReport(target="t")
+        verify_partitioning(query, broken, rep,
+                            hop_modes=("mapside",) * (query.n_relations - 1))
+        self.check(rep, "UNPROVEN_MAPSIDE_HOP")
+
+    def test_hop_modes_arity(self):
+        query, _, _, edges = small_chain()
+        _, _, cert = partitioned_store(query, edges)
+        rep = VerifierReport(target="t")
+        verify_partitioning(query, cert, rep, hop_modes=("mapside",))
+        self.check(rep, "HOP_MODES_ARITY")
+
+    def test_repl_bound_violation(self):
+        """A grid that ignores the declared budget (1×1 at k=64) prices
+        below the k=64 replication floor — the impossible-cost
+        inconsistency between plan.k and the executed grid."""
+        rep = VerifierReport(target="t")
+        verify_replication_bound((1000.0,) * 3, 64, (1, 1), rep)
+        self.check(rep, "REPL_BOUND_VIOLATION")
+
+    def test_cost_model_drift(self):
+        query, stats, plan, _ = small_chain()
+        stale = dataclasses.replace(
+            plan, costs={**plan.costs,
+                         plan.algorithm: plan.costs[plan.algorithm] * 2.0})
+        caps = ChainCaps(recv=4096, mid=8192, out=8192)
+        rep = verify_chain_plan(query, stats, stale, caps)
+        self.check(rep, "COST_MODEL_DRIFT")
+
+    def test_pair_index_overflow_warning(self):
+        """Buffers whose worst-case pair index tops 2^31 draw a warning
+        (not an error) while x64 is off."""
+        query, stats, plan, _ = small_chain()
+        caps = ChainCaps(recv=65536, mid=65536, out=65536)
+        rep = verify_chain_plan(query, stats, plan, caps)
+        assert "PAIR_INDEX_OVERFLOW" in rep.codes
+        f = next(f for f in rep.findings
+                 if f.code == "PAIR_INDEX_OVERFLOW")
+        assert f.severity == "warning"
+        assert rep.metrics["worst_pair_index"] >= 2 ** 31
+
+    def test_defect_diagnostics_are_distinct(self):
+        """Eight-plus defect classes, eight-plus distinct codes — no
+        catch-all diagnostic."""
+        codes = {
+            "GRID_RANK_MISMATCH", "SHARES_BUDGET_EXCEEDED",
+            "CAPS_UNDERSIZED", "SORT_MERGE_CAP_RANGE",
+            "JOIN_ORDER_INVALID", "CLOSING_FILTER_DROPPED",
+            "CERT_SALT_MISMATCH", "CERT_PARTITIONS_MISMATCH",
+            "CERT_KEY_DTYPE_MISMATCH", "CERT_DTYPE_STALE",
+            "UNPROVEN_MAPSIDE_HOP", "HOP_MODES_ARITY",
+            "REPL_BOUND_VIOLATION", "COST_MODEL_DRIFT",
+        }
+        assert len(codes) >= 8
+
+
+# ---------------------------------------------------------------------------
+# Runtime guard: the executor rejects stale certificates too
+# ---------------------------------------------------------------------------
+
+def test_executor_rejects_stale_certificate_dtype():
+    """Satellite of the verifier's CERT_DTYPE_STALE: the map-side
+    lowering itself refuses a certificate minted under the other key
+    width (defense in depth for stores loaded from disk)."""
+    query, _, _, edges = small_chain(rows=32)
+    prels, _, cert = partitioned_store(query, edges)
+    stale = dataclasses.replace(cert, key_dtype="int64")
+    modes = ("mapside",) * (query.n_relations - 1)
+    caps = ChainCaps(recv=64, mid=256, out=512, local=64, join=256)
+    with pytest.raises(ValueError, match="minted over"):
+        mapside_cascade_chain(SimGrid((4,)), query, prels,
+                              partitioning=stale, hop_modes=modes,
+                              caps=caps)
+
+
+# ---------------------------------------------------------------------------
+# Pinned replication-rate bounds (triangle + 4-hop chain)
+# ---------------------------------------------------------------------------
+
+def test_pinned_replication_bounds():
+    pins = json.loads(BOUNDS.read_text())
+    assert {"triangle", "triangle_skewed_sizes", "chain4",
+            "chain4_skewed_sizes"} <= set(pins)
+    for name, pin in pins.items():
+        sizes, k = tuple(pin["sizes"]), pin["k"]
+        if "rel_dims" in pin:
+            rel_dims = tuple(tuple(d) for d in pin["rel_dims"])
+            bound = replication_lower_bound_query(rel_dims, sizes, k)
+            shares = optimal_shares_query(rel_dims, sizes, k)
+        else:
+            bound = replication_lower_bound_chain(sizes, k)
+            shares = optimal_shares_chain(sizes, k)
+        assert math.isclose(bound, pin["bound"], rel_tol=1e-9), name
+        assert np.allclose(shares, pin["shares"], rtol=1e-9), name
+
+
+def test_triangle_bound_matches_symmetry():
+    """Equal-size triangle: the optimum is the symmetric k^(1/3)
+    hypercube, so the floor must be invariant under relation
+    permutation."""
+    dims = ((0, 1), (1, 2), (0, 2))
+    b1 = replication_lower_bound_query(dims, (1000.0,) * 3, 64)
+    b2 = replication_lower_bound_query(((1, 2), (0, 2), (0, 1)),
+                                       (1000.0,) * 3, 64)
+    assert math.isclose(b1, b2, rel_tol=1e-9)
+    shares = optimal_shares_query(dims, (1000.0,) * 3, 64)
+    assert np.allclose(shares, 64 ** (1 / 3), rtol=1e-6)
