@@ -1,13 +1,14 @@
 #!/usr/bin/env python
 """Docs gate: internal links in README.md / docs/*.md must resolve, and
-the README quickstart must actually run.
+the executable docs must actually run.
 
 * Every relative markdown link target (``[text](path)``) is checked to
   exist on disk, relative to the file containing it.  External links
   (http/https/mailto) and pure anchors are skipped; ``#fragment``
   suffixes on file links are stripped.
-* Every fenced ```python block in README.md is executed, in order, in
-  one shared namespace — the quickstart smoke test.  ``src/`` is put on
+* Every fenced ```python block in each EXECUTABLE_DOCS file
+  (README.md and docs/serving.md) is executed, in order, in one shared
+  namespace per file — the quickstart smoke tests.  ``src/`` is put on
   sys.path so the snippets run against the checkout without install.
 
 Exit code 0 iff everything passes.
@@ -49,21 +50,25 @@ def check_links() -> int:
     return failures
 
 
-def run_readme_snippets() -> int:
-    readme = REPO / "README.md"
-    blocks = FENCE_RE.findall(readme.read_text())
+EXECUTABLE_DOCS = ("README.md", "docs/serving.md")
+
+
+def run_doc_snippets(relpath: str) -> int:
+    md = REPO / relpath
+    blocks = FENCE_RE.findall(md.read_text())
     py_blocks = [b for b in blocks if not b.strip().startswith("$")]
     if not py_blocks:
-        print("no python blocks in README.md — nothing to smoke-test")
+        print(f"no python blocks in {relpath} — nothing to smoke-test")
         return 0
-    sys.path.insert(0, str(REPO / "src"))
-    namespace = {"__name__": "__readme__"}
+    if str(REPO / "src") not in sys.path:
+        sys.path.insert(0, str(REPO / "src"))
+    namespace = {"__name__": "__docs__"}
     for i, block in enumerate(py_blocks, 1):
-        print(f"running README python block {i}/{len(py_blocks)} ...")
+        print(f"running {relpath} python block {i}/{len(py_blocks)} ...")
         try:
-            exec(compile(block, f"README.md#block{i}", "exec"), namespace)
+            exec(compile(block, f"{relpath}#block{i}", "exec"), namespace)
         except Exception as e:  # noqa: BLE001 — report, don't crash the gate
-            print(f"README block {i} FAILED: {type(e).__name__}: {e}")
+            print(f"{relpath} block {i} FAILED: {type(e).__name__}: {e}")
             return 1
     return 0
 
@@ -74,7 +79,10 @@ def main() -> int:
         print(f"{bad_links} broken link(s)")
         return 1
     print("links OK")
-    return run_readme_snippets()
+    for relpath in EXECUTABLE_DOCS:
+        if run_doc_snippets(relpath):
+            return 1
+    return 0
 
 
 if __name__ == "__main__":

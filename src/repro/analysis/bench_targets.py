@@ -1,4 +1,4 @@
-"""The verification corpus: every plan behind the five BENCH_*.json
+"""The verification corpus: every plan behind the BENCH_*.json
 sweeps, rebuilt exactly as the benchmarks build them (same seeds, same
 fast-mode sizes, same planner calls, same capacity sizing) — but never
 executed.  ``repro-verify --all-bench`` certifies each of these with
@@ -214,6 +214,79 @@ def join_kernels_targets() -> List[BenchTarget]:
         caps=default_chain_caps(stats, grid, slack=4))]
 
 
+def serving_targets() -> List[BenchTarget]:
+    """BENCH_serving.json: the plans the query-serving engine caches
+    and executes — the repeated serve-phase triangle cascade (seed 0),
+    every batched tenant's lane (seeds 100..103) and the first
+    streaming delta term (Δ, E, E) of the standing triangle count
+    (insert batch 0, rng seed 42).  The engine forces the cascade and
+    re-derives algorithm/grid/order itself; caps are its pow2-quantized
+    defaults at k = 4, slack 8 (QueryServeConfig defaults, sweep k)."""
+    from ..serving.engine import _pow2  # local: serving imports analysis
+
+    query = JoinQuery.triangle()
+    k, slack = 4, 8
+    n_nodes, m_edges = 16, 110
+
+    def uedges(seed: int) -> Any:
+        rng = np.random.default_rng(seed)
+        seen = set()
+        while len(seen) < m_edges:
+            seen.add((int(rng.integers(0, n_nodes)),
+                      int(rng.integers(0, n_nodes))))
+        arr = np.array(sorted(seen))
+        return arr[:, 0], arr[:, 1]
+
+    def quant(caps: ChainCaps) -> ChainCaps:
+        opt: Callable[[Optional[int]], Optional[int]] = \
+            lambda v: None if v is None else _pow2(v)
+        return ChainCaps(recv=_pow2(caps.recv), mid=_pow2(caps.mid),
+                         out=_pow2(caps.out), local=opt(caps.local),
+                         agg=opt(caps.agg), join=opt(caps.join))
+
+    def cascade_target(name: str, stats: Any,
+                       join_order: Optional[Sequence[int]]) -> BenchTarget:
+        plan = plan_query(query, stats, k)
+        if join_order is None:
+            # engine rule: a forced cascade over a one-round winner
+            # re-derives the cheapest left-deep order itself
+            join_order = (stats.best_order()[0]
+                          if plan.strategy == "one_round"
+                          else plan.join_order)
+        alg = "2,3J"
+        exec_plan = dataclasses.replace(
+            plan, algorithm=alg, strategy="cascade", grid_shape=(k,),
+            join_order=tuple(join_order),
+            costs={**plan.costs,
+                   alg: plan.costs.get(alg, plan.predicted_cost)})
+        return BenchTarget(
+            name=name, kind="query", query=query, stats=stats,
+            plan=exec_plan,
+            caps=quant(default_query_caps(query, stats, (k,), slack=slack)))
+
+    src, dst = uedges(0)
+    stats = query_stats_exact(query, [(src, dst)] * 3)
+    out = [cascade_target("serving/serve triangle (2,3J)", stats, (0, 1, 2))]
+    for t in range(4):
+        s, d = uedges(100 + t)
+        tstats = query_stats_exact(query, [(s, d)] * 3)
+        out.append(cascade_target(f"serving/tenant {t} (2,3J)",
+                                  tstats, (0, 1, 2)))
+    rng = np.random.default_rng(42)
+    cur = set(zip(src.tolist(), dst.tolist()))
+    ins: List[Any] = []
+    while len(ins) < 5:
+        e = (int(rng.integers(0, n_nodes)), int(rng.integers(0, n_nodes)))
+        if e not in cur and e not in ins:
+            ins.append(e)
+    dsrc = np.array([a for a, _ in ins])
+    ddst = np.array([b for _, b in ins])
+    dstats = query_stats_exact(query, [(dsrc, ddst), (src, dst), (src, dst)])
+    out.append(cascade_target("serving/ingest delta-term (2,3J)",
+                              dstats, None))
+    return out
+
+
 #: name -> builder, in BENCH_* artifact order.
 TARGET_BUILDERS: Dict[str, Callable[[], List[BenchTarget]]] = {
     "nway": nway_targets,
@@ -221,6 +294,7 @@ TARGET_BUILDERS: Dict[str, Callable[[], List[BenchTarget]]] = {
     "triangles": triangle_targets,
     "mapside": mapside_targets,
     "join_kernels": join_kernels_targets,
+    "serving": serving_targets,
 }
 
 

@@ -1,5 +1,7 @@
-from .store import (CheckpointManager, latest_step, load_partition_spec,
-                    load_partitioned, restore, save, save_partitioned)
+from .store import (CheckpointManager, latest_step, load_json,
+                    load_partition_spec, load_partitioned, restore, save,
+                    save_json_atomic, save_partitioned)
 
 __all__ = ["CheckpointManager", "save", "restore", "latest_step",
-           "save_partitioned", "load_partitioned", "load_partition_spec"]
+           "save_partitioned", "load_partitioned", "load_partition_spec",
+           "save_json_atomic", "load_json"]

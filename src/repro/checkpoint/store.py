@@ -34,6 +34,19 @@ import jax
 import numpy as np
 
 
+def _remove(path: str) -> None:
+    """Delete a checkpoint artifact — directory tree or single file
+    (the JSON documents of :func:`save_json_atomic` go through the
+    same swap protocol as checkpoint directories)."""
+    if os.path.isdir(path):
+        shutil.rmtree(path, ignore_errors=True)
+    elif os.path.exists(path):
+        try:
+            os.remove(path)
+        except OSError:
+            pass
+
+
 def _atomic_replace(tmp: str, final: str) -> None:
     """Replace ``final`` with ``tmp`` without a window where neither
     exists: rename the old aside, rename the new in, then delete the
@@ -41,12 +54,12 @@ def _atomic_replace(tmp: str, final: str) -> None:
     :func:`_recover_replaced`."""
     old = final + ".old"
     if os.path.exists(old):  # leftover from an earlier interrupted swap
-        shutil.rmtree(old, ignore_errors=True)
+        _remove(old)
     if os.path.exists(final):
         os.rename(final, old)
     os.rename(tmp, final)
     if os.path.exists(old):
-        shutil.rmtree(old, ignore_errors=True)
+        _remove(old)
 
 
 def _recover_replaced(directory: str) -> None:
@@ -62,9 +75,38 @@ def _recover_replaced(directory: str) -> None:
         old = os.path.join(directory, name)
         base = old[:-len(".old")]
         if os.path.exists(base):
-            shutil.rmtree(old, ignore_errors=True)
+            _remove(old)
         else:
             os.rename(old, base)
+
+
+def save_json_atomic(directory: str, name: str, obj: Any) -> str:
+    """Persist a small JSON document with the checkpoint swap protocol:
+    staged to ``<name>.tmp``, fsynced, and renamed in via
+    :func:`_atomic_replace` — the old version is never deleted before
+    the new one is durable, so a crash at any point leaves a readable
+    document.  The serving store keeps its standing-aggregate state
+    under this (docs/serving.md)."""
+    os.makedirs(directory, exist_ok=True)
+    tmp = os.path.join(directory, f"{name}.tmp")
+    final = os.path.join(directory, name)
+    with open(tmp, "w") as f:
+        json.dump(obj, f)
+        f.flush()
+        os.fsync(f.fileno())
+    _atomic_replace(tmp, final)
+    return final
+
+
+def load_json(directory: str, name: str) -> Optional[Any]:
+    """Read a :func:`save_json_atomic` document, healing any
+    interrupted swap first.  Returns None when absent."""
+    _recover_replaced(directory)
+    path = os.path.join(directory, name)
+    if not os.path.exists(path):
+        return None
+    with open(path) as f:
+        return json.load(f)
 
 
 def _flatten(tree) -> Tuple[list, Any]:

@@ -64,7 +64,8 @@ from .shuffle import Grid, ShardGrid, SimGrid, broadcast_along, shuffle_by_bucke
 from .plan import ChainAggregate, ChainQuery, JoinQuery, QueryAggregate
 from .two_way import two_way_join
 from .executor import (ChainCaps, cascade_chain, cascade_query,
-                       chain_edge_inputs, default_chain_caps,
+                       chain_edge_inputs, clear_compiled_caches,
+                       default_chain_caps,
                        default_mapside_caps, default_query_caps,
                        execute_chain, execute_query,
                        jit_execute_chain, jit_execute_query,
@@ -75,7 +76,8 @@ from .local import (groupby_sum, groupby_sum_multipass, local_join,
                     local_join_allpairs, sort_merge_join, sort_rows)
 from .partition import (PartitionSpec, PartitionedRelation,
                         chain_partitioning, co_partitioned,
-                        default_part_capacity, partition_relation)
+                        default_part_capacity, partition_relation,
+                        repartition)
 from .one_round import one_round_three_way
 from .cascade import cascade_three_way, cascade_three_way_agg, one_round_three_way_agg
 from .aggregation import distributed_groupby_sum, project_product
@@ -113,12 +115,13 @@ __all__ = [
     "JoinQuery", "QueryAggregate", "ChainQuery", "ChainAggregate", "ChainCaps",
     "execute_query", "jit_execute_query", "one_round_query", "cascade_query",
     "execute_chain", "jit_execute_chain", "one_round_chain", "cascade_chain",
-    "mapside_cascade_chain", "shares_skew_chain",
+    "mapside_cascade_chain", "shares_skew_chain", "clear_compiled_caches",
     "scatter_to_grid", "query_table_inputs", "chain_edge_inputs",
     "default_query_caps", "default_chain_caps", "default_mapside_caps",
     "sort_merge_join", "local_join", "local_join_allpairs",
     "groupby_sum", "groupby_sum_multipass", "sort_rows",
     "PartitionSpec", "PartitionedRelation", "partition_relation",
+    "repartition",
     "default_part_capacity",
     "co_partitioned", "chain_partitioning", "ChainPartitioning",
     "chain_mapside_modes", "chain_mapside_shuffles", "chain_mapside_placed",

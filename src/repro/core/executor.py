@@ -966,6 +966,18 @@ def _jit_query(grid: Grid, query: JoinQuery, strategy: str, caps: ChainCaps,
     return jax.jit(run, donate_argnums=(0,) if donate else ())
 
 
+def clear_compiled_caches() -> None:
+    """Drop every cached whole-plan executable
+    (:func:`jit_execute_chain` / :func:`jit_execute_query`).  The
+    serving benchmark uses this to measure a genuinely cold
+    plan+compile against the warm cache-hit path; production code
+    never needs it."""
+    _compiled_sim_chain.cache_clear()
+    _compiled_grid_chain.cache_clear()
+    _compiled_sim_query.cache_clear()
+    _compiled_grid_query.cache_clear()
+
+
 def jit_execute_query(grid: Grid, query: JoinQuery, *, strategy: str,
                       caps: ChainCaps, donate: bool = True, **opts):
     """Compile an *entire* general-query execution into one XLA program

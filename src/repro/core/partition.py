@@ -134,6 +134,34 @@ def partition_relation(rel: Relation, key: str, num_partitions: int, *,
     return PartitionedRelation(parts, spec), overflow
 
 
+def repartition(prel: PartitionedRelation, *, salt: int,
+                key: Optional[str] = None,
+                num_partitions: Optional[int] = None,
+                part_capacity: Optional[int] = None,
+                ) -> Tuple[PartitionedRelation, jnp.ndarray]:
+    """Re-bucket a stored relation under a new salt (and optionally a
+    new key or partition count).
+
+    Streaming ingest rotates the salt on every committed micro-batch:
+    a :class:`~repro.core.cost_model.ChainPartitioning` certificate
+    minted against the previous version then *fails* the
+    :func:`co_partitioned` proof (salts differ), so a cached plan can
+    never merge-join fresh partitions with a stale layout — staleness
+    is structural, not a convention (docs/serving.md).
+
+    ``part_capacity`` defaults to the current per-partition capacity
+    when the partition count is unchanged, else to the lossless flat
+    capacity.  Returns (repartitioned relation, overflow flag)."""
+    P = prel.num_partitions if num_partitions is None else num_partitions
+    key = prel.spec.key if key is None else key
+    flat = prel.to_flat()
+    if part_capacity is None:
+        part_capacity = (prel.part_capacity if P == prel.num_partitions
+                         else flat.capacity)
+    return partition_relation(flat, key, P, salt=salt,
+                              part_capacity=part_capacity)
+
+
 def default_part_capacity(n_rows: int, num_partitions: int,
                           slack: float = 3.0) -> int:
     """Per-partition capacity for ``partition_relation``: the expected

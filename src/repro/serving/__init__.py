@@ -1,0 +1,26 @@
+"""Query-serving layer: plan/executable caching, batched multi-tenant
+execution, and streaming ingest with incremental view maintenance
+(docs/serving.md).
+
+  QueryEngine / QueryServeConfig   — cached, batching front end over
+                                     plan_query + jit_execute_query
+  QueryRequest / ServeResult       — the request/response surface
+  ServingStats                     — hits, latency percentiles, qps,
+                                     delta-vs-recompute savings
+  ServingStore / StandingAggregate — durable edges + delta-maintained
+                                     triangle / path counts
+  Engine / ServeConfig             — the LM decoding engine (models/)
+"""
+
+from .engine import (Engine, PlanRejected, QueryEngine, QueryRequest,
+                     QueryServeConfig, ServeConfig, ServeResult,
+                     ServingStats, stats_signature, weighted_total)
+from .store import (IngestError, ServingStore, StandingAggregate,
+                    delta_terms)
+
+__all__ = [
+    "Engine", "ServeConfig",
+    "QueryEngine", "QueryServeConfig", "QueryRequest", "ServeResult",
+    "ServingStats", "PlanRejected", "stats_signature", "weighted_total",
+    "ServingStore", "StandingAggregate", "IngestError", "delta_terms",
+]

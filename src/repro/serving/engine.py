@@ -1,20 +1,54 @@
-"""Batched serving: prefill + decode with a static KV cache.
+"""Serving: the LM engine and the query-serving engine.
 
-``decode_step`` (models/lm.py) handles both phases: prefill is a call
-with S=prompt_len at pos=0 (it writes the cache and returns logits for
-every position); decode is S=1 calls at advancing pos.  Sampling is
-greedy or temperature-based, batched.
+Two front ends live here:
+
+* :class:`Engine` — batched LM prefill + decode with a static KV cache
+  (``decode_step`` in models/lm.py handles both phases: prefill is a
+  call with S=prompt_len at pos=0, decode is S=1 calls at advancing
+  pos; sampling is greedy or temperature-based, batched).
+
+* :class:`QueryEngine` — the query-serving front end over the join
+  engine (docs/serving.md).  Production serving re-answers the same
+  query *shapes* continuously; planning (`plan_query`) and XLA
+  compilation (`jit_execute_query`) are the per-request costs worth
+  amortizing, so the engine keeps a bounded LRU **plan-and-executable
+  cache** keyed on
+
+      (query structure, stats-sketch signature, caps, strategy,
+       join order, partitioning certificate, key dtype)
+
+  — the same key discipline the jaxpr audit pins for the executor's
+  own ``jit_execute_query`` cache (analysis/jaxpr_audit.py): identical
+  resubmission must hit, every option flip must miss.  Concurrent
+  same-shape requests with different parameters batch through one
+  ``jax.vmap`` of the cached executable; a poisoned request in a batch
+  fails alone (its input-prep error or per-lane overflow flag never
+  touches co-batched lanes).  :class:`ServingStats` surfaces cache
+  hits/misses/evictions, p50/p99 latency, and throughput —
+  ``benchmarks/serving_sweep.py`` emits them into
+  ``BENCH_serving.json``.
 """
 
 from __future__ import annotations
 
+import collections
 import dataclasses
-from typing import Dict, Optional, Tuple
+import time
+from typing import (Any, Callable, Dict, List, Optional, Sequence, Tuple,
+                    Union)
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .. import config
+from ..core import (ChainQuery, JoinQuery, SimGrid, default_chain_caps,
+                    default_mapside_caps, default_query_caps, integer_shares,
+                    jit_execute_chain, jit_execute_query, plan_chain,
+                    plan_query, query_stats_exact)
+from ..core.cost_model import ChainPartitioning, ChainStats, QueryStats
+from ..core.executor import ChainCaps
+from ..core.relation import Relation
 from ..distributed.sharding import Planner
 from ..models.params import zeros_of
 
@@ -50,6 +84,15 @@ class Engine:
                  ) -> Tuple[np.ndarray, Dict[str, float]]:
         """prompts: (B, P) int32.  Returns (B, n_new) generated tokens."""
         B, P = prompts.shape
+        if n_new < 0:
+            raise ValueError(f"n_new must be >= 0, got {n_new}")
+        if P + n_new > self.cfg.max_len:
+            raise ValueError(
+                f"prompt length {P} + n_new {n_new} exceeds the static KV "
+                f"cache (max_len {self.cfg.max_len})")
+        if n_new == 0:
+            return (np.zeros((B, 0), np.int32),
+                    {"prompt_len": float(P), "generated": 0.0})
         cache = zeros_of(self.model.cache_defs(B, self.cfg.max_len))
         key = jax.random.PRNGKey(self.cfg.seed)
 
@@ -69,3 +112,561 @@ class Engine:
             pos += 1
         gen = np.stack([np.asarray(t) for t in out], axis=1)
         return gen, {"prompt_len": float(P), "generated": float(n_new)}
+
+
+# ---------------------------------------------------------------------------
+# Query serving
+# ---------------------------------------------------------------------------
+
+AnyStats = Union[QueryStats, ChainStats]
+
+
+def stats_signature(stats: Any) -> Any:
+    """Hashable signature of a statistics object: every numeric field,
+    recursively, as nested tuples.  Two statistics objects share a
+    signature iff they describe the same cardinality profile — the
+    planner is a pure function of (query, signature, k, certificate),
+    which is what makes the signature a sound plan-cache key
+    component."""
+    if dataclasses.is_dataclass(stats) and not isinstance(stats, type):
+        return (type(stats).__name__,) + tuple(
+            (f.name, stats_signature(getattr(stats, f.name)))
+            for f in dataclasses.fields(stats))
+    if isinstance(stats, dict):
+        return tuple(sorted((k, stats_signature(v)) for k, v in stats.items()))
+    if isinstance(stats, (tuple, list)):
+        return tuple(stats_signature(v) for v in stats)
+    return stats
+
+
+def weighted_total(query: JoinQuery, out: Relation) -> float:
+    """Σ over valid output rows of ∏ value columns.
+
+    With unit weights this is the plain result count; with signed ±1
+    delta weights it is the multilinear term the incremental
+    maintenance cascade sums (docs/serving.md) — deletions flow through
+    the join as −1 factors, no special-casing."""
+    w = jnp.ones_like(out.valid, dtype=jnp.float32)
+    for v in query.values:
+        if v is not None:
+            w = w * out.cols[v]
+    return float(jnp.sum(jnp.where(out.valid, w, jnp.zeros_like(w))))
+
+
+class PlanRejected(RuntimeError):
+    """The static verifier refused to certify a plan the engine was
+    about to cache (``QueryServeConfig.verify_plans``).  Carries the
+    :class:`~repro.analysis.report.VerifierReport`."""
+
+    def __init__(self, report: Any):
+        super().__init__(report.summary())
+        self.report = report
+
+
+@dataclasses.dataclass(frozen=True)
+class QueryServeConfig:
+    """Engine-wide serving knobs.
+
+    k:              reducer budget handed to the planner on every miss.
+    cache_capacity: bounded LRU size — the (plan, executable) entries.
+    caps_slack:     slack factor for derived ChainCaps.
+    join_impl:      reduce-side kernel, as everywhere in the executor.
+    verify_plans:   run the static plan verifier on every cache miss
+                    and refuse to cache a rejected plan
+                    (:class:`PlanRejected`).
+    quantize_caps:  round derived capacities up to the next power of
+                    two, so small cardinality drift between otherwise
+                    identical requests lands on the same compiled
+                    executable instead of retracing.  Explicit request
+                    caps are quantized the same way (the cache key pins
+                    the *requested* caps, pre-quantization).
+    """
+
+    k: int = 8
+    cache_capacity: int = 64
+    caps_slack: int = 8
+    join_impl: str = "sort_merge"
+    verify_plans: bool = False
+    quantize_caps: bool = True
+
+
+@dataclasses.dataclass
+class ServingStats:
+    """Counters and latency surface of one :class:`QueryEngine`.
+
+    ``delta_tuples`` / ``recompute_tuples`` are filled in by the
+    streaming-ingest store (serving/store.py): tuples actually moved by
+    delta-join maintenance vs the analytic tuples a full recompute
+    would have moved instead."""
+
+    hits: int = 0
+    misses: int = 0
+    evictions: int = 0
+    queries: int = 0
+    batches: int = 0
+    errors: int = 0
+    delta_tuples: float = 0.0
+    recompute_tuples: float = 0.0
+    latencies_ms: List[float] = dataclasses.field(default_factory=list)
+    started_at: float = dataclasses.field(default_factory=time.perf_counter)
+
+    @property
+    def hit_rate(self) -> float:
+        n = self.hits + self.misses
+        return self.hits / n if n else 0.0
+
+    def latency_percentile(self, q: float) -> float:
+        if not self.latencies_ms:
+            return 0.0
+        return float(np.percentile(np.asarray(self.latencies_ms), q))
+
+    def snapshot(self) -> Dict[str, float]:
+        """One flat dict for reports.  Latency/throughput keys avoid
+        the pinned accounting names (read/shuffled/max_bucket_load/
+        total) on purpose: wall-clock numbers must never land under the
+        bit-identical tuple-count gate."""
+        elapsed = max(time.perf_counter() - self.started_at, 1e-9)
+        return {
+            "cache_hits": float(self.hits),
+            "cache_misses": float(self.misses),
+            "cache_evictions": float(self.evictions),
+            "hit_rate": self.hit_rate,
+            "queries": float(self.queries),
+            "batches": float(self.batches),
+            "errors": float(self.errors),
+            "p50_ms": self.latency_percentile(50),
+            "p99_ms": self.latency_percentile(99),
+            "qps": self.queries / elapsed,
+            "delta_tuples": self.delta_tuples,
+            "recompute_tuples": self.recompute_tuples,
+        }
+
+
+@dataclasses.dataclass
+class QueryRequest:
+    """One tenant's submission.
+
+    tables[j] is relation j's column tuple — key columns matching the
+    query's attribute tuple, plus an optional trailing float value
+    column (signed delta weights ride here).  ``capacities[j]`` pads
+    relation j to a fixed capacity (invalid rows — they never join and
+    never count), so differently-sized parameters of the same shape
+    share one compiled executable.  ``stats`` should be passed whenever
+    known: without it the engine computes exact statistics on the host
+    per submission, which is the cost serving exists to avoid."""
+
+    query: JoinQuery
+    tables: Sequence[Tuple[Any, ...]]
+    stats: Optional[AnyStats] = None
+    caps: Optional[ChainCaps] = None
+    strategy: Optional[str] = None
+    join_order: Optional[Tuple[int, ...]] = None
+    partitioning: Optional[ChainPartitioning] = None
+    capacities: Optional[Sequence[Optional[int]]] = None
+
+
+@dataclasses.dataclass
+class ServeResult:
+    """Per-request outcome.  ``ok`` is False for a poisoned request
+    (input-prep error, rejected plan, or buffer overflow) — co-batched
+    requests are unaffected either way."""
+
+    ok: bool
+    cache_hit: bool
+    latency_ms: float
+    output: Optional[Relation] = None
+    measured: Optional[Dict[str, float]] = None
+    overflow: bool = False
+    plan: Any = None
+    error: Optional[str] = None
+
+
+@dataclasses.dataclass
+class CachedPlan:
+    """One LRU entry: the resolved physical plan and its compiled
+    executable (``run``).  ``run`` comes out of the executor's
+    program cache, so two entries whose physical parameters coincide
+    (same grid shape, strategy, caps, options) hold the *same* callable
+    object — the engine batches across such entries by ``run``
+    identity."""
+
+    plan: Any
+    strategy: str
+    grid_shape: Tuple[int, ...]
+    join_order: Optional[Tuple[int, ...]]
+    caps: ChainCaps
+    run: Callable[..., Tuple[Relation, Dict[str, jnp.ndarray], jnp.ndarray]]
+    chain_exec: bool = False
+    exec_opts: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    report: Any = None
+
+
+def _pow2(n: int) -> int:
+    return 1 if n <= 1 else 1 << (int(n) - 1).bit_length()
+
+
+class QueryEngine:
+    """Multi-tenant query-serving front end over the join engine.
+
+    ``submit`` answers one query; ``submit_many`` answers a micro-batch,
+    grouping same-key same-shape requests through one vmapped execution.
+    Repeat shapes skip ``plan_query`` *and* XLA compilation: the first
+    submission of a shape plans, (optionally) verifies, and compiles;
+    every later submission is a cache hit that goes straight to the
+    compiled program.  See docs/serving.md for the cache-key and
+    batching semantics.
+    """
+
+    def __init__(self, cfg: Optional[QueryServeConfig] = None):
+        self.cfg = cfg or QueryServeConfig()
+        self._cache: "collections.OrderedDict[Tuple, CachedPlan]" = \
+            collections.OrderedDict()
+        # vmapped batch executables, keyed by the underlying compiled
+        # program (the dict's strong reference keeps identity stable)
+        self._batched: "collections.OrderedDict[Any, Any]" = \
+            collections.OrderedDict()
+        self.stats = ServingStats()
+
+    # -- cache ------------------------------------------------------------
+
+    def __len__(self) -> int:
+        return len(self._cache)
+
+    def cached_keys(self) -> List[Tuple]:
+        """LRU order, oldest first (introspection / tests)."""
+        return list(self._cache)
+
+    def cache_key(self, query: JoinQuery, stats: AnyStats,
+                  caps: Optional[ChainCaps] = None, *,
+                  strategy: Optional[str] = None,
+                  join_order: Optional[Tuple[int, ...]] = None,
+                  partitioning: Optional[ChainPartitioning] = None,
+                  key_dtype: Optional[str] = None) -> Tuple:
+        """The plan-cache key.  ``None`` option values mean "planner's
+        choice" and are part of the key as such: the planner is
+        deterministic in (query, stats signature, k, certificate), so
+        two None-strategy submissions with equal signatures resolve to
+        the same physical plan.  ``key_dtype`` defaults to the process
+        key dtype (``repro.config.key_dtype_name()``): a cache minted
+        under x32 can never serve an x64 process."""
+        key_dtype = config.key_dtype_name() if key_dtype is None else key_dtype
+        return (query, stats_signature(stats), caps, strategy,
+                None if join_order is None else tuple(join_order),
+                partitioning, key_dtype, self.cfg.k, self.cfg.join_impl)
+
+    def _lookup(self, key: Tuple) -> Optional[CachedPlan]:
+        entry = self._cache.get(key)
+        if entry is None:
+            self.stats.misses += 1
+            return None
+        self._cache.move_to_end(key)
+        self.stats.hits += 1
+        return entry
+
+    def _insert(self, key: Tuple, entry: CachedPlan) -> None:
+        self._cache[key] = entry
+        self._cache.move_to_end(key)
+        while len(self._cache) > self.cfg.cache_capacity:
+            self._cache.popitem(last=False)
+            self.stats.evictions += 1
+
+    def _quantize(self, caps: ChainCaps) -> ChainCaps:
+        if not self.cfg.quantize_caps:
+            return caps
+        opt = lambda v: None if v is None else _pow2(v)  # noqa: E731
+        return ChainCaps(recv=_pow2(caps.recv), mid=_pow2(caps.mid),
+                         out=_pow2(caps.out), local=opt(caps.local),
+                         agg=opt(caps.agg), join=opt(caps.join))
+
+    # -- planning (cache misses only) -------------------------------------
+
+    def _verify(self, kind: str, query: JoinQuery, stats: AnyStats,
+                plan: Any, caps: ChainCaps, specs: Any = None) -> Any:
+        from ..analysis import verify_chain_plan, verify_query_plan
+        if kind == "chain":
+            report = verify_chain_plan(query, stats, plan, caps, specs=specs,
+                                       target="serving")
+        else:
+            report = verify_query_plan(query, stats, plan, caps,
+                                       target="serving")
+        if not report.ok:
+            raise PlanRejected(report)
+        return report
+
+    def _build_entry(self, req: QueryRequest, stats: AnyStats) -> CachedPlan:
+        """The miss path: plan, size caps, (optionally) verify, and
+        compile one executable for the resolved configuration."""
+        query = req.query
+        if req.partitioning is not None:
+            return self._build_chain_entry(req, stats)
+        if not isinstance(stats, QueryStats):
+            raise ValueError("submit() needs QueryStats (query_stats_exact); "
+                             "ChainStats only pair with a partitioning "
+                             "certificate on a ChainQuery")
+        plan = plan_query(query, stats, self.cfg.k)
+        strategy = req.strategy or plan.strategy
+        if strategy in ("shares_skew", "mapside"):
+            # SharesSkew runs per-combination grids and map-side needs
+            # stored partitions; neither fits the generic vmapped
+            # serving path — fall back to the cascade, which every
+            # query supports.
+            strategy = "cascade"
+        n = query.n_relations
+        suffix = "A" if query.aggregate is not None else ""
+        grid_shape = plan.grid_shape if strategy == "one_round" \
+            else (self.cfg.k,)
+        if req.join_order is not None:
+            join_order = tuple(req.join_order)
+        elif strategy.startswith("cascade") and plan.strategy == "one_round":
+            # The one-round winner carries the DEFAULT order (order is
+            # irrelevant on the hypercube); a forced cascade must pick
+            # the cheapest left-deep order itself.
+            join_order = tuple(stats.best_order()[0])
+        else:
+            join_order = tuple(plan.join_order)
+        caps = self._quantize(
+            req.caps if req.caps is not None
+            else default_query_caps(query, stats, grid_shape,
+                                    slack=self.cfg.caps_slack))
+        alg = {"one_round": f"1,{n}J{suffix}",
+               "cascade": f"{n - 1},{n}J{suffix}",
+               "cascade_pushdown": f"{n - 1},{n}JA"}.get(strategy,
+                                                         plan.algorithm)
+        exec_plan = dataclasses.replace(
+            plan, algorithm=alg, strategy=strategy, grid_shape=grid_shape,
+            join_order=join_order,
+            costs={**plan.costs, alg: plan.costs.get(alg, plan.predicted_cost)})
+        report = None
+        if self.cfg.verify_plans:
+            report = self._verify("query", query, stats, exec_plan, caps)
+        opts = dict(join_order=join_order, join_impl=self.cfg.join_impl)
+        run = jit_execute_query(SimGrid(grid_shape), query,
+                                strategy=strategy, caps=caps, donate=False,
+                                **opts)
+        return CachedPlan(plan=exec_plan, strategy=strategy,
+                          grid_shape=grid_shape, join_order=join_order,
+                          caps=caps, run=run, report=report)
+
+    def _build_chain_entry(self, req: QueryRequest,
+                           stats: AnyStats) -> CachedPlan:
+        """Chain queries over stored partitioned relations: plan with
+        the certificate so the map-side candidate is priced, execute
+        through the chain surface."""
+        query = req.query
+        cstats = stats.chain if isinstance(stats, QueryStats) else stats
+        if not isinstance(query, ChainQuery) or cstats is None:
+            raise ValueError("a partitioning certificate needs a ChainQuery "
+                             "with chain statistics")
+        part = req.partitioning
+        plan = plan_chain(cstats, self.cfg.k,
+                          aggregate=query.aggregate is not None,
+                          partitioning=part)
+        strategy = req.strategy or plan.strategy
+        if strategy == "shares_skew":
+            strategy = "cascade"
+        n = query.n_relations
+        suffix = "A" if query.aggregate is not None else ""
+        opts: Dict[str, Any] = {"join_impl": self.cfg.join_impl}
+        if strategy == "mapside":
+            grid_shape: Tuple[int, ...] = (part.num_partitions,)
+            caps = self._quantize(
+                req.caps if req.caps is not None
+                else default_mapside_caps(cstats, part.num_partitions,
+                                          slack=self.cfg.caps_slack))
+            opts.update(partitioning=part, hop_modes=plan.hop_modes,
+                        place_output=True)
+        elif strategy == "one_round":
+            grid_shape = (plan.grid_shape if plan.strategy == "one_round"
+                          else tuple(integer_shares(cstats.sizes,
+                                                    self.cfg.k)))
+            caps = self._quantize(
+                req.caps if req.caps is not None
+                else default_chain_caps(cstats, grid_shape,
+                                        slack=self.cfg.caps_slack))
+        else:
+            grid_shape = (self.cfg.k,)
+            caps = self._quantize(
+                req.caps if req.caps is not None
+                else default_chain_caps(cstats, grid_shape,
+                                        slack=self.cfg.caps_slack))
+        # Forcing a strategy re-derives the dependent plan fields so the
+        # stored plan stays self-consistent (the verifier checks them).
+        alg = {"one_round": f"1,{n}J{suffix}",
+               "cascade": f"{n - 1},{n}J{suffix}",
+               "cascade_pushdown": f"{n - 1},{n}JA",
+               "mapside": f"MS,{n}J{suffix}"}.get(strategy, plan.algorithm)
+        exec_plan = dataclasses.replace(
+            plan, algorithm=alg, strategy=strategy, grid_shape=grid_shape,
+            costs={**plan.costs, alg: plan.costs.get(alg,
+                                                     plan.predicted_cost)})
+        report = None
+        if self.cfg.verify_plans:
+            report = self._verify("chain", query, cstats, exec_plan, caps)
+        run = jit_execute_chain(SimGrid(grid_shape), query,
+                                strategy=strategy, caps=caps, donate=False,
+                                **opts)
+        return CachedPlan(plan=exec_plan, strategy=strategy,
+                          grid_shape=grid_shape, join_order=None, caps=caps,
+                          run=run, chain_exec=True, exec_opts=opts,
+                          report=report)
+
+    def _resolve(self, req: QueryRequest) -> Tuple[Tuple, CachedPlan, bool]:
+        stats = req.stats
+        if stats is None:
+            arities = [len(r) for r in req.query.relations]
+            stats = query_stats_exact(
+                req.query, [tuple(t[:a]) for t, a in zip(req.tables, arities)])
+        key = self.cache_key(req.query, stats, req.caps,
+                             strategy=req.strategy, join_order=req.join_order,
+                             partitioning=req.partitioning)
+        entry = self._lookup(key)
+        if entry is not None:
+            return key, entry, True
+        entry = self._build_entry(dataclasses.replace(req, stats=stats),
+                                  stats)
+        self._insert(key, entry)
+        return key, entry, False
+
+    # -- input preparation -------------------------------------------------
+
+    def _prep_inputs(self, req: QueryRequest,
+                     grid_shape: Tuple[int, ...]) -> Tuple[Relation, ...]:
+        """Column tables -> scattered per-relation inputs named by the
+        query schema, padded to ``capacities`` with invalid rows (the
+        generalization of ``query_table_inputs`` the fixed-capacity
+        serving path needs)."""
+        query = req.query
+        key_dtype = config.default_key_dtype()
+        if len(req.tables) != query.n_relations:
+            raise ValueError(f"{query.n_relations} relations need "
+                             f"{query.n_relations} tables, got "
+                             f"{len(req.tables)}")
+        rels = []
+        for j, cols in enumerate(req.tables):
+            names = query.schema(j)
+            arity = len(query.relations[j])
+            if len(cols) not in (arity, len(names)):
+                raise ValueError(f"relation {j} needs {arity} key columns "
+                                 f"(+ optional value), got {len(cols)}")
+            arrays = {names[i]: jnp.asarray(c, key_dtype)
+                      for i, c in enumerate(cols[:arity])}
+            if query.values[j] is not None:
+                val = (jnp.asarray(cols[arity], jnp.float32)
+                       if len(cols) > arity
+                       else jnp.ones_like(arrays[names[0]],
+                                          dtype=jnp.float32))
+                arrays[query.values[j]] = val
+            cap = None if req.capacities is None else req.capacities[j]
+            from ..core.executor import scatter_to_grid
+            rels.append(scatter_to_grid(Relation.from_arrays(cap, **arrays),
+                                        grid_shape))
+        return tuple(rels)
+
+    @staticmethod
+    def _shape_sig(rels: Tuple[Relation, ...]) -> Tuple:
+        leaves = jax.tree.leaves(rels)
+        return tuple((tuple(x.shape), str(x.dtype)) for x in leaves)
+
+    # -- submission --------------------------------------------------------
+
+    def submit(self, query: JoinQuery, tables: Sequence[Tuple[Any, ...]]
+               = (), *, rels: Optional[Sequence[Any]] = None,
+               **opts: Any) -> ServeResult:
+        """Answer one query.  ``rels`` bypasses table preparation with
+        pre-built (possibly partitioned) relation inputs — the stored
+        map-side path.  Remaining keywords populate
+        :class:`QueryRequest`."""
+        req = QueryRequest(query=query, tables=tables, **opts)
+        return self.submit_many([req], prebuilt=[rels])[0]
+
+    def submit_many(self, requests: Sequence[QueryRequest],
+                    prebuilt: Optional[Sequence[Optional[Sequence[Any]]]]
+                    = None) -> List[ServeResult]:
+        """Serve a micro-batch.  Requests that resolve to the same
+        *compiled program* (by ``run`` identity — distinct tenants with
+        distinct statistics still coincide whenever their physical
+        plans do) and the same input shapes run as ONE vmapped
+        execution; each lane keeps its own measured stats and overflow
+        flag, so a poisoned lane (overflow) or a request that fails
+        before execution (bad tables, rejected plan) never corrupts its
+        co-batched peers."""
+        results: List[Optional[ServeResult]] = [None] * len(requests)
+        groups: "collections.OrderedDict[Tuple, List]" = \
+            collections.OrderedDict()
+        for i, req in enumerate(requests):
+            t0 = time.perf_counter()
+            try:
+                key, entry, hit = self._resolve(req)
+                if prebuilt is not None and prebuilt[i] is not None:
+                    rels = tuple(prebuilt[i])
+                else:
+                    rels = self._prep_inputs(req, entry.grid_shape)
+            except Exception as e:  # noqa: BLE001 — poisoned request
+                self.stats.errors += 1
+                self.stats.queries += 1
+                results[i] = ServeResult(
+                    ok=False, cache_hit=False,
+                    latency_ms=(time.perf_counter() - t0) * 1e3,
+                    error=f"{type(e).__name__}: {e}")
+                continue
+            gkey = (id(entry.run), self._shape_sig(rels))
+            groups.setdefault(gkey, []).append((i, hit, entry, rels, t0))
+
+        for members in groups.values():
+            self._run_group(members, results)
+        return results  # type: ignore[return-value]  # every slot is filled
+
+    def _batched_run(self, run: Callable) -> Callable:
+        fn = self._batched.get(run)
+        if fn is None:
+            fn = jax.jit(jax.vmap(run))
+            self._batched[run] = fn
+            while len(self._batched) > self.cfg.cache_capacity:
+                self._batched.popitem(last=False)
+        return fn
+
+    def _run_group(self, members: List,
+                   results: List[Optional[ServeResult]]) -> None:
+        self.stats.batches += 1
+        if len(members) == 1:
+            i, hit, entry, rels, t0 = members[0]
+            out, st, ovf = entry.run(rels)
+            jax.block_until_ready(out.valid)
+            dt = (time.perf_counter() - t0) * 1e3
+            results[i] = self._lane_result(entry, out, st, ovf, hit, dt)
+            self.stats.queries += 1
+            self.stats.latencies_ms.append(dt)
+            return
+        batched = self._batched_run(members[0][2].run)
+        stacked = jax.tree.map(lambda *xs: jnp.stack(xs),
+                               *[m[3] for m in members])
+        t0 = min(m[4] for m in members)
+        outs, sts, ovfs = batched(stacked)
+        jax.block_until_ready(outs.valid)
+        dt = (time.perf_counter() - t0) * 1e3
+        for lane, (i, hit, entry, rels, _) in enumerate(members):
+            out = jax.tree.map(lambda x, lane=lane: x[lane], outs)
+            st = {k: v[lane] for k, v in sts.items()}
+            results[i] = self._lane_result(entry, out, st, ovfs[lane], hit,
+                                           dt)
+            self.stats.queries += 1
+            self.stats.latencies_ms.append(dt)
+
+    def _lane_result(self, entry: CachedPlan, out: Relation, st: Dict,
+                     ovf: Any, hit: bool, dt: float) -> ServeResult:
+        overflow = bool(ovf)
+        # scalar counters become floats; per-hop vectors (the map-side
+        # cascade's hop_shuffled/hop_placed) become tuples of floats
+        measured = {k: (float(v) if jnp.ndim(v) == 0
+                        else tuple(float(x) for x in v))
+                    for k, v in st.items()}
+        if overflow:
+            self.stats.errors += 1
+            return ServeResult(ok=False, cache_hit=hit, latency_ms=dt,
+                               output=None, measured=measured, overflow=True,
+                               plan=entry.plan,
+                               error="overflow: a buffer capacity spilled — "
+                                     "resubmit with larger caps")
+        return ServeResult(ok=True, cache_hit=hit, latency_ms=dt,
+                           output=out, measured=measured, overflow=False,
+                           plan=entry.plan)

@@ -1,0 +1,81 @@
+"""Serving x64 acceptance (run in a subprocess: ``jax_enable_x64``
+must be set before any array exists).
+
+Under 64-bit keys:
+
+* the plan-cache key records ``int64`` — an x32-minted key can never
+  hit (the dtype axis of the flip enumeration, live);
+* delta maintenance of the triangle count stays exactly equal to the
+  host oracle through an insert + delete micro-batch.
+"""
+
+import os
+import sys
+import tempfile
+from pathlib import Path
+
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+try:
+    import repro  # noqa: F401
+except ImportError:
+    sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+from repro.config import enable_x64, key_dtype_name, x64_enabled  # noqa: E402
+
+enable_x64()
+
+import numpy as np  # noqa: E402
+
+from repro.core import JoinQuery, oracle_triangles, query_stats_exact  # noqa: E402
+from repro.serving import (QueryEngine, QueryServeConfig,  # noqa: E402
+                           ServingStore, weighted_total)
+
+
+def main():
+    assert x64_enabled() and key_dtype_name() == "int64"
+    rng = np.random.default_rng(0)
+    src = rng.integers(0, 12, 60).astype(np.int64)
+    dst = rng.integers(0, 12, 60).astype(np.int64)
+
+    eng = QueryEngine(QueryServeConfig(k=4))
+    q = JoinQuery.triangle()
+    stats = query_stats_exact(q, [(src, dst)] * 3)
+
+    # the key is minted with int64; the int32 variant differs
+    k64 = eng.cache_key(q, stats)
+    assert k64 == eng.cache_key(q, stats, key_dtype="int64")
+    assert k64 != eng.cache_key(q, stats, key_dtype="int32")
+
+    res = eng.submit(q, [(src, dst)] * 3, stats=stats)
+    assert res.ok, res.error
+    got = weighted_total(q, res.output) / 3
+    want = oracle_triangles(src, dst)
+    assert abs(got - want) < 1e-9, (got, want)
+
+    # delta maintenance stays exact under x64
+    seen = sorted(set(zip(src.tolist(), dst.tolist())))
+    arr = np.array(seen, dtype=np.int64)
+    with tempfile.TemporaryDirectory() as d:
+        store = ServingStore(d, eng, num_partitions=4, drift_threshold=None,
+                             delta_capacity=16)
+        store.register_aggregate("tri", "cycle", 3)
+        store.load_edges(arr[:, 0], arr[:, 1])
+        cur = set(map(tuple, arr.tolist()))
+        ins = [(a, b) for a in range(12) for b in range(12)
+               if (a, b) not in cur][:4]
+        dels = seen[:2]
+        store.apply_deltas(
+            inserts=(np.array([a for a, b in ins], np.int64),
+                     np.array([b for a, b in ins], np.int64)),
+            deletes=(np.array([a for a, b in dels], np.int64),
+                     np.array([b for a, b in dels], np.int64)))
+        got = store.aggregates["tri"].value
+        want = oracle_triangles(store.src, store.dst)
+        assert abs(got - want) < 1e-9, (got, want)
+
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -9,7 +9,11 @@ byte-identical), ``BENCH_triangles.json`` as pinned when the cycle
 query landed, and ``BENCH_mapside.json`` as pinned when the
 partitioned store landed (its per-hop ``shuffled`` fields are exact
 zeros on proven map-side hops — the zero-shuffle claim itself is under
-this gate).  Regenerating those files must reproduce each field
+this gate), and ``BENCH_serving.json`` as pinned when the
+query-serving layer landed (cache hits replay the same compiled
+program, batching vmaps it — neither may move a different tuple
+count, and the delta-maintenance savings are part of the pin).
+Regenerating those files must reproduce each field
 bit-identically: neither the join kernel nor the hypergraph surface
 decides which tuples move — only the physical plan does.
 """
@@ -42,7 +46,8 @@ def extract_counts(obj, path=""):
 
 @pytest.mark.parametrize("bench", ["BENCH_nway.json", "BENCH_skew.json",
                                    "BENCH_triangles.json",
-                                   "BENCH_mapside.json"])
+                                   "BENCH_mapside.json",
+                                   "BENCH_serving.json"])
 def test_accounting_bit_identical_to_seed(bench):
     path = REPO / bench
     if not path.exists():

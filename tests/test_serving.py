@@ -1,0 +1,461 @@
+"""Serving battery: plan/executable cache, batched multi-tenant
+execution, streaming ingest, and fault injection.
+
+Deterministic (always-run, tier-1) counterpart of the hypothesis sweep
+in ``tests/test_serving_properties.py``:
+
+  S1  cache-key discipline — byte-identical resubmission HITS; every
+      option flip (caps, stats signature, strategy, join order,
+      partitioning certificate, key dtype, k, join_impl) MISSES
+      (mirrors the jit-cache flip enumeration in test_jaxpr_audit.py)
+  S2  LRU semantics — bounded size, eviction order, touch-refreshes
+  S3  batching — same-program same-shape tenants run as ONE vmapped
+      execution with per-lane answers/stats; a poisoned request or an
+      overflowing lane fails alone
+  S4  delta maintenance — triangle and path counts stay exactly equal
+      to full recomputation under insert-only and mixed streams
+  S5  fault injection — a batch failing mid-apply (validation error or
+      injected persistence crash) leaves stored partitions and standing
+      aggregates unchanged, in memory and on disk
+  S6  the LM engine's generate() contract (n_new=0, KV-cache bounds)
+  S7  x64 acceptance in a subprocess (key dtype keys the cache)
+"""
+
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import (ChainCaps, ChainQuery, JoinQuery, chain_partitioning,
+                        chain_stats_exact, edge_relation, oracle_triangles,
+                        partition_relation, query_stats_exact,
+                        scatter_to_grid)
+from repro.serving import (IngestError, QueryEngine, QueryRequest,
+                           QueryServeConfig, ServingStore, delta_terms,
+                           stats_signature, weighted_total)
+from repro.serving.store import META_NAME
+
+
+def _edges(seed, n_nodes=12, m=60):
+    rng = np.random.default_rng(seed)
+    return rng.integers(0, n_nodes, m), rng.integers(0, n_nodes, m)
+
+
+def _uniq_edges(seed, n_nodes=14, m=70):
+    rng = np.random.default_rng(seed)
+    seen = set()
+    while len(seen) < m:
+        seen.add((int(rng.integers(0, n_nodes)),
+                  int(rng.integers(0, n_nodes))))
+    arr = np.array(sorted(seen))
+    return arr[:, 0], arr[:, 1]
+
+
+@pytest.fixture(scope="module")
+def engine():
+    return QueryEngine(QueryServeConfig(k=4, cache_capacity=64))
+
+
+# ---------------------------------------------------------------------------
+# S1 — cache-key discipline
+# ---------------------------------------------------------------------------
+
+class TestCacheKey:
+    def setup_method(self):
+        self.eng = QueryEngine(QueryServeConfig(k=4, quantize_caps=False))
+        self.q = JoinQuery.triangle()
+        self.stats = query_stats_exact(self.q, [_edges(0)] * 3)
+
+    def test_identical_resubmission_hits(self):
+        k1 = self.eng.cache_key(self.q, self.stats)
+        k2 = self.eng.cache_key(self.q, self.stats)
+        assert k1 == k2
+        # distinct stats objects with equal numbers share the signature
+        other = query_stats_exact(self.q, [_edges(0)] * 3)
+        assert stats_signature(other) == stats_signature(self.stats)
+        assert self.eng.cache_key(self.q, other) == k1
+
+    def test_every_flip_misses(self):
+        base = self.eng.cache_key(self.q, self.stats)
+        caps = ChainCaps(recv=64, mid=128, out=256)
+        part = chain_partitioning(
+            ChainQuery.chain(3),
+            [partition_relation(
+                edge_relation(*_edges(0),
+                              names=ChainQuery.chain(3).schema(j)),
+                ChainQuery.chain(3).attrs[1] if j == 0
+                else ChainQuery.chain(3).attrs[j], 4, salt=1)[0].spec
+             for j in range(3)])
+        flips = {
+            "caps": self.eng.cache_key(self.q, self.stats, caps),
+            "stats": self.eng.cache_key(
+                self.q, query_stats_exact(self.q, [_edges(1)] * 3)),
+            "strategy": self.eng.cache_key(self.q, self.stats,
+                                           strategy="one_round"),
+            "join_order": self.eng.cache_key(self.q, self.stats,
+                                             join_order=(2, 1, 0)),
+            "partitioning": self.eng.cache_key(self.q, self.stats,
+                                               partitioning=part),
+            "key_dtype": self.eng.cache_key(self.q, self.stats,
+                                            key_dtype="int64"),
+            "query": self.eng.cache_key(JoinQuery.cycle(4), self.stats),
+        }
+        for name, key in flips.items():
+            assert key != base, f"flipping {name} must change the cache key"
+        # engine-config axes: k and join_impl are part of the key too
+        assert QueryEngine(QueryServeConfig(k=8, quantize_caps=False)) \
+            .cache_key(self.q, self.stats) != base
+        assert QueryEngine(QueryServeConfig(
+            k=4, join_impl="all_pairs", quantize_caps=False)) \
+            .cache_key(self.q, self.stats) != base
+
+    def test_salt_rotation_changes_key(self):
+        """A certificate minted against a superseded store version
+        (different salt) can never hit the old entry."""
+        cq = ChainQuery.chain(3)
+
+        def cert(salt):
+            return chain_partitioning(cq, [
+                partition_relation(
+                    edge_relation(*_edges(0), names=cq.schema(j)),
+                    cq.attrs[1] if j == 0 else cq.attrs[j], 4,
+                    salt=salt)[0].spec
+                for j in range(3)])
+
+        k1 = self.eng.cache_key(self.q, self.stats, partitioning=cert(1))
+        k2 = self.eng.cache_key(self.q, self.stats, partitioning=cert(2))
+        assert k1 != k2
+
+    def test_live_hit_and_miss(self, engine):
+        q = JoinQuery.triangle()
+        tables = [_edges(7)] * 3
+        r1 = engine.submit(q, tables)
+        r2 = engine.submit(q, tables)
+        assert r1.ok and r2.ok
+        assert not r1.cache_hit and r2.cache_hit
+        r3 = engine.submit(q, [_edges(8)] * 3)     # different stats
+        assert r3.ok and not r3.cache_hit
+
+
+# ---------------------------------------------------------------------------
+# S2 — LRU semantics
+# ---------------------------------------------------------------------------
+
+class TestLRU:
+    def _submit(self, eng, seed):
+        q = JoinQuery.triangle()
+        return eng.submit(q, [_edges(seed)] * 3,
+                          caps=ChainCaps(recv=256, mid=512, out=1024),
+                          strategy="cascade", join_order=(0, 1, 2))
+
+    def test_bounded_size_and_eviction_order(self):
+        eng = QueryEngine(QueryServeConfig(k=4, cache_capacity=2))
+        ra = self._submit(eng, 0)
+        rb = self._submit(eng, 1)
+        assert len(eng) == 2 and eng.stats.evictions == 0
+        # touch A: it becomes most-recent, so B is next to go
+        assert self._submit(eng, 0).cache_hit
+        rc = self._submit(eng, 2)
+        assert rc.ok and len(eng) == 2 and eng.stats.evictions == 1
+        assert self._submit(eng, 0).cache_hit       # A survived
+        assert not self._submit(eng, 1).cache_hit   # B was evicted
+        assert len(eng) == 2                        # bound holds under churn
+
+    def test_churn_never_exceeds_capacity(self):
+        eng = QueryEngine(QueryServeConfig(k=4, cache_capacity=2))
+        for seed in range(5):
+            assert self._submit(eng, seed).ok
+            assert len(eng) <= 2
+        assert eng.stats.evictions == 3
+
+
+# ---------------------------------------------------------------------------
+# S3 — batched multi-tenant execution
+# ---------------------------------------------------------------------------
+
+class TestBatching:
+    def test_one_vmapped_execution_per_shape(self, engine):
+        q = JoinQuery.triangle()
+        reqs = [QueryRequest(q, [_edges(100 + s)] * 3) for s in range(4)]
+        before = engine.stats.batches
+        results = engine.submit_many(reqs)
+        assert engine.stats.batches == before + 1   # ONE vmapped run
+        for s, res in enumerate(results):
+            assert res.ok
+            got = weighted_total(q, res.output) / 3
+            want = oracle_triangles(*_edges(100 + s))
+            assert got == pytest.approx(want)
+        # resubmission of the whole batch: all hits, still one batch
+        again = engine.submit_many(reqs)
+        assert all(r.cache_hit for r in again)
+
+    def test_poisoned_request_fails_alone(self, engine):
+        q = JoinQuery.triangle()
+        good = [QueryRequest(q, [_edges(100 + s)] * 3) for s in range(2)]
+        bad = QueryRequest(q, [(np.arange(4),)] * 3)     # wrong arity
+        results = engine.submit_many([good[0], bad, good[1]])
+        assert [r.ok for r in results] == [True, False, True]
+        assert "ValueError" in results[1].error
+        for s, res in zip((100, 101), (results[0], results[2])):
+            assert weighted_total(q, res.output) / 3 == \
+                pytest.approx(oracle_triangles(*_edges(s)))
+
+    def test_overflowing_lane_fails_alone(self, engine):
+        q = JoinQuery.triangle()
+        tiny = ChainCaps(recv=4, mid=4, out=4)
+        reqs = [QueryRequest(q, [_edges(100)] * 3),
+                QueryRequest(q, [_edges(101)] * 3, caps=tiny)]
+        results = engine.submit_many(reqs)
+        assert results[0].ok
+        assert not results[1].ok and results[1].overflow
+        assert "overflow" in results[1].error
+
+    def test_per_lane_stats_are_exact(self, engine):
+        """measured == analytic per tenant: each lane's counted tuples
+        equal the cascade cost formula on ITS OWN statistics."""
+        from repro.core import cost_query_cascade
+        q = JoinQuery.triangle()
+        reqs, want = [], []
+        for s in range(3):
+            tables = [_edges(200 + s)] * 3
+            stats = query_stats_exact(q, tables)
+            reqs.append(QueryRequest(q, tables, stats=stats,
+                                     strategy="cascade",
+                                     join_order=(0, 1, 2)))
+            idx = stats.orders.index((0, 1, 2))
+            want.append(cost_query_cascade(
+                [stats.sizes[i] for i in (0, 1, 2)],
+                stats.intermediates[idx]))
+        results = engine.submit_many(reqs)
+        for res, analytic in zip(results, want):
+            assert res.ok
+            assert res.measured["total"] == pytest.approx(analytic)
+
+
+# ---------------------------------------------------------------------------
+# S4 — delta maintenance == recompute (deterministic sweep)
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def store_engine():
+    return QueryEngine(QueryServeConfig(k=4, cache_capacity=64))
+
+
+class TestDeltaMaintenance:
+    def _stream(self, tmp_path, store_engine, kind, n, seed):
+        src, dst = _uniq_edges(seed)
+        store = ServingStore(str(tmp_path), store_engine, num_partitions=4,
+                             drift_threshold=None, delta_capacity=16)
+        store.register_aggregate("agg", kind, n)
+        store.load_edges(src, dst)
+        assert store.aggregates["agg"].value == \
+            pytest.approx(store.analytic_value("agg"))
+        rng = np.random.default_rng(seed + 1000)
+        for step in range(3):
+            cur = set(zip(store.src.tolist(), store.dst.tolist()))
+            ins = []
+            while len(ins) < 4:
+                e = (int(rng.integers(0, 14)), int(rng.integers(0, 14)))
+                if e not in cur and e not in ins:
+                    ins.append(e)
+            dels = []
+            if step > 0:  # mixed stream after the first batch
+                pick = rng.choice(store.n_edges, size=3, replace=False)
+                dels = [(int(store.src[i]), int(store.dst[i])) for i in pick]
+            rep = store.apply_deltas(
+                inserts=(np.array([a for a, b in ins]),
+                         np.array([b for a, b in ins])),
+                deletes=None if not dels else
+                        (np.array([a for a, b in dels]),
+                         np.array([b for a, b in dels])))
+            assert rep["aggregates"]["agg"]["mode"] == "delta"
+            assert store.aggregates["agg"].value == \
+                pytest.approx(store.analytic_value("agg")), \
+                f"{kind} drifted at step {step}"
+        return store
+
+    @pytest.mark.parametrize("seed", [0, 1])
+    def test_triangle_count_stays_exact(self, tmp_path, store_engine, seed):
+        store = self._stream(tmp_path, store_engine, "cycle", 3, seed)
+        assert store.aggregates["agg"].value == \
+            pytest.approx(oracle_triangles(store.src, store.dst))
+
+    def test_path_count_stays_exact(self, tmp_path, store_engine):
+        self._stream(tmp_path, store_engine, "chain", 3, 2)
+
+    def test_delta_moves_fewer_tuples_than_recompute(self, tmp_path,
+                                                     store_engine):
+        store = self._stream(tmp_path, store_engine, "cycle", 3, 3)
+        agg = store.aggregates["agg"]
+        # exclude the initial full load (counted in both columns)
+        assert agg.delta_tuples < agg.recompute_tuples
+
+    def test_triangle_term_collapse(self):
+        """The cyclic expansion uses 3 terms with coefficients 3,3,1;
+        a chain needs all 2^n - 1 unit-coefficient terms."""
+        tri = delta_terms("cycle", 3)
+        assert [c for _, c in tri] == [3.0, 3.0, 1.0]
+        chain = delta_terms("chain", 3)
+        assert len(chain) == 7 and all(c == 1.0 for _, c in chain)
+        assert delta_terms("cycle", 4) == delta_terms("chain", 4)
+
+    def test_drift_threshold_forces_recompute(self, tmp_path, store_engine):
+        src, dst = _uniq_edges(5)
+        store = ServingStore(str(tmp_path), store_engine, num_partitions=4,
+                             drift_threshold=0.05, delta_capacity=16)
+        store.register_aggregate("tri", "cycle", 3)
+        store.load_edges(src, dst)
+        refreshes0 = store.aggregates["tri"].refreshes
+        cur = set(zip(src.tolist(), dst.tolist()))
+        ins = [(a, b) for a in range(14) for b in range(14)
+               if (a, b) not in cur][:8]          # > 5% of 70 edges
+        rep = store.apply_deltas(inserts=(np.array([a for a, b in ins]),
+                                          np.array([b for a, b in ins])))
+        assert rep["aggregates"]["tri"]["mode"] == "recompute"
+        assert store.aggregates["tri"].refreshes == refreshes0 + 1
+        assert store.aggregates["tri"].drift_rows == 0
+        assert store.aggregates["tri"].value == \
+            pytest.approx(store.analytic_value("tri"))
+
+
+# ---------------------------------------------------------------------------
+# S5 — fault injection: failed ingest leaves the store unchanged
+# ---------------------------------------------------------------------------
+
+class TestFaultInjection:
+    def _loaded(self, tmp_path, engine):
+        src, dst = _uniq_edges(11)
+        store = ServingStore(str(tmp_path), engine, num_partitions=4,
+                             drift_threshold=None, delta_capacity=16)
+        store.register_aggregate("tri", "cycle", 3)
+        store.load_edges(src, dst)
+        return store
+
+    def _snapshot(self, store):
+        return (store.version, store.n_edges,
+                sorted(zip(store.src.tolist(), store.dst.tolist())),
+                {n: (a.value, a.drift_rows, a.deltas_applied)
+                 for n, a in store.aggregates.items()})
+
+    def _assert_unchanged(self, store, snap, store_engine):
+        assert self._snapshot(store) == snap
+        # disk too: a fresh process sees the committed state
+        reloaded = ServingStore(store.directory, store_engine)
+        assert self._snapshot(reloaded) == snap
+
+    def test_validation_failure_mid_batch(self, tmp_path, store_engine):
+        """A batch whose DELETE names an absent edge aborts atomically
+        even when its inserts are fine."""
+        store = self._loaded(tmp_path, store_engine)
+        snap = self._snapshot(store)
+        with pytest.raises(IngestError, match="absent"):
+            store.apply_deltas(inserts=(np.array([0]), np.array([1])),
+                               deletes=(np.array([999]), np.array([999])))
+        self._assert_unchanged(store, snap, store_engine)
+
+    def test_persistence_crash_mid_apply(self, tmp_path, store_engine,
+                                         monkeypatch):
+        """Injected crash in the partition-write step: all aggregate
+        deltas were already computed, nothing may be mutated."""
+        store = self._loaded(tmp_path, store_engine)
+        snap = self._snapshot(store)
+        import repro.serving.store as store_mod
+
+        def boom(*a, **k):
+            raise OSError("disk full (injected)")
+
+        monkeypatch.setattr(store_mod, "save_partitioned", boom)
+        with pytest.raises(OSError, match="injected"):
+            store.apply_deltas(inserts=(np.array([0]), np.array([1])))
+        monkeypatch.undo()
+        self._assert_unchanged(store, snap, store_engine)
+        # and the store still works after the fault clears
+        rep = store.apply_deltas(inserts=(np.array([0]), np.array([1])))
+        assert rep["aggregates"]["tri"]["mode"] == "delta"
+        assert store.aggregates["tri"].value == \
+            pytest.approx(store.analytic_value("tri"))
+
+    def test_crash_between_partitions_and_commit_point(self, tmp_path,
+                                                       store_engine,
+                                                       monkeypatch):
+        """Crash AFTER the new version's partitions land but BEFORE the
+        metadata swap: the orphaned partitions are invisible — reload
+        serves the old version, and a retry commits cleanly."""
+        store = self._loaded(tmp_path, store_engine)
+        snap = self._snapshot(store)
+        import repro.serving.store as store_mod
+
+        def boom(*a, **k):
+            raise OSError("power loss (injected)")
+
+        monkeypatch.setattr(store_mod, "save_json_atomic", boom)
+        with pytest.raises(OSError, match="injected"):
+            store.apply_deltas(inserts=(np.array([2]), np.array([3])))
+        monkeypatch.undo()
+        # orphan directory exists, but the committed state is the old one
+        assert os.path.isdir(os.path.join(store.directory,
+                                          f"edges_v{snap[0] + 1}"))
+        self._assert_unchanged(store, snap, store_engine)
+        rep = store.apply_deltas(inserts=(np.array([2]), np.array([3])))
+        assert rep["version"] == snap[0] + 1
+        assert store.aggregates["tri"].value == \
+            pytest.approx(store.analytic_value("tri"))
+
+    def test_torn_meta_tmp_is_recovered(self, tmp_path, store_engine):
+        """A torn ``serving_meta.json.tmp`` (crash mid-write before the
+        atomic rename) is ignored on reload."""
+        store = self._loaded(tmp_path, store_engine)
+        snap = self._snapshot(store)
+        with open(os.path.join(store.directory, META_NAME + ".tmp"),
+                  "w") as f:
+            f.write('{"format": "repro-serving-v1", "vers')  # torn
+        self._assert_unchanged(store, snap, store_engine)
+
+
+# ---------------------------------------------------------------------------
+# S6 — the LM engine's generate() contract
+# ---------------------------------------------------------------------------
+
+class TestLMGenerate:
+    @pytest.fixture(scope="class")
+    def lm(self):
+        import jax
+        from repro.configs import get_config
+        from repro.models.lm import build_model
+        from repro.serving import Engine, ServeConfig
+        cfg = get_config("qwen2-7b", smoke=True)
+        model = build_model(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        return Engine(model, params, ServeConfig(max_len=16))
+
+    def test_n_new_zero_returns_empty(self, lm):
+        prompts = np.ones((2, 4), np.int32)
+        out, stats = lm.generate(prompts, 0)
+        assert out.shape == (2, 0) and out.dtype == np.int32
+        assert stats["generated"] == 0.0 and stats["prompt_len"] == 4.0
+
+    def test_negative_n_new_rejected(self, lm):
+        with pytest.raises(ValueError, match="n_new"):
+            lm.generate(np.ones((1, 4), np.int32), -1)
+
+    def test_kv_cache_bound_enforced(self, lm):
+        with pytest.raises(ValueError, match="max_len"):
+            lm.generate(np.ones((1, 10), np.int32), 7)   # 10 + 7 > 16
+        out, _ = lm.generate(np.ones((1, 14), np.int32), 2)  # == max_len
+        assert out.shape == (1, 2)
+
+
+# ---------------------------------------------------------------------------
+# S7 — x64 acceptance (subprocess: the flag must precede JAX arrays)
+# ---------------------------------------------------------------------------
+
+def test_x64_serving_subprocess():
+    out = subprocess.run(
+        [sys.executable, "tests/_serving_x64_check.py"],
+        capture_output=True, text=True, timeout=600)
+    assert out.returncode == 0, out.stdout + out.stderr
+    assert "OK" in out.stdout

@@ -1,0 +1,100 @@
+"""Property-based serving tests (hypothesis): incremental maintenance
+of standing aggregates equals full recomputation for ARBITRARY delta
+streams, not just the curated ones.
+
+  SP1  triangle (cyclic) counts: delta == recompute == host oracle for
+       random insert-only streams
+  SP2  triangle counts under mixed insert/delete streams
+  SP3  chain path counts under mixed streams
+
+The deterministic counterparts (always-run, tier-1, plus the x32/x64
+subprocess acceptance) live in ``tests/test_serving.py``; this file
+widens the search when hypothesis is installed.
+"""
+
+import numpy as np
+import pytest
+
+pytest.importorskip(
+    "hypothesis",
+    reason="property tests need hypothesis (pip install -e .[dev])")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core import oracle_triangles  # noqa: E402
+from repro.serving import (QueryEngine, QueryServeConfig,  # noqa: E402
+                           ServingStore)
+
+SETTINGS = dict(max_examples=8, deadline=None)
+
+#: One engine for the whole module — compiled delta-term programs are
+#: reused across examples, which is exactly the serving cache working.
+ENGINE = QueryEngine(QueryServeConfig(k=4, cache_capacity=64))
+
+N_NODES = 10
+
+
+def _unique_edges(rng, m):
+    seen = set()
+    while len(seen) < m:
+        seen.add((int(rng.integers(0, N_NODES)),
+                  int(rng.integers(0, N_NODES))))
+    arr = np.array(sorted(seen))
+    return arr[:, 0], arr[:, 1]
+
+
+def _stream_store(tmpdir, kind, n, seed, n_batches, with_deletes):
+    rng = np.random.default_rng(seed)
+    src, dst = _unique_edges(rng, 40)
+    store = ServingStore(str(tmpdir), ENGINE, num_partitions=4,
+                         drift_threshold=None, delta_capacity=16)
+    store.register_aggregate("agg", kind, n)
+    store.load_edges(src, dst)
+    for _ in range(n_batches):
+        cur = set(zip(store.src.tolist(), store.dst.tolist()))
+        ins = []
+        while len(ins) < int(rng.integers(1, 5)):
+            e = (int(rng.integers(0, N_NODES)),
+                 int(rng.integers(0, N_NODES)))
+            if e not in cur and e not in ins:
+                ins.append(e)
+        dels = []
+        if with_deletes and store.n_edges > 4:
+            pick = rng.choice(store.n_edges,
+                              size=int(rng.integers(1, 4)), replace=False)
+            dels = [(int(store.src[i]), int(store.dst[i])) for i in pick]
+        store.apply_deltas(
+            inserts=(np.array([a for a, b in ins]),
+                     np.array([b for a, b in ins])),
+            deletes=None if not dels else
+                    (np.array([a for a, b in dels]),
+                     np.array([b for a, b in dels])))
+        assert store.aggregates["agg"].value == \
+            pytest.approx(store.analytic_value("agg"))
+    return store
+
+
+@settings(**SETTINGS)
+@given(seed=st.integers(0, 999), n_batches=st.integers(1, 3))
+def test_sp1_triangle_insert_only(tmp_path_factory, seed, n_batches):
+    d = tmp_path_factory.mktemp("sp1")
+    store = _stream_store(d, "cycle", 3, seed, n_batches,
+                          with_deletes=False)
+    assert store.aggregates["agg"].value == \
+        pytest.approx(oracle_triangles(store.src, store.dst))
+
+
+@settings(**SETTINGS)
+@given(seed=st.integers(0, 999), n_batches=st.integers(1, 3))
+def test_sp2_triangle_mixed_stream(tmp_path_factory, seed, n_batches):
+    d = tmp_path_factory.mktemp("sp2")
+    store = _stream_store(d, "cycle", 3, seed, n_batches,
+                          with_deletes=True)
+    assert store.aggregates["agg"].value == \
+        pytest.approx(oracle_triangles(store.src, store.dst))
+
+
+@settings(**SETTINGS)
+@given(seed=st.integers(0, 999))
+def test_sp3_chain_paths_mixed_stream(tmp_path_factory, seed):
+    d = tmp_path_factory.mktemp("sp3")
+    _stream_store(d, "chain", 3, seed, 2, with_deletes=True)

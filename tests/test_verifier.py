@@ -77,7 +77,7 @@ def test_bench_corpus_certifies_zero_errors():
 def test_bench_target_names_cover_all_sweeps():
     names = {t.name.split("/")[0] for t in all_bench_targets()}
     assert names == {"nway", "skew", "triangles", "mapside",
-                     "join_kernels"}
+                     "join_kernels", "serving"}
 
 
 # ---------------------------------------------------------------------------
