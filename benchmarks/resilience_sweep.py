@@ -1,0 +1,339 @@
+"""Resilience sweep: what failure actually costs, per strategy.
+
+Two phases over the 3-relation chain join the resilience bench targets
+certify (160 edges over 80 nodes, seed 5, k = 8):
+
+* **overhead** — the resilient executors run the *exact* lowering of
+  the plain ones, hop by hop, so fault-free they must be bit-identical
+  (outputs, stats, overflow — asserted) and nearly free: the measured
+  wall-clock overhead of resilient vs plain execution is gated at
+  ``OVERHEAD_GATE`` (full mode only; ``--fast`` shrinks repeats and
+  skips the wall-clock gate, the mapside-sweep precedent for CI-safe
+  timing).  Measured tuple accounting must equal the analytic cost
+  model on the exact statistics (measured == analytic).
+* **sweep** — injected worker crashes at rates 0.0 … 0.3 across the
+  shuffle/placement/reducer sites, seeds 0…2 each, for the three
+  resilient configurations: one-round Shares (reducer-granular
+  recovery), cascade (hop-granular, in-memory lineage), cascade with
+  materialized hop snapshots.  Every faulted run must return the
+  fault-free answer **bit-identically** or die with the typed
+  ``HopFailed`` — a wrong answer anywhere fails the
+  ``no_wrong_answers`` gate.  Each cell records the recovery
+  accounting (``recovery.read`` / ``recovery.shuffled`` /
+  ``recovery.total`` in tuple units, deterministic under the seeded
+  injector — the pinned-accounting snapshot covers them) — the
+  recovery-cost-vs-fault-rate surface: one-round re-runs only failed
+  reducer buckets, the cascade re-executes hops from lineage.
+
+Emits ``BENCH_resilience.json`` (``--out`` to override).  ``--fast``
+changes overhead repeats only — every tuple-count accounting field is
+identical in fast and full mode (the pinned snapshot in
+``tests/data/bench_counts_seed.json`` covers both).  ``--check`` exits
+non-zero unless every gate holds (the CI resilience-sweep job runs
+``--fast --check``).
+
+  PYTHONPATH=src python benchmarks/resilience_sweep.py [--fast] [--check]
+"""
+
+import argparse
+import json
+import sys
+import tempfile
+import time
+
+from pathlib import Path
+
+try:
+    import repro  # noqa: F401 — installed, or on PYTHONPATH (ROADMAP: PYTHONPATH=src)
+except ImportError:  # checkout fallback: src/ relative to this file, not the cwd
+    sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (JoinQuery, SimGrid, cost_query_cascade,
+                        default_query_caps, integer_shares_query,
+                        plan_query, query_replications, query_stats_exact,
+                        query_table_inputs)
+from repro.core.executor import cascade_query, one_round_query
+from repro.resilience import (FaultInjector, FaultSpec, HopFailed,
+                              resilient_cascade_query,
+                              resilient_one_round_query)
+
+K = 8
+M_EDGES = 160                 # same workload the bench targets certify
+N_NODES = 80
+GRAPH_SEED = 5
+JOIN_ORDER = (0, 1, 2)        # fixed order => analytic cascade is exact
+SLACK = 8
+
+RATES = (0.0, 0.1, 0.2, 0.3)
+FAULT_SEEDS = (0, 1, 2)
+
+OVERHEAD_GATE = 0.05          # resilient <= 1.05 x plain, fault-free
+OVERHEAD_FLOOR_MS = 0.25      # absolute jitter guard on the gate
+OVERHEAD_REPEATS_FULL = 30
+OVERHEAD_REPEATS_FAST = 5
+
+
+def workload():
+    rng = np.random.default_rng(GRAPH_SEED)
+    query = JoinQuery.chain(3)
+    tables = [(rng.integers(0, N_NODES, M_EDGES).astype(np.int32),
+               rng.integers(0, N_NODES, M_EDGES).astype(np.int32))
+              for _ in range(3)]
+    stats = query_stats_exact(query, tables)
+    return query, tables, stats
+
+
+def trees_equal(a, b):
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    return len(la) == len(lb) and all(
+        x.shape == y.shape and x.dtype == y.dtype
+        and bool(jnp.all(x == y)) for x, y in zip(la, lb))
+
+
+def stat_floats(st):
+    out = {k: float(v) for k, v in st.items()}
+    out.setdefault("total", out["read"] + out["shuffled"])
+    return out
+
+
+def build_configs(query, tables, stats):
+    """The three resilient configurations, each with its plain twin."""
+    or_shape = integer_shares_query(query.rel_dims(), stats.sizes, K)
+    c_shape = (K,)
+    or_grid, c_grid = SimGrid(or_shape), SimGrid(c_shape)
+    or_rels = query_table_inputs(query, tables, or_shape)
+    c_rels = query_table_inputs(query, tables, c_shape)
+    or_caps = default_query_caps(query, stats, or_shape, slack=SLACK)
+    c_caps = default_query_caps(query, stats, c_shape, slack=SLACK)
+
+    def plain_one_round():
+        return one_round_query(or_grid, query, or_rels, caps=or_caps,
+                               join_order=JOIN_ORDER)
+
+    def plain_cascade():
+        return cascade_query(c_grid, query, c_rels, caps=c_caps,
+                             join_order=JOIN_ORDER)
+
+    def res_one_round(policy=None):
+        return resilient_one_round_query(or_grid, query, or_rels,
+                                         caps=or_caps,
+                                         join_order=JOIN_ORDER)
+
+    def res_cascade(snapshot_dir=None):
+        return resilient_cascade_query(c_grid, query, c_rels, caps=c_caps,
+                                       join_order=JOIN_ORDER,
+                                       snapshot_dir=snapshot_dir)
+
+    return {
+        "one_round": {
+            "grid_shape": list(or_shape), "plain": plain_one_round,
+            "resilient": res_one_round, "snapshots": False,
+            "specs": lambda r: [FaultSpec("shuffle", "crash", r),
+                                FaultSpec("reducer", "crash", r)],
+        },
+        "cascade": {
+            "grid_shape": list(c_shape), "plain": plain_cascade,
+            "resilient": res_cascade, "snapshots": False,
+            "specs": lambda r: [FaultSpec("shuffle", "crash", r)],
+        },
+        "cascade_snapshots": {
+            "grid_shape": list(c_shape), "plain": plain_cascade,
+            "resilient": res_cascade, "snapshots": True,
+            "specs": lambda r: [FaultSpec("shuffle", "crash", r)],
+        },
+    }
+
+
+def analytic_totals(query, stats, or_shape):
+    """Exact cost-model predictions for both strategies."""
+    repl = query_replications(query.rel_dims(), or_shape)
+    one_round = {
+        "read": float(sum(stats.sizes)),
+        "shuffled": float(sum(r * f for r, f in zip(stats.sizes, repl))),
+    }
+    one_round["total"] = one_round["read"] + one_round["shuffled"]
+    idx = stats.orders.index(tuple(JOIN_ORDER))
+    cascade_total = cost_query_cascade(
+        [stats.sizes[i] for i in JOIN_ORDER], stats.intermediates[idx])
+    return one_round, float(cascade_total)
+
+
+def bench_overhead(configs, analytic, repeats, fast):
+    """Fault-free: bit-identical outputs, measured == analytic, and the
+    wall-clock price of resilience."""
+    one_round_analytic, cascade_total = analytic
+    rows = {}
+    for name in ("one_round", "cascade", "cascade_snapshots"):
+        cfg = configs[name]
+        with tempfile.TemporaryDirectory() as tmp:
+            kwargs = {"snapshot_dir": tmp} if cfg["snapshots"] else {}
+            out_p, st_p, ovf_p = cfg["plain"]()
+            out_r, st_r, ovf_r, rep = cfg["resilient"](**kwargs)
+            identical = (trees_equal(out_p, out_r)
+                         and trees_equal(st_p, st_r)
+                         and bool(ovf_p) == bool(ovf_r))
+            assert not bool(ovf_p), f"{name}: overflow — caps undersized"
+
+            plain_ms, res_ms = [], []
+            for _ in range(repeats):
+                t0 = time.perf_counter()
+                jax.block_until_ready(cfg["plain"]()[0].valid)
+                plain_ms.append((time.perf_counter() - t0) * 1e3)
+            for _ in range(repeats):
+                with tempfile.TemporaryDirectory() as tmp2:
+                    kw = {"snapshot_dir": tmp2} if cfg["snapshots"] else {}
+                    t0 = time.perf_counter()
+                    jax.block_until_ready(cfg["resilient"](**kw)[0].valid)
+                    res_ms.append((time.perf_counter() - t0) * 1e3)
+        p50_plain = float(np.median(plain_ms))
+        p50_res = float(np.median(res_ms))
+        measured = stat_floats(st_r)
+        want = (one_round_analytic["total"] if name == "one_round"
+                else cascade_total)
+        rows[name] = {
+            "grid_shape": cfg["grid_shape"],
+            "bit_identical": identical,
+            "measured": measured,
+            "analytic_total": want,
+            "match": measured["total"] == want,
+            "retries": rep.retries,
+            "snapshots_written": rep.snapshots_written,
+            "plain_p50_ms": p50_plain,
+            "resilient_p50_ms": p50_res,
+            "overhead": p50_res / p50_plain - 1.0,
+            "overhead_ok": (True if fast else
+                            p50_res <= p50_plain * (1.0 + OVERHEAD_GATE)
+                            + OVERHEAD_FLOOR_MS),
+        }
+    return rows
+
+
+def bench_sweep(configs, baselines):
+    """Seeded crashes at each rate: recovery cost per strategy, and the
+    never-a-wrong-answer invariant."""
+    cells = []
+    wrong = 0
+    for name in ("one_round", "cascade", "cascade_snapshots"):
+        cfg = configs[name]
+        base_out, base_st, _ = baselines[name]
+        for rate in RATES:
+            for seed in FAULT_SEEDS:
+                with tempfile.TemporaryDirectory() as tmp:
+                    kwargs = {"snapshot_dir": tmp} if cfg["snapshots"] \
+                        else {}
+                    inj = FaultInjector(cfg["specs"](rate), seed=seed)
+                    try:
+                        with inj:
+                            out, st, ovf, rep = cfg["resilient"](**kwargs)
+                        ok = (trees_equal(out, base_out)
+                              and trees_equal(st, base_st))
+                        failed = None
+                    except HopFailed as e:
+                        ok, out = True, None   # typed failure, not wrong
+                        rep, failed = None, e.where
+                    if not ok:
+                        wrong += 1
+                cell = {
+                    "config": name, "rate": rate, "seed": seed,
+                    "fired": inj.counters(),
+                    "exact_or_typed": ok,
+                }
+                if rep is not None:
+                    r = rep.to_json()
+                    cell.update({
+                        "retries": r["retries"],
+                        "failed_reducers": r["failed_reducers"],
+                        "snapshots_written": r["snapshots_written"],
+                        "recovery": r["recovery"],
+                    })
+                else:
+                    cell["typed_failure"] = failed
+                cells.append(cell)
+    return cells, wrong
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="fewer overhead repeats, skip the wall-clock "
+                         "gate (CI smoke); accounting fields are "
+                         "identical to full mode")
+    ap.add_argument("--check", action="store_true",
+                    help="exit non-zero unless every gate holds")
+    ap.add_argument("--out", default="BENCH_resilience.json")
+    args = ap.parse_args()
+
+    repeats = OVERHEAD_REPEATS_FAST if args.fast else OVERHEAD_REPEATS_FULL
+    query, tables, stats = workload()
+    configs = build_configs(query, tables, stats)
+    or_shape = tuple(configs["one_round"]["grid_shape"])
+    analytic = analytic_totals(query, stats, or_shape)
+
+    overhead = bench_overhead(configs, analytic, repeats, args.fast)
+    for name, row in overhead.items():
+        print(f"overhead {name}: {row['overhead']:+.1%} "
+              f"(plain {row['plain_p50_ms']:.1f}ms, resilient "
+              f"{row['resilient_p50_ms']:.1f}ms) "
+              f"{'BIT-IDENTICAL' if row['bit_identical'] else 'DIVERGED'} "
+              f"{'MATCH' if row['match'] else 'MISMATCH'}")
+
+    baselines = {name: configs[name]["plain"]()
+                 for name in ("one_round", "cascade", "cascade_snapshots")}
+    cells, wrong = bench_sweep(configs, baselines)
+    by_cfg = {}
+    for c in cells:
+        if "recovery" in c:
+            key = (c["config"], c["rate"])
+            by_cfg.setdefault(key, []).append(c["recovery"]["total"])
+    for (name, rate), totals in sorted(by_cfg.items()):
+        print(f"sweep {name} rate={rate}: mean recovery "
+              f"{np.mean(totals):.0f} tuples over {len(totals)} seed(s)")
+    n_typed = sum(1 for c in cells if "typed_failure" in c)
+    print(f"sweep: {len(cells)} cells, {n_typed} typed failure(s), "
+          f"{wrong} wrong answer(s)")
+
+    gates = {
+        "fault_free_bit_identical": all(r["bit_identical"]
+                                        for r in overhead.values()),
+        "fault_free_accounting": all(r["match"]
+                                     for r in overhead.values()),
+        "fault_free_no_retries": all(r["retries"] == 0
+                                     for r in overhead.values()),
+        "overhead_bounded": all(r["overhead_ok"]
+                                for r in overhead.values()),
+        "no_wrong_answers": wrong == 0,
+        "faults_recovered": any(c.get("retries", 0) > 0
+                                or c.get("failed_reducers", 0) > 0
+                                for c in cells),
+    }
+    all_ok = all(gates.values())
+    for name, ok in gates.items():
+        print(f"gate {name}: {'PASS' if ok else 'FAIL'}")
+
+    report = {
+        "benchmark": "resilience_sweep",
+        "fast": args.fast,
+        "k": K,
+        "m_edges": M_EDGES,
+        "n_nodes": N_NODES,
+        "rates": list(RATES),
+        "fault_seeds": list(FAULT_SEEDS),
+        "overhead_gate": OVERHEAD_GATE,
+        "overhead": overhead,
+        "sweep": cells,
+        "gates": gates,
+    }
+    with open(args.out, "w") as f:
+        json.dump(report, f, indent=2)
+    print(f"wrote {args.out}")
+    if args.check and not all_ok:
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -50,7 +50,7 @@ def check_links() -> int:
     return failures
 
 
-EXECUTABLE_DOCS = ("README.md", "docs/serving.md")
+EXECUTABLE_DOCS = ("README.md", "docs/serving.md", "docs/resilience.md")
 
 
 def run_doc_snippets(relpath: str) -> int:

@@ -29,6 +29,7 @@ from .plan_verifier import (COST_RTOL, GAP_WARN_FACTOR,
 from .bench_targets import BenchTarget, TARGET_BUILDERS, all_bench_targets
 from .jaxpr_audit import (audit_donation, audit_jit_cache,
                           audit_lowerings, audit_traced)
+from .resilience_verifier import verify_recovery_meta
 from .cli import main as verify_main, verify_bench_targets
 
 __all__ = [
@@ -40,6 +41,6 @@ __all__ = [
     "verify_chain_plan", "verify_query_plan",
     "BenchTarget", "TARGET_BUILDERS", "all_bench_targets",
     "audit_traced", "audit_donation", "audit_jit_cache",
-    "audit_lowerings",
+    "audit_lowerings", "verify_recovery_meta",
     "verify_main", "verify_bench_targets",
 ]

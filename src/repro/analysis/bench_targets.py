@@ -54,6 +54,9 @@ class BenchTarget:
     plan: Any
     caps: ChainCaps
     specs: Optional[Sequence[Any]] = None
+    #: RecoveryMeta for targets the resilience sweep executes under
+    #: injected faults (checked by the recovery-coverage pass).
+    recovery: Optional[Any] = None
 
 
 def nway_targets() -> List[BenchTarget]:
@@ -287,6 +290,45 @@ def serving_targets() -> List[BenchTarget]:
     return out
 
 
+def resilience_targets() -> List[BenchTarget]:
+    """BENCH_resilience.json: the 3-chain the chaos sweep executes
+    under injected faults (160 edges over 80 nodes, seed 5, k = 8) in
+    both resilient configurations.  Each target carries its
+    :class:`~repro.resilience.recovery.RecoveryMeta` so ``repro-verify
+    --resilience`` certifies coverage: every non-final cascade hop has
+    a snapshot recovery point, one-round recovery is reducer-granular
+    by construction."""
+    from ..resilience import recovery_meta_for
+
+    rng = np.random.default_rng(5)
+    m, nodes, k = 160, 80, 8
+    query = JoinQuery.chain(3)
+    tables = [(rng.integers(0, nodes, m).astype(np.int32),
+               rng.integers(0, nodes, m).astype(np.int32))
+              for _ in range(3)]
+    stats = query_stats_exact(query, tables)
+    plan = plan_query(query, stats, k)
+    grid_shape = integer_shares_query(query.rel_dims(), stats.sizes, k)
+    one_round_plan = dataclasses.replace(
+        plan, algorithm="1,3J", strategy="one_round",
+        grid_shape=grid_shape)
+    cascade_plan = dataclasses.replace(
+        plan, algorithm="2,3J", strategy="cascade", grid_shape=(k,),
+        join_order=stats.best_order()[0])
+    return [
+        BenchTarget(
+            name="resilience/one_round (1,3J)", kind="query",
+            query=query, stats=stats, plan=one_round_plan,
+            caps=default_query_caps(query, stats, grid_shape, slack=8),
+            recovery=recovery_meta_for("one_round", 3)),
+        BenchTarget(
+            name="resilience/cascade (2,3J)", kind="query",
+            query=query, stats=stats, plan=cascade_plan,
+            caps=default_query_caps(query, stats, (k,), slack=8),
+            recovery=recovery_meta_for("cascade", 3)),
+    ]
+
+
 #: name -> builder, in BENCH_* artifact order.
 TARGET_BUILDERS: Dict[str, Callable[[], List[BenchTarget]]] = {
     "nway": nway_targets,
@@ -295,6 +337,7 @@ TARGET_BUILDERS: Dict[str, Callable[[], List[BenchTarget]]] = {
     "mapside": mapside_targets,
     "join_kernels": join_kernels_targets,
     "serving": serving_targets,
+    "resilience": resilience_targets,
 }
 
 

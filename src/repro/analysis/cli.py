@@ -2,10 +2,13 @@
 
 Drives the static analyzer from the command line / CI:
 
-* ``repro-verify --all-bench`` rebuilds every plan behind the five
+* ``repro-verify --all-bench`` rebuilds every plan behind the
   ``BENCH_*.json`` sweeps (:mod:`repro.analysis.bench_targets`) and
-  runs the plan checker on each;
-* ``--bench NAME`` (repeatable) restricts to named sweeps;
+  runs the plan checker on each — plus the recovery-coverage pass
+  (:mod:`repro.analysis.resilience_verifier`) on targets carrying
+  recovery metadata;
+* ``--bench NAME`` (repeatable) restricts to named sweeps
+  (``--bench resilience`` is the recovery-coverage pass alone);
 * ``--audit`` adds the jaxpr audit of every executor lowering;
 * ``--out FILE`` writes the JSON report artifact.
 
@@ -23,11 +26,15 @@ from typing import List, Optional, Sequence
 from .bench_targets import TARGET_BUILDERS, all_bench_targets
 from .plan_verifier import verify_chain_plan, verify_query_plan
 from .report import VerifierReport, reports_to_json
+from .resilience_verifier import verify_recovery_meta
 
 
 def verify_bench_targets(names: Optional[Sequence[str]] = None,
                          ) -> List[VerifierReport]:
-    """Build the bench corpus and certify every target."""
+    """Build the bench corpus and certify every target.  Targets that
+    carry recovery metadata (the resilience sweep's plans) additionally
+    pass the recovery-coverage check — every non-final hop needs a
+    recovery point or an explicit opt-out."""
     reports: List[VerifierReport] = []
     for t in all_bench_targets(names):
         if t.kind == "chain":
@@ -36,6 +43,9 @@ def verify_bench_targets(names: Optional[Sequence[str]] = None,
         else:
             rep = verify_query_plan(t.query, t.stats, t.plan, t.caps,
                                     target=t.name)
+        if t.recovery is not None:
+            rep.extend(verify_recovery_meta(t.recovery, plan=t.plan,
+                                            target=t.name))
         reports.append(rep)
     return reports
 

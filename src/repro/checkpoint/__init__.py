@@ -1,7 +1,9 @@
-from .store import (CheckpointManager, latest_step, load_json,
-                    load_partition_spec, load_partitioned, restore, save,
+from .store import (CheckpointManager, DataCorrupt, latest_hop, latest_step,
+                    load_hop, load_json, load_partition_spec,
+                    load_partitioned, restore, save, save_hop,
                     save_json_atomic, save_partitioned)
 
-__all__ = ["CheckpointManager", "save", "restore", "latest_step",
-           "save_partitioned", "load_partitioned", "load_partition_spec",
-           "save_json_atomic", "load_json"]
+__all__ = ["CheckpointManager", "DataCorrupt", "save", "restore",
+           "latest_step", "save_partitioned", "load_partitioned",
+           "load_partition_spec", "save_json_atomic", "load_json",
+           "save_hop", "load_hop", "latest_hop"]

@@ -28,10 +28,51 @@ import os
 import shutil
 import threading
 import zlib
-from typing import Any, Optional, Tuple
+from typing import Any, Dict, Optional, Tuple
 
 import jax
 import numpy as np
+
+
+class DataCorrupt(IOError):
+    """Stored bytes failed their CRC (or an injected corruption was
+    detected by the read path's verification).  Subclasses ``IOError``
+    so callers that already guard checkpoint reads keep working; the
+    resilience layer (repro.resilience) catches it specifically to
+    retry, quarantine, or fall back.  ``path``/``detail`` locate the
+    corrupt artifact."""
+
+    def __init__(self, message: str, *, path: str = "", detail: str = ""):
+        super().__init__(message)
+        self.path = path
+        self.detail = detail
+
+
+# ---------------------------------------------------------------------------
+# Fault-injection hook (repro.resilience.faults)
+# ---------------------------------------------------------------------------
+
+#: Installed by a :class:`~repro.resilience.faults.FaultInjector`:
+#: partitioned reads offer each partition's freshly-loaded arrays at
+#: the "partition_read" site.  The injector may delay, raise a typed
+#: fault, or return the arrays *corrupted* — the CRC verification just
+#: below the hook then catches the damage, which is the point: this is
+#: the one site where injected corruption exercises the real
+#: end-to-end detection machinery instead of a modeled checksum.
+_fault_hook = None
+
+
+def set_fault_hook(hook) -> None:
+    """Install (or, with ``None``, remove) the module's fault hook —
+    called by ``FaultInjector.install()`` / ``uninstall()``."""
+    global _fault_hook
+    _fault_hook = hook
+
+
+def _inject(site: str, payload):
+    if _fault_hook is None:
+        return payload
+    return _fault_hook(site, payload)
 
 
 def _remove(path: str) -> None:
@@ -149,7 +190,36 @@ def save(directory: str, step: int, tree, extra: Optional[dict] = None) -> str:
     return final
 
 
-def latest_step(directory: str) -> Optional[int]:
+def _checkpoint_intact(path: str, verify_crc: bool = True) -> bool:
+    """True iff a ``step_<n>`` directory is restorable: the manifest
+    exists and parses, ``arrays.npz`` is readable and holds every leaf,
+    and (by default) every leaf matches its recorded CRC.  A torn
+    directory — a writer killed between creating the directory and the
+    atomic swap, or bytes damaged after the fact — fails this and must
+    never be offered as the latest checkpoint."""
+    try:
+        with open(os.path.join(path, "manifest.json")) as f:
+            manifest = json.load(f)
+        n = int(manifest["n_leaves"])
+        crcs = manifest["crc"]
+        with np.load(os.path.join(path, "arrays.npz")) as data:
+            for i in range(n):
+                a = data[f"leaf_{i}"]
+                if verify_crc and int(zlib.crc32(a.tobytes())) != crcs[i]:
+                    return False
+    except Exception:  # noqa: BLE001 — any defect means "not restorable"
+        return False
+    return True
+
+
+def latest_step(directory: str, *, verify: bool = True) -> Optional[int]:
+    """Newest *restorable* step under ``directory``.  Torn or partial
+    step directories (missing/unparseable manifest, missing or
+    unreadable npz, failing CRC) are skipped, not returned: a resuming
+    trainer or a recovering cascade must land on a checkpoint that
+    :func:`restore` can actually read, falling back to the newest
+    older intact one.  ``verify=False`` skips the CRC pass (manifest
+    and npz readability are always checked)."""
     if not os.path.isdir(directory):
         return None
     _recover_replaced(directory)
@@ -161,7 +231,11 @@ def latest_step(directory: str) -> Optional[int]:
                 steps.append(int(name.split("_")[1]))
             except ValueError:
                 continue
-    return max(steps) if steps else None
+    for step in sorted(steps, reverse=True):
+        if _checkpoint_intact(os.path.join(directory, f"step_{step}"),
+                              verify_crc=verify):
+            return step
+    return None
 
 
 def restore(directory: str, step: int, like) -> Tuple[Any, dict]:
@@ -181,7 +255,8 @@ def restore(directory: str, step: int, like) -> Tuple[Any, dict]:
         arrays.append(a)
     for i, a in enumerate(arrays):
         if int(zlib.crc32(a.tobytes())) != manifest["crc"][i]:
-            raise IOError(f"checkpoint corruption in leaf {i} at {path}")
+            raise DataCorrupt(f"checkpoint corruption in leaf {i} at {path}",
+                              path=path, detail=f"leaf_{i}")
     leaves, treedef = _flatten(like)
     if len(leaves) != len(arrays):
         raise ValueError(f"leaf count mismatch: {len(leaves)} vs {len(arrays)}")
@@ -344,13 +419,135 @@ def load_partitioned(directory: str, name: str):
     per_part["valid"] = []
     for p in range(manifest["num_partitions"]):
         data = np.load(os.path.join(path, f"part_{p:05d}.npz"))
+        arrays: Dict[str, np.ndarray] = {k: data[k]
+                                         for k in list(columns) + ["valid"]}
+        # Fault site: the injector may corrupt the loaded arrays here —
+        # the CRC check below is what catches it (docs/resilience.md).
+        arrays = _inject("partition_read", arrays)
         for k in list(columns) + ["valid"]:
-            a = data[k]
+            a = arrays[k]
             if int(zlib.crc32(a.tobytes())) != manifest["crc"][p][k]:
-                raise IOError(f"partition {p} column {k!r} corrupt in {path}")
+                raise DataCorrupt(
+                    f"partition {p} column {k!r} corrupt in {path}",
+                    path=path, detail=f"part_{p:05d}.npz:{k}")
             per_part[k].append(a)
     cols = {c: jnp.asarray(
                 np.stack(per_part[c]).astype(manifest["dtypes"][c]))
             for c in columns}
     valid = jnp.asarray(np.stack(per_part["valid"]).astype(bool))
     return PartitionedRelation(Relation(cols, valid), spec)
+
+
+# ---------------------------------------------------------------------------
+# Hop snapshots — cascade lineage recovery points (repro.resilience)
+# ---------------------------------------------------------------------------
+
+#: Format tag of one materialized cascade intermediate.
+HOP_FORMAT = "hop-snapshot-v1"
+
+
+def save_hop(directory: str, hop: int, rel, extra: Optional[dict] = None,
+             ) -> str:
+    """Materialize one cascade hop's intermediate relation as
+    ``<directory>/step_<hop>/`` — the recovery point a killed later hop
+    re-executes from.  Unlike :func:`save`, the snapshot is
+    *self-describing*: columns are stored under their own names with
+    dtypes and the validity mask alongside, so :func:`load_hop` can
+    rebuild the :class:`~repro.core.relation.Relation` without a
+    template (``like``) — a resuming run does not know the
+    intermediate's schema before reading it.  Per-array CRCs, fsync,
+    and the atomic swap protocol are the same as every other artifact
+    here; a crash mid-write leaves a torn directory that
+    :func:`latest_hop` skips."""
+    tmp = os.path.join(directory, f"step_{hop}.tmp")
+    final = os.path.join(directory, f"step_{hop}")
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp, exist_ok=True)
+    cols = {n: np.asarray(c) for n, c in rel.cols.items()}
+    valid = np.asarray(rel.valid)
+    arrays = {f"col_{n}": a for n, a in cols.items()}
+    arrays["valid"] = valid
+    np.savez(os.path.join(tmp, "arrays.npz"),
+             **{k: _storable(a) for k, a in arrays.items()})
+    manifest = {
+        "format": HOP_FORMAT,
+        "hop": int(hop),
+        "columns": sorted(cols),
+        "dtypes": {n: a.dtype.name for n, a in cols.items()},
+        "shapes": {n: list(a.shape) for n, a in cols.items()},
+        "valid_shape": list(valid.shape),
+        "crc": {k: int(zlib.crc32(a.tobytes())) for k, a in arrays.items()},
+        "extra": extra or {},
+    }
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+        f.flush()
+        os.fsync(f.fileno())
+    _atomic_replace(tmp, final)
+    return final
+
+
+def _hop_intact(path: str) -> bool:
+    """True iff a hop snapshot is fully restorable (manifest parses,
+    every named array reads back, CRCs match)."""
+    try:
+        with open(os.path.join(path, "manifest.json")) as f:
+            manifest = json.load(f)
+        if manifest.get("format") != HOP_FORMAT:
+            return False
+        with np.load(os.path.join(path, "arrays.npz")) as data:
+            for k, crc in manifest["crc"].items():
+                if int(zlib.crc32(data[k].tobytes())) != crc:
+                    return False
+    except Exception:  # noqa: BLE001 — any defect means "not restorable"
+        return False
+    return True
+
+
+def latest_hop(directory: str) -> Optional[int]:
+    """Newest *intact* hop snapshot under ``directory`` (CRC verified),
+    or None.  Torn or corrupt snapshots are skipped — recovery resumes
+    from the newest hop that actually restores, exactly like
+    :func:`latest_step` for training checkpoints."""
+    if not os.path.isdir(directory):
+        return None
+    _recover_replaced(directory)
+    hops = []
+    for name in os.listdir(directory):
+        if (name.startswith("step_") and not name.endswith(".tmp")
+                and not name.endswith(".old")):
+            try:
+                hops.append(int(name.split("_")[1]))
+            except ValueError:
+                continue
+    for hop in sorted(hops, reverse=True):
+        if _hop_intact(os.path.join(directory, f"step_{hop}")):
+            return hop
+    return None
+
+
+def load_hop(directory: str, hop: int):
+    """Restore one hop snapshot into a
+    :class:`~repro.core.relation.Relation` plus its ``extra`` document
+    (CRC verified; raises :class:`DataCorrupt` on damage)."""
+    from ..core.relation import Relation
+    import jax.numpy as jnp
+
+    path = os.path.join(directory, f"step_{hop}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    if manifest.get("format") != HOP_FORMAT:
+        raise IOError(f"not a hop snapshot: {path}")
+    data = np.load(os.path.join(path, "arrays.npz"))
+    arrays = {}
+    for k, crc in manifest["crc"].items():
+        a = data[k]
+        if int(zlib.crc32(a.tobytes())) != crc:
+            raise DataCorrupt(f"hop snapshot array {k!r} corrupt in {path}",
+                              path=path, detail=k)
+        arrays[k] = a
+    cols = {n: jnp.asarray(arrays[f"col_{n}"].astype(manifest["dtypes"][n]))
+            for n in manifest["columns"]}
+    valid = jnp.asarray(arrays["valid"].astype(bool))
+    return Relation(cols, valid), manifest["extra"]

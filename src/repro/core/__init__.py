@@ -77,7 +77,7 @@ from .local import (groupby_sum, groupby_sum_multipass, local_join,
 from .partition import (PartitionSpec, PartitionedRelation,
                         chain_partitioning, co_partitioned,
                         default_part_capacity, partition_relation,
-                        repartition)
+                        repartition, verify_partition_layout)
 from .one_round import one_round_three_way
 from .cascade import cascade_three_way, cascade_three_way_agg, one_round_three_way_agg
 from .aggregation import distributed_groupby_sum, project_product
@@ -121,7 +121,7 @@ __all__ = [
     "sort_merge_join", "local_join", "local_join_allpairs",
     "groupby_sum", "groupby_sum_multipass", "sort_rows",
     "PartitionSpec", "PartitionedRelation", "partition_relation",
-    "repartition",
+    "repartition", "verify_partition_layout",
     "default_part_capacity",
     "co_partitioned", "chain_partitioning", "ChainPartitioning",
     "chain_mapside_modes", "chain_mapside_shuffles", "chain_mapside_placed",

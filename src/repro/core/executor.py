@@ -144,6 +144,76 @@ def _close_cycle(acc: Relation, extras: Sequence[str]) -> Relation:
     return Relation(cols, acc.valid & mask)
 
 
+def place_relation(grid: Grid, query: JoinQuery, j: int, rel: Relation, *,
+                   caps: ChainCaps, measure_skew: bool = False,
+                   ) -> Tuple[Relation, jnp.ndarray, jnp.ndarray]:
+    """The map/placement phase of one relation on the Shares hypercube:
+    route to the pinned dims (one shuffle hop per hashed dim), replicate
+    over the rest.  Returns (placed shard, overflow, peak bucket load).
+
+    This is the per-relation *lineage unit* of a one-round join: a
+    placement that dies (a lost map task) is recovered by re-running
+    exactly this function on the original input — which is what
+    :func:`repro.resilience.recovery.resilient_one_round_query` does.
+    """
+    ndims = query.n_dims
+    overflow = jnp.zeros((), jnp.bool_)
+    skew = jnp.zeros((), jnp.float32)
+    cur = rel
+    hashed = query.hashed_dims(j)
+    for d in hashed:                     # route to the pinned dims
+        if grid.shape[d] == 1:
+            continue                     # clamped dim: one bucket, no hop
+        attr = query.dim_attr(d)
+        if measure_skew:
+            skew = jnp.maximum(
+                skew, _hop_load(grid, cur, attr, grid.shape[d], salt=d))
+        bucket = grid.map_devices(
+            lambda r, _d=d, _a=attr: hashing.bucket_hash(
+                r.col(_a), grid.shape[_d], salt=_d), cur)
+        cur, ovf, _ = shuffle_by_bucket(grid, cur, bucket, d, caps.recv,
+                                        local_capacity=caps.local)
+        overflow = overflow | ovf
+    for d in range(ndims):               # replicate over the rest
+        if d in hashed or grid.shape[d] == 1:
+            continue
+        cur, ovf = broadcast_along(grid, cur, d, caps.local)
+        overflow = overflow | ovf
+    return cur, overflow, skew
+
+
+def reduce_side_fn(query: JoinQuery, order: Sequence[int], *,
+                   caps: ChainCaps, join_impl: str = "sort_merge"):
+    """Build the per-device reduce function of a one-round join: the
+    left-deep chain of local joins along ``order``, cycle-closing
+    filters applied at their hop.  Returns ``reduce(*shards) -> (acc,
+    overflow)`` — pure per-device work, so it can be vmapped over the
+    whole grid (the normal path) *or* run on one reducer coordinate's
+    shards alone (the failed-bucket re-execution path of
+    :func:`repro.resilience.recovery.resilient_one_round_query`)."""
+    n = query.n_relations
+    order = tuple(order)
+    steps = _join_steps(query, order)
+    out_caps = [caps.mid] * (n - 2) + [caps.join if (query.aggregate and
+                                                     caps.join) else caps.out]
+
+    def reduce_side(*shards: Relation):
+        acc = shards[order[0]]
+        ovf = jnp.zeros((), jnp.bool_)
+        for i, (j, key, extras) in enumerate(steps):
+            right = shards[j]
+            if extras:
+                right = right.rename({a: _CLOSE + a for a in extras})
+            acc, o = local_join(acc, right, key, key, out_caps[i],
+                                impl=join_impl)
+            ovf = ovf | o
+            if extras:
+                acc = _close_cycle(acc, extras)
+        return acc, ovf
+
+    return reduce_side
+
+
 def one_round_query(grid: Grid, query: JoinQuery, rels: Sequence[Relation], *,
                     caps: ChainCaps, join_order: Optional[Sequence[int]] = None,
                     measure_skew: bool = False,
@@ -174,48 +244,16 @@ def one_round_query(grid: Grid, query: JoinQuery, rels: Sequence[Relation], *,
 
     placed: List[Relation] = []
     for j, rel in enumerate(rels):
-        cur = rel
-        hashed = query.hashed_dims(j)
-        for d in hashed:                     # route to the pinned dims
-            if grid.shape[d] == 1:
-                continue                     # clamped dim: one bucket, no hop
-            attr = query.dim_attr(d)
-            if measure_skew:
-                skew = jnp.maximum(
-                    skew, _hop_load(grid, cur, attr, grid.shape[d], salt=d))
-            bucket = grid.map_devices(
-                lambda r, _d=d, _a=attr: hashing.bucket_hash(
-                    r.col(_a), grid.shape[_d], salt=_d), cur)
-            cur, ovf, _ = shuffle_by_bucket(grid, cur, bucket, d, caps.recv,
-                                            local_capacity=caps.local)
-            overflow = overflow | ovf
-        for d in range(ndims):               # replicate over the rest
-            if d in hashed or grid.shape[d] == 1:
-                continue
-            cur, ovf = broadcast_along(grid, cur, d, caps.local)
-            overflow = overflow | ovf
+        cur, ovf, sk = place_relation(grid, query, j, rel, caps=caps,
+                                      measure_skew=measure_skew)
+        overflow = overflow | ovf
+        skew = jnp.maximum(skew, sk)
         placed.append(cur)
 
     # Reduce side: left-deep chain of local joins (pure per-device work).
     order = tuple(join_order) if join_order is not None \
         else query.default_join_order()
-    steps = _join_steps(query, order)
-    out_caps = [caps.mid] * (n - 2) + [caps.join if (query.aggregate and
-                                                     caps.join) else caps.out]
-
-    def reduce_side(*shards: Relation):
-        acc = shards[order[0]]
-        ovf = jnp.zeros((), jnp.bool_)
-        for i, (j, key, extras) in enumerate(steps):
-            right = shards[j]
-            if extras:
-                right = right.rename({a: _CLOSE + a for a in extras})
-            acc, o = local_join(acc, right, key, key, out_caps[i],
-                                impl=join_impl)
-            ovf = ovf | o
-            if extras:
-                acc = _close_cycle(acc, extras)
-        return acc, ovf
+    reduce_side = reduce_side_fn(query, order, caps=caps, join_impl=join_impl)
 
     joined, ovf_j = grid.map_devices(reduce_side, *placed)
     overflow = overflow | jnp.any(grid.reduce_any(ovf_j))

@@ -162,6 +162,34 @@ def repartition(prel: PartitionedRelation, *, salt: int,
                               part_capacity=part_capacity)
 
 
+def verify_partition_layout(prel: PartitionedRelation) -> bool:
+    """Recheck the layout invariant a :class:`PartitionedRelation`'s
+    spec asserts: every valid row lives in the partition its key hashes
+    to, and (for ``sorted`` specs) every partition holds its valid rows
+    first, keys ascending.
+
+    The persisted store already CRC-verifies bytes on read; this is the
+    *semantic* audit above it — bytes can round-trip perfectly and
+    still describe a layout the spec no longer proves (wrong salt,
+    foreign manifest, a partial rewrite).  The resilient read path
+    (:func:`repro.resilience.resilient_load_partitioned`) treats a
+    violation like detected corruption: retry, then quarantine.  Cheap
+    (one hash pass, no shuffle) and host-synchronous by design — it is
+    a recovery-path check, never executed inside a compiled program.
+    """
+    spec = prel.spec
+    key = prel.parts.cols[spec.key]
+    valid = prel.parts.valid
+    bucket = hashing.bucket_hash(key, spec.num_partitions, salt=spec.salt)
+    rows = jnp.arange(valid.shape[0], dtype=bucket.dtype)[:, None]
+    ok = jnp.all(jnp.where(valid, bucket == rows, True))
+    if spec.sorted and valid.shape[1] > 1:
+        pair = valid[:, 1:] & valid[:, :-1]
+        ok = ok & jnp.all(valid[:, 1:] <= valid[:, :-1])
+        ok = ok & jnp.all(jnp.where(pair, key[:, :-1] <= key[:, 1:], True))
+    return bool(ok)
+
+
 def default_part_capacity(n_rows: int, num_partitions: int,
                           slack: float = 3.0) -> int:
     """Per-partition capacity for ``partition_relation``: the expected

@@ -156,6 +156,34 @@ class ShardGrid(Grid):
 
 
 # ---------------------------------------------------------------------------
+# Fault-injection hook (repro.resilience.faults)
+# ---------------------------------------------------------------------------
+
+#: When a :class:`~repro.resilience.faults.FaultInjector` is installed,
+#: every shuffle hop offers it the received payload at the "shuffle"
+#: site — the injector may delay, raise a typed fault, or pass the
+#: payload through.  ``None`` (the default) costs one attribute read
+#: per hop and nothing else; the hook itself never fires under jit
+#: tracing (the injector skips tracer payloads), so compiled programs
+#: are never poisoned by trace-time draws.
+_fault_hook = None
+
+
+def set_fault_hook(hook) -> None:
+    """Install (or, with ``None``, remove) the module's fault hook —
+    called by ``FaultInjector.install()`` / ``uninstall()``, never
+    directly."""
+    global _fault_hook
+    _fault_hook = hook
+
+
+def _inject(site: str, payload):
+    if _fault_hook is None:
+        return payload
+    return _fault_hook(site, payload)
+
+
+# ---------------------------------------------------------------------------
 # Distributed shuffle: the MapReduce sort/shuffle guarantee
 # ---------------------------------------------------------------------------
 
@@ -190,6 +218,7 @@ def shuffle_by_bucket(grid: Grid, rel: Relation, bucket, grid_axis: int,
 
     buf, ovf, n_sent = grid.map_devices(send, rel, bucket)
     recv = grid.all_to_all(buf, grid_axis)
+    recv = _inject("shuffle", recv)
     local = grid.map_devices(flatten_leading, recv)
     overflow = jnp.any(grid.reduce_any(ovf))
     if local_capacity is not None and local_capacity < K * recv_capacity:
@@ -207,6 +236,7 @@ def broadcast_along(grid: Grid, rel: Relation, grid_axis: int,
     communication cost the paper charges.  Optionally compacts the
     result to ``local_capacity``."""
     gathered = grid.all_gather(rel, grid_axis)
+    gathered = _inject("shuffle", gathered)
     out = grid.map_devices(flatten_leading, gathered)
     if local_capacity is not None:
         out, ovf = compact_to(grid, out, local_capacity)

@@ -12,15 +12,17 @@ execution, and streaming ingest with incremental view maintenance
   Engine / ServeConfig             — the LM decoding engine (models/)
 """
 
-from .engine import (Engine, PlanRejected, QueryEngine, QueryRequest,
-                     QueryServeConfig, ServeConfig, ServeResult,
-                     ServingStats, stats_signature, weighted_total)
+from .engine import (CircuitOpen, DeadlineExceeded, Engine, PlanRejected,
+                     QueryEngine, QueryRequest, QueryServeConfig,
+                     RequestShed, ServeConfig, ServeResult, ServingStats,
+                     stats_signature, weighted_total)
 from .store import (IngestError, ServingStore, StandingAggregate,
                     delta_terms)
 
 __all__ = [
     "Engine", "ServeConfig",
     "QueryEngine", "QueryServeConfig", "QueryRequest", "ServeResult",
-    "ServingStats", "PlanRejected", "stats_signature", "weighted_total",
+    "ServingStats", "PlanRejected", "RequestShed", "DeadlineExceeded",
+    "CircuitOpen", "stats_signature", "weighted_total",
     "ServingStore", "StandingAggregate", "IngestError", "delta_terms",
 ]

@@ -121,6 +121,31 @@ class Engine:
 AnyStats = Union[QueryStats, ChainStats]
 
 
+# ---------------------------------------------------------------------------
+# Fault-injection hook (repro.resilience.faults)
+# ---------------------------------------------------------------------------
+
+#: When a :class:`~repro.resilience.faults.FaultInjector` is installed,
+#: every request entering the engine offers it a fault opportunity at
+#: the "submit" site (crash = the request died in transit, corrupt = a
+#: transport checksum mismatch).  ``None`` (the default) costs one
+#: attribute read per submission and nothing else.
+_fault_hook = None
+
+
+def set_fault_hook(hook) -> None:
+    """Install (or, with ``None``, remove) the module's fault hook —
+    called by ``FaultInjector.install()`` / ``uninstall()``."""
+    global _fault_hook
+    _fault_hook = hook
+
+
+def _inject(site: str, payload):
+    if _fault_hook is None:
+        return payload
+    return _fault_hook(site, payload)
+
+
 def stats_signature(stats: Any) -> Any:
     """Hashable signature of a statistics object: every numeric field,
     recursively, as nested tuples.  Two statistics objects share a
@@ -163,6 +188,25 @@ class PlanRejected(RuntimeError):
         self.report = report
 
 
+class RequestShed(RuntimeError):
+    """Admission control refused the request *before* doing any work —
+    the queue bound was hit or the engine is over its latency SLO.  A
+    typed, retryable rejection: the client saw no partial answer."""
+
+
+class DeadlineExceeded(RuntimeError):
+    """The request's deadline elapsed — during admission, planning, or
+    execution.  Any computed result is discarded (never a partial or
+    stale answer)."""
+
+
+class CircuitOpen(RuntimeError):
+    """The plan/compile circuit breaker is open after repeated
+    :class:`PlanRejected`/compile failures: cache *misses* fail fast
+    instead of burning planning work that keeps failing.  Cache hits
+    are still served."""
+
+
 @dataclasses.dataclass(frozen=True)
 class QueryServeConfig:
     """Engine-wide serving knobs.
@@ -180,6 +224,33 @@ class QueryServeConfig:
                     executable instead of retracing.  Explicit request
                     caps are quantized the same way (the cache key pins
                     the *requested* caps, pre-quantization).
+
+    Admission control (docs/resilience.md — all off by default):
+
+    max_queue:      bound on requests admitted per ``submit_many``
+                    call (the synchronous engine's request queue);
+                    excess requests shed with a typed
+                    :class:`RequestShed` instead of growing latency
+                    unboundedly.
+    deadline_ms:    default per-request deadline; elapsed during
+                    admission, planning, or execution =>
+                    :class:`DeadlineExceeded` (any computed result is
+                    discarded, never returned late).
+    slo_ms:         latency SLO — when the mean of the last
+                    ``shed_window`` executed-request latencies exceeds
+                    it, new requests shed until the window recovers
+                    (every ``shed_window``-th request is admitted as a
+                    probe so recovery is observable).
+    breaker_threshold / breaker_cooldown: the plan/compile circuit
+                    breaker opens after ``threshold`` consecutive
+                    build failures; while open, cache misses fail fast
+                    (:class:`CircuitOpen`).  After ``cooldown``
+                    fast-failures one half-open probe build is allowed
+                    — success closes the breaker, failure reopens it.
+    submit_retries: transient submit-site faults (the injector's
+                    ``submit`` site — a crashed or corrupted request
+                    in transit) are retried this many times within the
+                    deadline before surfacing as a typed fault error.
     """
 
     k: int = 8
@@ -188,6 +259,13 @@ class QueryServeConfig:
     join_impl: str = "sort_merge"
     verify_plans: bool = False
     quantize_caps: bool = True
+    max_queue: Optional[int] = None
+    deadline_ms: Optional[float] = None
+    slo_ms: Optional[float] = None
+    shed_window: int = 16
+    breaker_threshold: int = 3
+    breaker_cooldown: int = 8
+    submit_retries: int = 2
 
 
 @dataclasses.dataclass
@@ -205,6 +283,11 @@ class ServingStats:
     queries: int = 0
     batches: int = 0
     errors: int = 0
+    shed: int = 0
+    deadline_exceeded: int = 0
+    circuit_open: int = 0
+    degraded: int = 0
+    fault_retries: int = 0
     delta_tuples: float = 0.0
     recompute_tuples: float = 0.0
     latencies_ms: List[float] = dataclasses.field(default_factory=list)
@@ -237,6 +320,11 @@ class ServingStats:
             "p50_ms": self.latency_percentile(50),
             "p99_ms": self.latency_percentile(99),
             "qps": self.queries / elapsed,
+            "shed": float(self.shed),
+            "deadline_exceeded": float(self.deadline_exceeded),
+            "circuit_open": float(self.circuit_open),
+            "degraded": float(self.degraded),
+            "fault_retries": float(self.fault_retries),
             "delta_tuples": self.delta_tuples,
             "recompute_tuples": self.recompute_tuples,
         }
@@ -263,13 +351,22 @@ class QueryRequest:
     join_order: Optional[Tuple[int, ...]] = None
     partitioning: Optional[ChainPartitioning] = None
     capacities: Optional[Sequence[Optional[int]]] = None
+    deadline_ms: Optional[float] = None
 
 
 @dataclasses.dataclass
 class ServeResult:
     """Per-request outcome.  ``ok`` is False for a poisoned request
     (input-prep error, rejected plan, or buffer overflow) — co-batched
-    requests are unaffected either way."""
+    requests are unaffected either way.
+
+    ``error_kind`` types the failure for clients: ``"shed"`` /
+    ``"deadline"`` / ``"circuit"`` / ``"fault"`` (admission control and
+    injected transport faults) or ``"error"`` (planning/input errors,
+    overflow).  ``degraded`` names a graceful degradation the answer
+    took (e.g. ``"stale_certificate"`` — the map-side certificate no
+    longer applies, so the request ran the shuffle cascade instead);
+    the answer itself is still exact."""
 
     ok: bool
     cache_hit: bool
@@ -279,6 +376,8 @@ class ServeResult:
     overflow: bool = False
     plan: Any = None
     error: Optional[str] = None
+    error_kind: Optional[str] = None
+    degraded: Optional[str] = None
 
 
 @dataclasses.dataclass
@@ -299,6 +398,7 @@ class CachedPlan:
     chain_exec: bool = False
     exec_opts: Dict[str, Any] = dataclasses.field(default_factory=dict)
     report: Any = None
+    degraded: Optional[str] = None
 
 
 def _pow2(n: int) -> int:
@@ -326,6 +426,12 @@ class QueryEngine:
         self._batched: "collections.OrderedDict[Any, Any]" = \
             collections.OrderedDict()
         self.stats = ServingStats()
+        # Admission-control state: consecutive build failures (circuit
+        # breaker), fast-failures since it opened (half-open probing),
+        # and the SLO probe counter (shed trickle).
+        self._breaker_failures = 0
+        self._breaker_fastfails = 0
+        self._slo_probe = 0
 
     # -- cache ------------------------------------------------------------
 
@@ -464,6 +570,17 @@ class QueryEngine:
         strategy = req.strategy or plan.strategy
         if strategy == "shares_skew":
             strategy = "cascade"
+        degraded = None
+        if (strategy == "mapside" and part.key_dtype is not None
+                and part.key_dtype != config.key_dtype_name()):
+            # Graceful degradation: the stored layout was partitioned
+            # under a different key dtype, so the co-partitioning
+            # certificate proves nothing here.  Instead of failing the
+            # request, serve it through the shuffle cascade (exact, just
+            # slower) and say so in the result.
+            strategy = "cascade"
+            degraded = "stale_certificate"
+            self.stats.degraded += 1
         n = query.n_relations
         suffix = "A" if query.aggregate is not None else ""
         opts: Dict[str, Any] = {"join_impl": self.cfg.join_impl}
@@ -508,7 +625,7 @@ class QueryEngine:
         return CachedPlan(plan=exec_plan, strategy=strategy,
                           grid_shape=grid_shape, join_order=None, caps=caps,
                           run=run, chain_exec=True, exec_opts=opts,
-                          report=report)
+                          report=report, degraded=degraded)
 
     def _resolve(self, req: QueryRequest) -> Tuple[Tuple, CachedPlan, bool]:
         stats = req.stats
@@ -522,10 +639,84 @@ class QueryEngine:
         entry = self._lookup(key)
         if entry is not None:
             return key, entry, True
-        entry = self._build_entry(dataclasses.replace(req, stats=stats),
-                                  stats)
+        if self._breaker_is_open():
+            raise CircuitOpen(
+                f"plan/compile circuit breaker open after "
+                f"{self._breaker_failures} consecutive build failures; "
+                f"cache misses fail fast (hits still serve)")
+        try:
+            entry = self._build_entry(dataclasses.replace(req, stats=stats),
+                                      stats)
+        except Exception:
+            self._breaker_failures += 1
+            raise
         self._insert(key, entry)
         return key, entry, False
+
+    def _breaker_is_open(self) -> bool:
+        """Consult (and advance) the plan/compile circuit breaker.
+        After ``breaker_cooldown`` fast-failures one half-open probe
+        build is let through — it closes the breaker on success and
+        reopens it on failure."""
+        if self._breaker_failures < self.cfg.breaker_threshold:
+            return False
+        self._breaker_fastfails += 1
+        if self._breaker_fastfails > self.cfg.breaker_cooldown:
+            self._breaker_fastfails = 0
+            return False                       # half-open probe
+        return True
+
+    def _should_shed(self) -> bool:
+        """Latency-SLO load shedding: shed when the trailing
+        ``shed_window`` executed-request latencies average over
+        ``slo_ms``, letting every ``shed_window``-th request through as
+        a probe so the window can recover."""
+        if self.cfg.slo_ms is None:
+            return False
+        window = self.stats.latencies_ms[-self.cfg.shed_window:]
+        if len(window) < self.cfg.shed_window:
+            return False
+        if float(np.mean(window)) <= self.cfg.slo_ms:
+            return False
+        self._slo_probe += 1
+        if self._slo_probe >= self.cfg.shed_window:
+            self._slo_probe = 0
+            return False                       # probe trickle
+        return True
+
+    def _admit(self, req: QueryRequest, t0: float,
+               deadline: Optional[float]) -> None:
+        """Offer the submit-site fault opportunity, retrying transient
+        faults within the deadline (a crashed/corrupted request in
+        transit is resubmitted, not failed)."""
+        retries = max(self.cfg.submit_retries, 0)
+        for attempt in range(retries + 1):
+            try:
+                _inject("submit", req)
+                return
+            except Exception as e:
+                if (deadline is not None
+                        and (time.perf_counter() - t0) * 1e3 > deadline):
+                    raise DeadlineExceeded(
+                        f"deadline {deadline:g} ms elapsed while retrying "
+                        f"a submit-site fault") from e
+                if attempt == retries:
+                    raise
+                self.stats.fault_retries += 1
+
+    def _reject(self, t0: float, kind: str, exc: BaseException) -> ServeResult:
+        dt = (time.perf_counter() - t0) * 1e3
+        self.stats.queries += 1
+        self.stats.errors += 1
+        if kind == "shed":
+            self.stats.shed += 1
+        elif kind == "deadline":
+            self.stats.deadline_exceeded += 1
+        elif kind == "circuit":
+            self.stats.circuit_open += 1
+        return ServeResult(ok=False, cache_hit=False, latency_ms=dt,
+                           error=f"{type(exc).__name__}: {exc}",
+                           error_kind=kind)
 
     # -- input preparation -------------------------------------------------
 
@@ -593,28 +784,75 @@ class QueryEngine:
         results: List[Optional[ServeResult]] = [None] * len(requests)
         groups: "collections.OrderedDict[Tuple, List]" = \
             collections.OrderedDict()
+        admitted = 0
         for i, req in enumerate(requests):
             t0 = time.perf_counter()
+            deadline = req.deadline_ms if req.deadline_ms is not None \
+                else self.cfg.deadline_ms
+            # Admission control: queue bound, then the latency SLO.
+            if (self.cfg.max_queue is not None
+                    and admitted >= self.cfg.max_queue):
+                results[i] = self._reject(t0, "shed", RequestShed(
+                    f"request queue full ({self.cfg.max_queue})"))
+                continue
+            if self._should_shed():
+                results[i] = self._reject(t0, "shed", RequestShed(
+                    f"over latency SLO ({self.cfg.slo_ms:g} ms)"))
+                continue
+            # Submit-site faults (retried within the deadline).
+            try:
+                self._admit(req, t0, deadline)
+            except DeadlineExceeded as e:
+                results[i] = self._reject(t0, "deadline", e)
+                continue
+            except Exception as e:  # noqa: BLE001 — typed fault surfaces
+                results[i] = self._reject(t0, "fault", e)
+                continue
             try:
                 key, entry, hit = self._resolve(req)
                 if prebuilt is not None and prebuilt[i] is not None:
-                    rels = tuple(prebuilt[i])
+                    rels = self._adapt_prebuilt(tuple(prebuilt[i]), entry)
                 else:
                     rels = self._prep_inputs(req, entry.grid_shape)
+            except CircuitOpen as e:
+                results[i] = self._reject(t0, "circuit", e)
+                continue
             except Exception as e:  # noqa: BLE001 — poisoned request
                 self.stats.errors += 1
                 self.stats.queries += 1
                 results[i] = ServeResult(
                     ok=False, cache_hit=False,
                     latency_ms=(time.perf_counter() - t0) * 1e3,
-                    error=f"{type(e).__name__}: {e}")
+                    error=f"{type(e).__name__}: {e}", error_kind="error")
                 continue
+            if (deadline is not None
+                    and (time.perf_counter() - t0) * 1e3 > deadline):
+                results[i] = self._reject(t0, "deadline", DeadlineExceeded(
+                    f"deadline {deadline:g} ms elapsed during planning"))
+                continue
+            admitted += 1
             gkey = (id(entry.run), self._shape_sig(rels))
-            groups.setdefault(gkey, []).append((i, hit, entry, rels, t0))
+            groups.setdefault(gkey, []).append(
+                (i, hit, entry, rels, t0, deadline, key))
 
         for members in groups.values():
             self._run_group(members, results)
         return results  # type: ignore[return-value]  # every slot is filled
+
+    def _adapt_prebuilt(self, rels: Tuple[Any, ...],
+                        entry: CachedPlan) -> Tuple[Any, ...]:
+        """Prebuilt inputs for a map-side plan are
+        :class:`~repro.core.partition.PartitionedRelation`; when the
+        entry degraded to a shuffle strategy they flatten back to plain
+        grid-scattered relations (exact same tuples, no certificate
+        needed)."""
+        if entry.strategy == "mapside":
+            return rels
+        from ..core.executor import scatter_to_grid
+        from ..core.partition import PartitionedRelation
+        return tuple(scatter_to_grid(r.to_flat(), entry.grid_shape)
+                     if isinstance(r, PartitionedRelation) else r
+                     for r in rels)
 
     def _batched_run(self, run: Callable) -> Callable:
         fn = self._batched.get(run)
@@ -628,12 +866,38 @@ class QueryEngine:
     def _run_group(self, members: List,
                    results: List[Optional[ServeResult]]) -> None:
         self.stats.batches += 1
+        try:
+            self._run_group_inner(members, results)
+        except Exception as e:  # noqa: BLE001 — trace/compile failure
+            # A failure at first trace is a compile failure: evict the
+            # poisoned entries, fail the group's lanes with a typed
+            # error, and feed the circuit breaker.
+            self._breaker_failures += 1
+            for (i, hit, entry, rels, t0, deadline, key) in members:
+                self._cache.pop(key, None)
+                self.stats.errors += 1
+                self.stats.queries += 1
+                results[i] = ServeResult(
+                    ok=False, cache_hit=hit,
+                    latency_ms=(time.perf_counter() - t0) * 1e3,
+                    plan=entry.plan, error=f"{type(e).__name__}: {e}",
+                    error_kind="error")
+
+    def _run_group_inner(self, members: List,
+                         results: List[Optional[ServeResult]]) -> None:
+        # A successful fresh build+trace closes the breaker; a served
+        # cache hit says nothing about build health and leaves it.
+        fresh = any(not m[1] for m in members)
         if len(members) == 1:
-            i, hit, entry, rels, t0 = members[0]
+            i, hit, entry, rels, t0, deadline, _key = members[0]
             out, st, ovf = entry.run(rels)
             jax.block_until_ready(out.valid)
+            if fresh:
+                self._breaker_failures = 0
+                self._breaker_fastfails = 0
             dt = (time.perf_counter() - t0) * 1e3
-            results[i] = self._lane_result(entry, out, st, ovf, hit, dt)
+            results[i] = self._lane_result(entry, out, st, ovf, hit, dt,
+                                           deadline)
             self.stats.queries += 1
             self.stats.latencies_ms.append(dt)
             return
@@ -643,17 +907,22 @@ class QueryEngine:
         t0 = min(m[4] for m in members)
         outs, sts, ovfs = batched(stacked)
         jax.block_until_ready(outs.valid)
+        if fresh:
+            self._breaker_failures = 0
+            self._breaker_fastfails = 0
         dt = (time.perf_counter() - t0) * 1e3
-        for lane, (i, hit, entry, rels, _) in enumerate(members):
+        for lane, (i, hit, entry, rels, _, deadline, _key) \
+                in enumerate(members):
             out = jax.tree.map(lambda x, lane=lane: x[lane], outs)
             st = {k: v[lane] for k, v in sts.items()}
             results[i] = self._lane_result(entry, out, st, ovfs[lane], hit,
-                                           dt)
+                                           dt, deadline)
             self.stats.queries += 1
             self.stats.latencies_ms.append(dt)
 
     def _lane_result(self, entry: CachedPlan, out: Relation, st: Dict,
-                     ovf: Any, hit: bool, dt: float) -> ServeResult:
+                     ovf: Any, hit: bool, dt: float,
+                     deadline: Optional[float] = None) -> ServeResult:
         overflow = bool(ovf)
         # scalar counters become floats; per-hop vectors (the map-side
         # cascade's hop_shuffled/hop_placed) become tuples of floats
@@ -666,7 +935,20 @@ class QueryEngine:
                                output=None, measured=measured, overflow=True,
                                plan=entry.plan,
                                error="overflow: a buffer capacity spilled — "
-                                     "resubmit with larger caps")
+                                     "resubmit with larger caps",
+                               error_kind="error")
+        if deadline is not None and dt > deadline:
+            # The answer exists but arrived late: a typed deadline
+            # error, never a late result the client already gave up on.
+            self.stats.errors += 1
+            self.stats.deadline_exceeded += 1
+            return ServeResult(ok=False, cache_hit=hit, latency_ms=dt,
+                               output=None, measured=measured,
+                               overflow=False, plan=entry.plan,
+                               error=f"DeadlineExceeded: deadline "
+                                     f"{deadline:g} ms, finished at "
+                                     f"{dt:.2f} ms",
+                               error_kind="deadline")
         return ServeResult(ok=True, cache_hit=hit, latency_ms=dt,
                            output=out, measured=measured, overflow=False,
-                           plan=entry.plan)
+                           plan=entry.plan, degraded=entry.degraded)

@@ -147,7 +147,11 @@ class ServingStore:
                  delta_capacity: int = 256):
         self.directory = directory
         os.makedirs(directory, exist_ok=True)
-        self.engine = engine or QueryEngine()
+        # NOT `engine or QueryEngine()`: QueryEngine.__len__ is the plan
+        # cache size, so a caller's fresh (empty-cache) engine is falsy
+        # and would be silently replaced by a private one — its stats
+        # and admission state would never see this store's traffic.
+        self.engine = engine if engine is not None else QueryEngine()
         self.num_partitions = int(num_partitions)
         self.drift_threshold = drift_threshold
         self.delta_capacity = int(delta_capacity)
@@ -195,6 +199,41 @@ class ServingStore:
         self.src = np.asarray(flat.cols["src"])[valid]
         self.dst = np.asarray(flat.cols["dst"])[valid]
         self._spec = prel.spec
+        # A crash mid-GC (or mid-commit) may have left orphaned version
+        # directories behind; the next open completes the sweep.
+        self._gc_orphans()
+
+    def _gc_orphans(self) -> None:
+        """Best-effort sweep of every superseded ``edges_v*`` directory
+        and stray temp debris.  Crash-safe by construction: only
+        non-current versions are touched, each orphan's manifest is
+        deleted FIRST (so a half-deleted orphan can never be mistaken
+        for a loadable relation), and any failure leaves the sweep for
+        the next commit or the next open — the committed state is never
+        at risk."""
+        current = f"edges_v{self.version}"
+        try:
+            names = os.listdir(self.directory)
+        except OSError:
+            return
+        for name in sorted(names):
+            path = os.path.join(self.directory, name)
+            try:
+                if name.endswith(".tmp"):
+                    if os.path.isdir(path):
+                        shutil.rmtree(path, ignore_errors=True)
+                    else:
+                        os.remove(path)
+                    continue
+                if (not name.startswith("edges_v") or name == current
+                        or not os.path.isdir(path)):
+                    continue
+                manifest = os.path.join(path, "manifest.json")
+                if os.path.exists(manifest):
+                    os.remove(manifest)      # tombstone: unloadable now
+                shutil.rmtree(path)
+            except OSError:  # pragma: no cover — finish next sweep
+                continue
 
     def _commit(self, src: np.ndarray, dst: np.ndarray,
                 aggregates: Dict[str, StandingAggregate]) -> None:
@@ -225,15 +264,18 @@ class ServingStore:
             "aggregates": {n: a.to_json() for n, a in aggregates.items()},
         }
         save_json_atomic(self.directory, META_NAME, meta)
-        # -- committed: mutate memory, then GC superseded versions
-        old = self.version
+        # -- committed: mutate memory, then GC superseded versions.
+        # The sweep is best-effort and crash-safe (_gc_orphans): a
+        # process killed mid-GC leaves the committed store loadable,
+        # and the next open or commit finishes the sweep.
         self.version = version
         self.src, self.dst = src, dst
         self.aggregates = aggregates
         self._spec = prel.spec
-        stale = os.path.join(self.directory, f"edges_v{old}")
-        if old and os.path.isdir(stale):
-            shutil.rmtree(stale, ignore_errors=True)
+        try:
+            self._gc_orphans()
+        except Exception:  # pragma: no cover — sweep later, never fail
+            pass
 
     # -- bulk load / registration ------------------------------------------
 
@@ -385,14 +427,31 @@ class ServingStore:
         delta_cap = max(self.delta_capacity, _pow2(n_delta))
         dv, moved = 0.0, 0.0
         read = shuffled = 0.0
-        for pattern, coef in delta_terms(agg.kind, agg.n):
-            tables = [delta if p else base for p in pattern]
-            caps = [delta_cap if p else base_cap for p in pattern]
-            res = self._submit(q, tables, caps)
-            dv += coef * weighted_total(q, res.output) / agg.divisor
-            moved += res.measured["total"]
-            read += res.measured["read"]
-            shuffled += res.measured["shuffled"]
+        try:
+            for pattern, coef in delta_terms(agg.kind, agg.n):
+                tables = [delta if p else base for p in pattern]
+                caps = [delta_cap if p else base_cap for p in pattern]
+                res = self._submit(q, tables, caps)
+                dv += coef * weighted_total(q, res.output) / agg.divisor
+                moved += res.measured["total"]
+                read += res.measured["read"]
+                shuffled += res.measured["shuffled"]
+        except IngestError:
+            # Graceful degradation: a failed delta term (shed request,
+            # injected fault, overflow) falls back to a full recompute
+            # at the new edges — the maintained value stays exact, the
+            # batch still applies, only the incremental saving is lost.
+            new_agg = self._refresh(agg, new_edges)
+            new_agg = dataclasses.replace(
+                new_agg, deltas_applied=agg.deltas_applied + 1)
+            spent = new_agg.delta_tuples - agg.delta_tuples
+            self.engine.stats.degraded += 1
+            self.engine.stats.delta_tuples += spent
+            self.engine.stats.recompute_tuples += spent
+            return new_agg, {"mode": "recompute_fallback",
+                             "value": new_agg.value,
+                             "read": 0.0, "shuffled": 0.0, "total": spent,
+                             "recompute_cost": recompute_cost}
         new_agg = dataclasses.replace(
             agg, value=agg.value + dv, drift_rows=drift,
             deltas_applied=agg.deltas_applied + 1,

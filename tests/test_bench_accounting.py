@@ -12,7 +12,11 @@ zeros on proven map-side hops — the zero-shuffle claim itself is under
 this gate), and ``BENCH_serving.json`` as pinned when the
 query-serving layer landed (cache hits replay the same compiled
 program, batching vmaps it — neither may move a different tuple
-count, and the delta-maintenance savings are part of the pin).
+count, and the delta-maintenance savings are part of the pin), and
+``BENCH_resilience.json`` as pinned when resilient execution landed
+(fault-free resilient runs are bit-identical to the plain executors,
+and seeded-injector recovery costs are deterministic — both claims
+live inside this gate).
 Regenerating those files must reproduce each field
 bit-identically: neither the join kernel nor the hypergraph surface
 decides which tuples move — only the physical plan does.
@@ -47,7 +51,8 @@ def extract_counts(obj, path=""):
 @pytest.mark.parametrize("bench", ["BENCH_nway.json", "BENCH_skew.json",
                                    "BENCH_triangles.json",
                                    "BENCH_mapside.json",
-                                   "BENCH_serving.json"])
+                                   "BENCH_serving.json",
+                                   "BENCH_resilience.json"])
 def test_accounting_bit_identical_to_seed(bench):
     path = REPO / bench
     if not path.exists():

@@ -1,5 +1,8 @@
 """Fault tolerance: checkpoint/restart must reproduce the uninterrupted
-run exactly (deterministic data pipeline + deterministic CPU compute)."""
+run exactly (deterministic data pipeline + deterministic CPU compute).
+The join engine holds itself to the same bar: a cascade killed mid-hop
+restarts from its materialized hop snapshots and finishes bit-identical
+(tests/test_resilience.py has the full chaos matrix)."""
 
 import os
 
@@ -9,10 +12,16 @@ import pytest
 import jax
 import jax.numpy as jnp
 
-from repro.checkpoint import CheckpointManager, latest_step, restore, save
+from repro.checkpoint import (CheckpointManager, latest_hop, latest_step,
+                              load_hop, restore, save)
 from repro.configs import get_config
+from repro.core import (JoinQuery, SimGrid, default_query_caps,
+                        query_stats_exact, query_table_inputs)
+from repro.core.executor import cascade_query
 from repro.data.tokens import DataConfig, shard_batch
 from repro.models.lm import build_model
+from repro.resilience import (FaultInjector, FaultSpec, HopFailed,
+                              resilient_cascade_query)
 from repro.train.loop import TrainConfig, Trainer
 
 
@@ -114,6 +123,53 @@ class TestRestartExactness:
         out = tr.run(resume=False)
         assert out["preempted"] is True
         assert latest_step(cfg.checkpoint_dir) is not None
+
+
+class TestJoinHopCheckpoints:
+    """The training-checkpoint discipline applied to cascade hops: a
+    killed join resumes from its newest intact hop snapshot and ends
+    bit-identical to the uninterrupted run."""
+
+    def _workload(self, k=4):
+        query = JoinQuery.chain(4)
+        rng = np.random.default_rng(11)
+        tables = [(rng.integers(0, 20, 40).astype(np.int32),
+                   rng.integers(0, 20, 40).astype(np.int32))
+                  for _ in range(4)]
+        stats = query_stats_exact(query, tables)
+        rels = query_table_inputs(query, tables, (k,))
+        caps = default_query_caps(query, stats, (k,), slack=8)
+        return SimGrid((k,)), query, rels, caps
+
+    def test_killed_cascade_resumes_bitwise(self, tmp_path):
+        grid, query, rels, caps = self._workload()
+        base = cascade_query(grid, query, rels, caps=caps,
+                             join_order=(0, 1, 2, 3))
+        snap = str(tmp_path / "hops")
+
+        # The "killed node": hop_2 crashes on every attempt (its first
+        # shuffle is call #5: hops 0/1 each place left+right then the
+        # intermediate), after hops 0 and 1 already snapshotted.
+        with FaultInjector([FaultSpec("shuffle", "crash", 1.0,
+                                      skip_first=5)], seed=3):
+            with pytest.raises(HopFailed) as ei:
+                resilient_cascade_query(grid, query, rels, caps=caps,
+                                        join_order=(0, 1, 2, 3),
+                                        snapshot_dir=snap)
+        assert ei.value.where == "hop_2"
+        assert latest_hop(snap) == 1           # lineage survived the kill
+        rel1, extra = load_hop(snap, 1)        # and is itself restorable
+        assert extra["hop"] == 1
+
+        # The restarted process: resumes at hop 2, no recomputation of
+        # hops 0/1, output bit-identical to the uninterrupted run.
+        out, st, ovf, rep = resilient_cascade_query(
+            grid, query, rels, caps=caps, join_order=(0, 1, 2, 3),
+            snapshot_dir=snap)
+        assert rep.resumed_from == 1 and rep.retries == 0
+        for a, b in zip(jax.tree.leaves(base[0]), jax.tree.leaves(out)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        assert base[1] == st and bool(base[2]) == bool(ovf)
 
 
 class TestTrainingLearns:

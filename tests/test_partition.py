@@ -82,7 +82,8 @@ class TestPartitionLayout:
         pr, ovf = partition_relation(rel, "a", 8, salt=2)
         assert not bool(ovf)
         assert pr.num_partitions == 8 and pr.part_capacity == rel.capacity
-        assert pr.spec == PartitionSpec(key="a", num_partitions=8, salt=2)
+        assert pr.spec == PartitionSpec(key="a", num_partitions=8, salt=2,
+                                        key_dtype="int32")
         for p in range(8):
             valid = np.asarray(pr.parts.valid[p])
             keys = np.asarray(pr.parts.cols["a"][p])[valid]
@@ -159,7 +160,8 @@ class TestPartitionedStore:
                                    salt=1)
         save_partitioned(str(tmp_path), "edges", pr)
         spec = load_partition_spec(str(tmp_path), "edges")
-        assert spec == PartitionSpec(key="b", num_partitions=4, salt=1)
+        assert spec == PartitionSpec(key="b", num_partitions=4, salt=1,
+                                     key_dtype="int32")
         assert load_partition_spec(str(tmp_path), "absent") is None
 
     def test_corruption_detected(self, tmp_path):

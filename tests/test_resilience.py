@@ -1,0 +1,624 @@
+"""Seeded chaos suite: resilient execution under deterministic faults.
+
+The invariant every test here pins (docs/resilience.md): a faulted run
+returns the fault-free answer **bit-identically** or dies with a typed
+error — never a silently wrong answer.  ``CHAOS_SEED`` (env) rotates
+the injector seed across CI matrix entries without touching the code.
+
+  R1  injector determinism, tracer-safety, kill-switch semantics
+  R2  torn/corrupt checkpoints are skipped, never resumed from
+  R3  cascade recovery — in-memory hop retry, snapshot resume after a
+      killed process, corrupt-snapshot quarantine (all bitwise)
+  R4  one-round recovery — failed reducer buckets re-run alone and
+      splice bitwise; placement retries
+  R5  partition reads — CRC-caught corruption retried, exhaustion
+      quarantines; the semantic layout audit above the CRCs
+  R6  serving admission control — queue shedding, deadlines, SLO
+      shedding, the plan/compile circuit breaker, submit-fault retry
+  R7  graceful degradation — stale map-side certificate serves the
+      exact answer via the shuffle cascade; delta-maintenance failure
+      falls back to recompute; permanent failure leaves the store
+      unchanged; GC killed mid-delete is completed by the next open
+  R8  the chaos matrix — {crash, delay, corrupt} × {shuffle,
+      partition_read, submit}: exact equality or typed error, always
+"""
+
+import dataclasses
+import os
+import shutil
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import (DataCorrupt, latest_hop, latest_step, save,
+                              save_hop, save_partitioned)
+from repro.core import (ChainQuery, JoinQuery, SimGrid, chain_partitioning,
+                        chain_stats_exact, default_query_caps, edge_relation,
+                        integer_shares_query, oracle_triangles,
+                        partition_relation, query_stats_exact,
+                        query_table_inputs, verify_partition_layout)
+from repro.core.executor import cascade_query, one_round_query
+from repro.resilience import (FaultInjector, FaultSpec, HopFailed,
+                              InjectedCrash, RecoveryPolicy,
+                              resilient_cascade_query,
+                              resilient_load_partitioned,
+                              resilient_one_round_query)
+from repro.resilience import faults as faults_mod
+from repro.serving import (QueryEngine, QueryRequest, QueryServeConfig,
+                           ServingStore)
+
+#: CI chaos matrix rotates this without code changes.
+CHAOS_SEED = int(os.environ.get("CHAOS_SEED", "0"))
+
+K = 4
+M_EDGES = 48
+N_NODES = 24
+
+
+def _tables(seed=5, m=M_EDGES, nodes=N_NODES, n=3):
+    rng = np.random.default_rng(seed)
+    return [(rng.integers(0, nodes, m).astype(np.int32),
+             rng.integers(0, nodes, m).astype(np.int32))
+            for _ in range(n)]
+
+
+def _rot_hop_npz(path):
+    """Corrupt one array inside a hop snapshot's npz.  Rewriting a
+    mutated array (rather than flipping a raw byte, which can land in
+    inert zip padding) guarantees a manifest-CRC mismatch."""
+    npz = os.path.join(path, "arrays.npz")
+    with np.load(npz) as data:
+        arrays = {k: np.array(data[k]) for k in data.files}
+    k = sorted(arrays)[0]
+    flat = arrays[k].reshape(-1)
+    flat[0] = ~flat[0] if flat.dtype != np.bool_ else ~flat[0]
+    np.savez(npz, **arrays)
+
+
+def trees_equal(a, b):
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    return len(la) == len(lb) and all(
+        x.shape == y.shape and x.dtype == y.dtype
+        and bool(jnp.all(x == y)) for x, y in zip(la, lb))
+
+
+@pytest.fixture(scope="module")
+def chain3():
+    """The 3-chain workload in both physical configurations, with the
+    plain executors' fault-free results as the bitwise baselines."""
+    query = JoinQuery.chain(3)
+    tables = _tables()
+    stats = query_stats_exact(query, tables)
+    or_shape = integer_shares_query(query.rel_dims(), stats.sizes, K)
+    c_shape = (K,)
+    w = {
+        "query": query,
+        "or_grid": SimGrid(or_shape),
+        "c_grid": SimGrid(c_shape),
+        "or_rels": query_table_inputs(query, tables, or_shape),
+        "c_rels": query_table_inputs(query, tables, c_shape),
+        "or_caps": default_query_caps(query, stats, or_shape, slack=8),
+        "c_caps": default_query_caps(query, stats, c_shape, slack=8),
+    }
+    w["base_or"] = one_round_query(w["or_grid"], query, w["or_rels"],
+                                   caps=w["or_caps"], join_order=(0, 1, 2))
+    w["base_c"] = cascade_query(w["c_grid"], query, w["c_rels"],
+                                caps=w["c_caps"], join_order=(0, 1, 2))
+    return w
+
+
+def run_cascade(w, snapshot_dir=None, policy=None):
+    return resilient_cascade_query(
+        w["c_grid"], w["query"], w["c_rels"], caps=w["c_caps"],
+        join_order=(0, 1, 2), snapshot_dir=snapshot_dir, policy=policy)
+
+
+def run_one_round(w, policy=None):
+    return resilient_one_round_query(
+        w["or_grid"], w["query"], w["or_rels"], caps=w["or_caps"],
+        join_order=(0, 1, 2), policy=policy)
+
+
+def assert_matches(base, got):
+    out_b, st_b, ovf_b = base
+    out_g, st_g, ovf_g, rep = got
+    assert trees_equal(out_b, out_g), "output diverged from fault-free run"
+    assert trees_equal(st_b, st_g), "stats diverged from fault-free run"
+    assert bool(ovf_b) == bool(ovf_g)
+    return rep
+
+
+# ---------------------------------------------------------------------------
+# R1 — the injector itself
+# ---------------------------------------------------------------------------
+
+class TestInjector:
+    def test_same_seed_same_faults(self):
+        specs = [FaultSpec("shuffle", "crash", 0.5),
+                 FaultSpec("shuffle", "delay", 0.3, delay_ms=0.0)]
+
+        def drive(inj):
+            log = []
+            for _ in range(64):
+                try:
+                    inj("shuffle", None)
+                    log.append("ok")
+                except InjectedCrash:
+                    log.append("crash")
+            return log, dict(inj.fired)
+
+        log_a, fired_a = drive(FaultInjector(specs, seed=CHAOS_SEED))
+        log_b, fired_b = drive(FaultInjector(specs, seed=CHAOS_SEED))
+        assert log_a == log_b and fired_a == fired_b
+        assert fired_a[("shuffle", "crash")] > 0
+        log_c, _ = drive(FaultInjector(specs, seed=CHAOS_SEED + 1))
+        assert log_c != log_a, "different seed must replay differently"
+
+    def test_tracer_calls_never_fire_or_consume_rng(self):
+        inj = FaultInjector([FaultSpec("shuffle", "crash", 1.0)], seed=0)
+
+        @jax.jit
+        def f(x):
+            return inj("shuffle", x) + 1
+
+        assert int(f(jnp.zeros(()))) == 1          # traced: no fault baked in
+        assert inj.observed["shuffle"] == 0        # and no RNG consumed
+        with pytest.raises(InjectedCrash):
+            inj("shuffle", np.zeros(2))            # eager: fires
+
+    def test_kill_switch_and_arming_delay(self):
+        inj = FaultInjector([FaultSpec("shuffle", "crash", 1.0,
+                                       max_fires=1, skip_first=2)], seed=0)
+        outcomes = []
+        for _ in range(5):
+            try:
+                inj("shuffle", None)
+                outcomes.append("ok")
+            except InjectedCrash:
+                outcomes.append("crash")
+        assert outcomes == ["ok", "ok", "crash", "ok", "ok"]
+
+    def test_install_restores_clean_hooks(self):
+        from repro.checkpoint import store as ckpt_store
+        from repro.core import shuffle as shuffle_mod
+        from repro.serving import engine as engine_mod
+        inj = FaultInjector([], seed=0)
+        with inj:
+            assert shuffle_mod._fault_hook is inj
+            assert ckpt_store._fault_hook is inj
+            assert engine_mod._fault_hook is inj
+            assert faults_mod.active_injector() is inj
+        assert shuffle_mod._fault_hook is None
+        assert ckpt_store._fault_hook is None
+        assert engine_mod._fault_hook is None
+        assert faults_mod.active_injector() is None
+
+    def test_corruption_is_always_detected(self):
+        inj = FaultInjector([FaultSpec("partition_read", "corrupt", 1.0)],
+                            seed=0)
+        a = np.arange(8, dtype=np.int32)
+        damaged = inj("partition_read", a)
+        assert damaged.shape == a.shape and not np.array_equal(damaged, a)
+        # payloads without caller-side CRCs surface as DataCorrupt
+        inj2 = FaultInjector([FaultSpec("submit", "corrupt", 1.0)], seed=0)
+        with pytest.raises(DataCorrupt):
+            inj2("submit", object())
+
+    def test_spec_validation(self):
+        with pytest.raises(ValueError):
+            FaultSpec("nowhere", "crash", 0.5)
+        with pytest.raises(ValueError):
+            FaultSpec("shuffle", "explode", 0.5)
+        with pytest.raises(ValueError):
+            FaultSpec("shuffle", "crash", 1.5)
+        with pytest.raises(ValueError):
+            FaultSpec("shuffle", "crash", 0.5, skip_first=-1)
+
+
+# ---------------------------------------------------------------------------
+# R2 — torn checkpoints are skipped
+# ---------------------------------------------------------------------------
+
+class TestTornCheckpoints:
+    def test_latest_step_skips_torn(self, tmp_path):
+        tree = {"a": jnp.arange(4, dtype=jnp.float32)}
+        save(str(tmp_path), 0, tree)
+        path1 = save(str(tmp_path), 1, tree)
+        npz = os.path.join(path1, "arrays.npz")
+        raw = bytearray(open(npz, "rb").read())
+        raw[-5] ^= 0xFF
+        open(npz, "wb").write(bytes(raw))
+        assert latest_step(str(tmp_path)) == 0     # torn step 1 skipped
+        os.remove(npz)
+        assert latest_step(str(tmp_path)) == 0     # half-written: skipped too
+        assert latest_step(str(tmp_path), verify=False) == 0
+
+    def test_latest_hop_skips_torn(self, tmp_path, chain3):
+        rel = chain3["c_rels"][0]
+        save_hop(str(tmp_path), 0, rel, {"hop": 0})
+        path1 = save_hop(str(tmp_path), 1, rel, {"hop": 1})
+        _rot_hop_npz(path1)
+        assert latest_hop(str(tmp_path)) == 0
+
+
+# ---------------------------------------------------------------------------
+# R3 — cascade recovery
+# ---------------------------------------------------------------------------
+
+class TestCascadeRecovery:
+    def test_fault_free_bitwise_identical(self, chain3):
+        rep = assert_matches(chain3["base_c"], run_cascade(chain3))
+        assert rep.retries == 0 and rep.resumed_from is None
+
+    def test_crash_storm_recovers_bitwise(self, chain3):
+        with FaultInjector([FaultSpec("shuffle", "crash", 0.3)],
+                           seed=CHAOS_SEED) as inj:
+            got = run_cascade(chain3)
+        rep = assert_matches(chain3["base_c"], got)
+        if inj.fired[("shuffle", "crash")]:
+            assert rep.retries == inj.fired[("shuffle", "crash")]
+            assert rep.recovery_total > 0
+
+    def test_killed_process_resumes_from_snapshot(self, chain3, tmp_path):
+        snap = str(tmp_path / "hops")
+        # Arm after hop_0's two shuffle opportunities: hop_1 dies every
+        # attempt, but hop_0's snapshot survives the "process".
+        with FaultInjector([FaultSpec("shuffle", "crash", 1.0,
+                                      skip_first=2)], seed=CHAOS_SEED):
+            with pytest.raises(HopFailed) as ei:
+                run_cascade(chain3, snapshot_dir=snap)
+        assert ei.value.where == "hop_1"
+        assert latest_hop(snap) == 0               # the materialized lineage
+
+        got = run_cascade(chain3, snapshot_dir=snap)   # the restarted process
+        rep = assert_matches(chain3["base_c"], got)
+        assert rep.resumed_from == 0 and rep.retries == 0
+
+    def test_corrupt_snapshot_quarantined(self, chain3, tmp_path):
+        snap = str(tmp_path / "hops")
+        out, st, ovf, rep = run_cascade(chain3, snapshot_dir=snap)
+        assert rep.snapshots_written == 1
+        _rot_hop_npz(os.path.join(snap, "step_0"))
+
+        got = run_cascade(chain3, snapshot_dir=snap)
+        rep2 = assert_matches(chain3["base_c"], got)
+        assert rep2.resumed_from is None           # never resumed from rot
+        assert any("step_0" in q for q in rep2.quarantined)
+
+    def test_retry_budget_exhaustion_is_typed(self, chain3):
+        policy = RecoveryPolicy(max_attempts=2, backoff_base_ms=0.0)
+        with FaultInjector([FaultSpec("shuffle", "crash", 1.0)],
+                           seed=CHAOS_SEED):
+            with pytest.raises(HopFailed) as ei:
+                run_cascade(chain3, policy=policy)
+        assert ei.value.attempts == 2
+        assert isinstance(ei.value.last, InjectedCrash)
+
+
+# ---------------------------------------------------------------------------
+# R4 — one-round recovery
+# ---------------------------------------------------------------------------
+
+class TestOneRoundRecovery:
+    def test_fault_free_bitwise_identical(self, chain3):
+        rep = assert_matches(chain3["base_or"], run_one_round(chain3))
+        assert rep.retries == 0 and rep.failed_reducers == 0
+
+    def test_failed_reducers_splice_bitwise(self, chain3):
+        with FaultInjector([FaultSpec("reducer", "crash", 0.3)],
+                           seed=CHAOS_SEED) as inj:
+            got = run_one_round(chain3)
+        rep = assert_matches(chain3["base_or"], got)
+        assert rep.failed_reducers == inj.fired[("reducer", "crash")]
+        if rep.failed_reducers:
+            assert rep.recovery_read > 0           # re-read resident shards
+
+    def test_placement_crash_retried(self, chain3):
+        with FaultInjector([FaultSpec("shuffle", "crash", 1.0,
+                                      max_fires=1)], seed=CHAOS_SEED) as inj:
+            got = run_one_round(chain3)
+        rep = assert_matches(chain3["base_or"], got)
+        assert inj.fired[("shuffle", "crash")] == 1
+        assert rep.retries == 1
+
+
+# ---------------------------------------------------------------------------
+# R5 — partition reads
+# ---------------------------------------------------------------------------
+
+class TestPartitionRead:
+    @pytest.fixture()
+    def stored(self, tmp_path):
+        rng = np.random.default_rng(3)
+        rel = edge_relation(rng.integers(0, 30, 64).astype(np.int32),
+                            rng.integers(0, 30, 64).astype(np.int32))
+        prel, _ = partition_relation(rel, "a", K, salt=1)
+        save_partitioned(str(tmp_path), "edges", prel)
+        return str(tmp_path), prel
+
+    def test_corrupt_read_retried_bitwise(self, stored):
+        d, prel = stored
+        with FaultInjector([FaultSpec("partition_read", "corrupt", 1.0,
+                                      max_fires=2)], seed=CHAOS_SEED) as inj:
+            got = resilient_load_partitioned(d, "edges")
+        assert inj.fired[("partition_read", "corrupt")] == 2
+        assert trees_equal(got.parts, prel.parts)
+
+    def test_exhaustion_quarantines(self, stored):
+        d, _ = stored
+        from repro.resilience.recovery import RecoveryReport
+        report = RecoveryReport(strategy="partition_read")
+        policy = RecoveryPolicy(max_attempts=2, backoff_base_ms=0.0)
+        with FaultInjector([FaultSpec("partition_read", "crash", 1.0)],
+                           seed=CHAOS_SEED):
+            with pytest.raises(HopFailed):
+                resilient_load_partitioned(d, "edges", policy=policy,
+                                           report=report)
+        assert report.quarantined == [os.path.join(d, "edges")]
+
+    def test_layout_audit_above_crcs(self, stored):
+        _, prel = stored
+        assert verify_partition_layout(prel)
+        # same bytes, wrong claim: a foreign salt proves nothing
+        lying = dataclasses.replace(
+            prel, spec=dataclasses.replace(prel.spec, salt=7))
+        assert not verify_partition_layout(lying)
+
+
+# ---------------------------------------------------------------------------
+# R6 — serving admission control
+# ---------------------------------------------------------------------------
+
+def _req(seed=7):
+    q = JoinQuery.triangle()
+    rng = np.random.default_rng(seed)
+    e = (rng.integers(0, 12, 40), rng.integers(0, 12, 40))
+    tables = [e] * 3
+    return QueryRequest(q, tables, stats=query_stats_exact(q, tables))
+
+
+class TestAdmissionControl:
+    def test_queue_bound_sheds_typed(self):
+        eng = QueryEngine(QueryServeConfig(k=K, max_queue=1))
+        res = eng.submit_many([_req(1), _req(1), _req(1)])
+        assert res[0].ok
+        assert [r.error_kind for r in res[1:]] == ["shed", "shed"]
+        assert eng.stats.shed == 2 and all(r.output is None for r in res[1:])
+
+    def test_deadline_is_typed_never_late(self):
+        eng = QueryEngine(QueryServeConfig(k=K))
+        res = eng.submit_many([dataclasses.replace(_req(2),
+                                                   deadline_ms=1e-6)])[0]
+        assert not res.ok and res.error_kind == "deadline"
+        assert res.output is None
+        assert eng.stats.deadline_exceeded == 1
+
+    def test_slo_shedding_with_probe_trickle(self):
+        eng = QueryEngine(QueryServeConfig(k=K, slo_ms=1e-3, shed_window=4))
+        for s in range(4):                 # fill the latency window
+            assert eng.submit_many([_req(10 + s)])[0].ok
+        res = eng.submit_many([_req(20 + i) for i in range(4)])
+        kinds = [r.error_kind for r in res]
+        assert kinds.count("shed") == 3 and kinds.count(None) == 1
+        assert res[-1].ok                  # the shed_window-th probe lands
+
+    def test_submit_fault_retried_within_budget(self):
+        eng = QueryEngine(QueryServeConfig(k=K, submit_retries=2))
+        with FaultInjector([FaultSpec("submit", "crash", 1.0, max_fires=2)],
+                           seed=CHAOS_SEED):
+            res = eng.submit_many([_req(3)])[0]
+        assert res.ok and eng.stats.fault_retries == 2
+
+    def test_submit_fault_exhaustion_is_typed(self):
+        eng = QueryEngine(QueryServeConfig(k=K, submit_retries=1))
+        with FaultInjector([FaultSpec("submit", "corrupt", 1.0)],
+                           seed=CHAOS_SEED):
+            res = eng.submit_many([_req(4)])[0]
+        assert not res.ok and res.error_kind == "fault"
+
+
+class TestCircuitBreaker:
+    def _bad_req(self):
+        # ChainStats without a certificate: _build_entry raises, every
+        # distinct seed is a fresh cache miss.
+        self._seed = getattr(self, "_seed", 100) + 1
+        q = JoinQuery.triangle()
+        rng = np.random.default_rng(self._seed)
+        e = (rng.integers(0, 12, 40), rng.integers(0, 12, 40))
+        return QueryRequest(q, [e] * 3,
+                            stats=chain_stats_exact([e] * 3))
+
+    def test_opens_after_threshold_hits_still_serve(self):
+        eng = QueryEngine(QueryServeConfig(k=K, breaker_threshold=2,
+                                           breaker_cooldown=3))
+        good = _req(5)
+        assert eng.submit_many([good])[0].ok          # primed entry
+        for _ in range(2):
+            r = eng.submit_many([self._bad_req()])[0]
+            assert not r.ok and r.error_kind == "error"
+        # breaker open: fresh misses fail fast as typed CircuitOpen
+        r = eng.submit_many([_req(6)])[0]
+        assert not r.ok and r.error_kind == "circuit"
+        assert eng.stats.circuit_open == 1
+        # ... but cache hits still serve
+        hit = eng.submit_many([good])[0]
+        assert hit.ok and hit.cache_hit
+
+    def test_half_open_probe_closes_on_success(self):
+        eng = QueryEngine(QueryServeConfig(k=K, breaker_threshold=1,
+                                           breaker_cooldown=2))
+        assert not eng.submit_many([self._bad_req()])[0].ok
+        kinds = [eng.submit_many([_req(30 + i)])[0].error_kind
+                 for i in range(2)]
+        assert kinds == ["circuit", "circuit"]        # cooldown fast-fails
+        probe = eng.submit_many([_req(40)])[0]        # half-open probe
+        assert probe.ok
+        assert eng.submit_many([_req(41)])[0].ok      # breaker closed
+
+
+# ---------------------------------------------------------------------------
+# R7 — graceful degradation
+# ---------------------------------------------------------------------------
+
+def _partitioned_chain(seed, P=K, salt=1):
+    cq = ChainQuery.chain(3)
+    rng = np.random.default_rng(seed)
+    edges = [(rng.integers(0, 16, 50).astype(np.int32),
+              rng.integers(0, 16, 50).astype(np.int32)) for _ in range(3)]
+    prels, specs = [], []
+    for j, (s, d) in enumerate(edges):
+        key = cq.attrs[1] if j == 0 else cq.attrs[j]
+        rel = edge_relation(s, d, names=cq.schema(j))
+        prel, _ = partition_relation(rel, key, P, salt=salt)
+        prels.append(prel)
+        specs.append(prel.spec)
+    return cq, edges, chain_stats_exact(edges), prels, specs
+
+
+class TestDegradation:
+    def test_stale_certificate_serves_exact_via_cascade(self):
+        cq, edges, cstats, prels, specs = _partitioned_chain(8)
+        cert = chain_partitioning(cq, specs)
+        eng = QueryEngine(QueryServeConfig(k=K))
+
+        fresh = eng.submit(cq, rels=prels, stats=cstats, strategy="mapside",
+                           partitioning=cert)
+        assert fresh.ok and fresh.degraded is None
+        assert fresh.plan.strategy == "mapside"
+
+        # The same stored layout under a certificate minted by another
+        # key-dtype configuration: proves nothing here, so the engine
+        # degrades to the shuffle cascade instead of failing.
+        stale = dataclasses.replace(cert, key_dtype="int64")
+        res = eng.submit(cq, rels=prels, stats=cstats, strategy="mapside",
+                         partitioning=stale)
+        assert res.ok and res.degraded == "stale_certificate"
+        assert res.plan.strategy == "cascade"
+        assert eng.stats.degraded == 1
+        n_fresh = float(jnp.sum(fresh.output.valid))
+        n_stale = float(jnp.sum(res.output.valid))
+        assert n_fresh == n_stale                  # exact, just slower
+
+    def test_delta_failure_falls_back_to_recompute(self, tmp_path):
+        eng = QueryEngine(QueryServeConfig(k=K))
+        rng = np.random.default_rng(9)
+        seen = set()
+        while len(seen) < 40:
+            seen.add((int(rng.integers(0, 12)), int(rng.integers(0, 12))))
+        arr = np.array(sorted(seen))
+        store = ServingStore(str(tmp_path), eng, num_partitions=K,
+                             drift_threshold=None, delta_capacity=16)
+        store.register_aggregate("tri", "cycle", 3)
+        store.load_edges(arr[:, 0], arr[:, 1])
+
+        ins = np.array([[0, 1], [2, 3], [4, 5]])
+        # submit_retries=2 => 3 attempts; exactly the first delta-term
+        # submit exhausts, the recompute fallback's own submits succeed
+        with FaultInjector([FaultSpec("submit", "corrupt", 1.0,
+                                      max_fires=3)], seed=CHAOS_SEED):
+            rep = store.apply_deltas(inserts=(ins[:, 0], ins[:, 1]))
+        a = rep["aggregates"]["tri"]
+        assert a["mode"] == "recompute_fallback"
+        want = float(oracle_triangles(store.src, store.dst))
+        assert store.aggregates["tri"].value == pytest.approx(want,
+                                                              rel=1e-9)
+        assert eng.stats.degraded == 1
+
+    def test_permanent_failure_leaves_store_unchanged(self, tmp_path):
+        from repro.serving import IngestError
+        eng = QueryEngine(QueryServeConfig(k=K))
+        rng = np.random.default_rng(9)
+        src = rng.integers(0, 12, 40)
+        dst = rng.integers(0, 12, 40)
+        store = ServingStore(str(tmp_path), eng, num_partitions=K,
+                             drift_threshold=None, delta_capacity=16)
+        store.register_aggregate("tri", "cycle", 3)
+        store.load_edges(src, dst)
+        v0, val0 = store.version, store.aggregates["tri"].value
+
+        with FaultInjector([FaultSpec("submit", "corrupt", 1.0)],
+                           seed=CHAOS_SEED):
+            with pytest.raises(IngestError):
+                store.apply_deltas(inserts=(np.array([0]), np.array([1])))
+        assert store.version == v0
+        assert store.aggregates["tri"].value == val0
+
+    def test_gc_killed_mid_delete_completed_on_next_open(self, tmp_path,
+                                                         monkeypatch):
+        eng = QueryEngine(QueryServeConfig(k=K))
+        rng = np.random.default_rng(9)
+        store = ServingStore(str(tmp_path), eng, num_partitions=K,
+                             drift_threshold=None, delta_capacity=16)
+        store.load_edges(rng.integers(0, 12, 40), rng.integers(0, 12, 40))
+        assert store.version == 1
+
+        # Kill the sweep between the manifest tombstone and the rmtree.
+        import repro.serving.store as store_mod
+
+        def boom(path, **kw):
+            raise OSError("killed mid-delete")
+
+        monkeypatch.setattr(store_mod.shutil, "rmtree", boom)
+        store.apply_deltas(inserts=(np.array([0]), np.array([1])))
+        monkeypatch.undo()
+        assert store.version == 2
+        orphan = tmp_path / "edges_v1"
+        assert orphan.is_dir()                       # dir survived the kill
+        assert not (orphan / "manifest.json").exists()   # but is tombstoned
+
+        # Next open restores the current version AND completes the sweep.
+        store2 = ServingStore(str(tmp_path), eng, num_partitions=K,
+                              drift_threshold=None, delta_capacity=16)
+        assert store2.version == 2 and store2.n_edges == store.n_edges
+        assert not orphan.exists()
+
+
+# ---------------------------------------------------------------------------
+# R8 — the chaos matrix
+# ---------------------------------------------------------------------------
+
+class TestChaosMatrix:
+    """Exact equality or typed error, across every (kind, site) cell."""
+
+    @pytest.mark.parametrize("kind", ["crash", "delay", "corrupt"])
+    def test_shuffle_site(self, chain3, kind):
+        spec = FaultSpec("shuffle", kind, 0.3, delay_ms=0.1)
+        try:
+            with FaultInjector([spec], seed=CHAOS_SEED):
+                got = run_cascade(chain3)
+        except HopFailed:
+            return                                   # typed, never wrong
+        assert_matches(chain3["base_c"], got)
+
+    @pytest.mark.parametrize("kind", ["crash", "delay", "corrupt"])
+    def test_partition_read_site(self, tmp_path, kind):
+        rng = np.random.default_rng(3)
+        rel = edge_relation(rng.integers(0, 30, 64).astype(np.int32),
+                            rng.integers(0, 30, 64).astype(np.int32))
+        prel, _ = partition_relation(rel, "a", K, salt=1)
+        save_partitioned(str(tmp_path), "edges", prel)
+        spec = FaultSpec("partition_read", kind, 0.5, delay_ms=0.1)
+        try:
+            with FaultInjector([spec], seed=CHAOS_SEED):
+                got = resilient_load_partitioned(str(tmp_path), "edges")
+        except HopFailed:
+            return
+        assert trees_equal(got.parts, prel.parts)
+
+    @pytest.mark.parametrize("kind", ["crash", "delay", "corrupt"])
+    def test_submit_site(self, kind):
+        eng = QueryEngine(QueryServeConfig(k=K, submit_retries=2))
+        base = QueryEngine(QueryServeConfig(k=K)).submit_many([_req(50)])[0]
+        assert base.ok
+        spec = FaultSpec("submit", kind, 0.5, delay_ms=0.1)
+        with FaultInjector([spec], seed=CHAOS_SEED):
+            res = eng.submit_many([_req(50)])[0]
+        if res.ok:
+            assert trees_equal(res.output, base.output)
+            assert res.measured == base.measured
+        else:
+            assert res.error_kind in ("fault", "deadline")
+            assert res.output is None

@@ -63,7 +63,7 @@ def partitioned_store(query, edges, P=4):
 # ---------------------------------------------------------------------------
 
 def test_bench_corpus_certifies_zero_errors():
-    """Every plan behind the five BENCH_*.json sweeps passes the plan
+    """Every plan behind the BENCH_*.json sweeps passes the plan
     checker with zero error findings (warnings allowed — they are
     headroom advisories, not soundness defects)."""
     reports = verify_bench_targets()
@@ -77,7 +77,7 @@ def test_bench_corpus_certifies_zero_errors():
 def test_bench_target_names_cover_all_sweeps():
     names = {t.name.split("/")[0] for t in all_bench_targets()}
     assert names == {"nway", "skew", "triangles", "mapside",
-                     "join_kernels", "serving"}
+                     "join_kernels", "serving", "resilience"}
 
 
 # ---------------------------------------------------------------------------
