@@ -50,7 +50,8 @@ def check_links() -> int:
     return failures
 
 
-EXECUTABLE_DOCS = ("README.md", "docs/serving.md", "docs/resilience.md")
+EXECUTABLE_DOCS = ("README.md", "docs/serving.md", "docs/resilience.md",
+                   "docs/overlap.md")
 
 
 def run_doc_snippets(relpath: str) -> int:

@@ -31,7 +31,18 @@ are defects there.  Checks:
 * **Cache key coverage** (``CACHE_KEY_MISS`` / ``CACHE_KEY_COLLISION``):
   the ``jit_execute_*`` LRU keys must hit on identical plans and miss
   on any changed option/capacity/donation flag — a collision silently
-  runs the wrong program; a miss retraces every call.
+  runs the wrong program; a miss retraces every call.  The key must
+  cover the overlapped-execution options too (``join_impl="fused"``,
+  ``overlap_chunks``) — flipping either changes the traced program.
+* **Collectives** (``FULL_RELATION_ALL_GATHER`` via
+  :func:`audit_collectives`): the overlapped (chunked) shuffle must
+  move relations with per-chunk ``all_to_all``s, never by gathering a
+  full relation onto every device — an ``all_gather`` whose operand is
+  relation-sized multiplies the communication by the device count and
+  defeats the schedule.  SimGrid lowers ``all_gather`` to
+  ``broadcast_in_dim``, so this check is only meaningful on a
+  ShardGrid lowering; the 16-device subprocess checks
+  (tests/_query_shard_check.py) trace one and assert it.
 """
 
 from __future__ import annotations
@@ -264,6 +275,69 @@ def audit_donation(traced: Any, donated_leaf_count: int,
 
 
 # ---------------------------------------------------------------------------
+# Collective-primitive collection (the overlapped-shuffle audit)
+# ---------------------------------------------------------------------------
+
+#: Cross-device communication primitives (shard_map lowerings).
+COLLECTIVE_PRIMS = ("all_gather", "all_to_all", "psum", "ppermute",
+                    "reduce_scatter")
+
+
+def collect_collectives(closed_jaxpr: Any) -> List[Dict[str, Any]]:
+    """Every collective equation in a lowering (recursing through pjit
+    / scan / cond bodies): ``{"prim", "operand_shapes", "operand_rows"}``
+    where ``operand_rows`` is the largest trailing-axis extent among the
+    operands — the per-device row count the collective moves."""
+    jaxpr = closed_jaxpr.jaxpr if hasattr(closed_jaxpr, "jaxpr") \
+        else closed_jaxpr
+    out: List[Dict[str, Any]] = []
+
+    def walk(jx: Any) -> None:
+        for eqn in jx.eqns:
+            if eqn.primitive.name in COLLECTIVE_PRIMS:
+                shapes = [tuple(getattr(v.aval, "shape", ()))
+                          for v in eqn.invars if hasattr(v, "aval")]
+                rows = max((s[-1] for s in shapes if s), default=0)
+                out.append({"prim": eqn.primitive.name,
+                            "operand_shapes": shapes,
+                            "operand_rows": int(rows)})
+            for sub, _ in _sub_jaxprs(eqn):
+                walk(sub.jaxpr if hasattr(sub, "jaxpr") else sub)
+
+    walk(jaxpr)
+    return out
+
+
+def audit_collectives(closed_jaxpr: Any, *, max_gather_rows: int,
+                      target: str) -> VerifierReport:
+    """Flag ``all_gather``s that replicate a full relation.
+
+    ``max_gather_rows`` is the capacity threshold: gathers of scalars
+    and of small control values (overflow flags, stats, per-bucket
+    counts) pass; a gather whose operand carries at least this many
+    rows is a relation being replicated to every device — the
+    communication pattern the chunked all-to-all schedule exists to
+    avoid.  Run this on ShardGrid lowerings (SimGrid's ``all_gather``
+    lowers to ``broadcast_in_dim`` and is invisible here)."""
+    report = VerifierReport(target=target)
+    colls = collect_collectives(closed_jaxpr)
+    report.metrics["n_collectives"] = len(colls)
+    report.metrics["n_all_to_all"] = sum(
+        1 for c in colls if c["prim"] == "all_to_all")
+    for c in colls:
+        if c["prim"] == "all_gather" and c["operand_rows"] >= max_gather_rows:
+            report.add(
+                "FULL_RELATION_ALL_GATHER", ERROR,
+                f"{target}: all_gather{c['operand_shapes']}",
+                f"an all_gather moves {c['operand_rows']} rows (>= the "
+                f"relation capacity {max_gather_rows}): the shuffle is "
+                f"replicating a full relation to every device instead of "
+                f"routing per-chunk all_to_alls — k× the communication "
+                f"the overlapped schedule accounts for")
+    return report
+
+
+# ---------------------------------------------------------------------------
 # The audited lowerings
 # ---------------------------------------------------------------------------
 
@@ -317,6 +391,23 @@ def audit_lowerings(include_jit: bool = True) -> List[VerifierReport]:
         lambda r: cascade_query(SimGrid((4,)), tri, r, caps=caps))(flat_rels)
     reports.append(audit_traced(closed, flat_rels, "jaxpr/cascade_query"))
 
+    # The overlapped execution path: the fused rank-packed kernel and
+    # the chunked shuffle schedule are different programs — audit their
+    # lowerings too (same dtype/taint hazards apply).
+    closed = jax.make_jaxpr(
+        lambda r: one_round_query(SimGrid(tri_grid), tri, r, caps=caps,
+                                  join_impl="fused",
+                                  overlap_chunks=2))(tri_rels)
+    reports.append(audit_traced(closed, tri_rels,
+                                "jaxpr/one_round_query[fused,overlap]"))
+
+    closed = jax.make_jaxpr(
+        lambda r: cascade_query(SimGrid((4,)), tri, r, caps=caps,
+                                join_impl="fused",
+                                overlap_chunks=2))(flat_rels)
+    reports.append(audit_traced(closed, flat_rels,
+                                "jaxpr/cascade_query[fused,overlap]"))
+
     # mapside_cascade_chain over a real partitioned store (P = 4).
     P = 4
     prels: List[Any] = []
@@ -340,16 +431,22 @@ def audit_lowerings(include_jit: bool = True) -> List[VerifierReport]:
 
     if include_jit:
         # jit_execute_chain with donation: donation + weak-type checks
-        # on the traced program.
-        run = jit_execute_chain(SimGrid(grid_shape), query,
-                                strategy="one_round", caps=caps,
-                                donate=True)
-        traced = run.trace(rels)
+        # on the traced program — for the staged plan and the
+        # fused/overlapped plan (different programs, donation must hold
+        # in both).
         n_leaves = len(jax.tree_util.tree_leaves(rels))
-        rep = audit_donation(traced, n_leaves, "jaxpr/jit_execute_chain")
-        audit_traced(traced.jaxpr, rels, "jaxpr/jit_execute_chain",
-                     report=rep)
-        reports.append(rep)
+        for label, opts in (("", {}),
+                            ("[fused,overlap]",
+                             dict(join_impl="fused", overlap_chunks=2))):
+            run = jit_execute_chain(SimGrid(grid_shape), query,
+                                    strategy="one_round", caps=caps,
+                                    donate=True, **opts)
+            traced = run.trace(rels)
+            rep = audit_donation(traced, n_leaves,
+                                 f"jaxpr/jit_execute_chain{label}")
+            audit_traced(traced.jaxpr, rels,
+                         f"jaxpr/jit_execute_chain{label}", report=rep)
+            reports.append(rep)
         reports.append(audit_jit_cache())
     return reports
 
@@ -381,6 +478,8 @@ def audit_jit_cache() -> VerifierReport:
         "donate": dict(base, donate=True),
         "opts(measure_skew)": dict(base, measure_skew=True),
         "opts(join_impl)": dict(base, join_impl="all_pairs"),
+        "opts(join_impl=fused)": dict(base, join_impl="fused"),
+        "opts(overlap_chunks)": dict(base, overlap_chunks=2),
     }
     for name, kwargs in variants.items():
         if jit_execute_chain(grid, query, **kwargs) is f0:

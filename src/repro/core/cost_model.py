@@ -961,6 +961,55 @@ def skew_excess_cascade(stats: "ChainStats", k: int) -> float:
 
 
 # ---------------------------------------------------------------------------
+# Overlapped hop time model (the roofline of the chunked shuffle)
+# ---------------------------------------------------------------------------
+#
+# A staged hop serializes its all-to-all and its local join:
+# ``t_sh + t_cp``.  The overlapped schedule (``overlap_chunks = C``)
+# splits the shuffled side into C row blocks whose collectives carry no
+# dependency on the previous block's join, so after the first block's
+# shuffle lands, every later block's transfer hides under compute (or
+# vice versa when communication dominates): the steady state runs at
+# ``max(t_sh, t_cp)/C`` per block.  These formulas are the analytic
+# side of benchmarks/roofline.py's measured gate.
+
+def hop_time_staged(t_shuffle: float, t_compute: float) -> float:
+    """Wall-clock of one staged hop: shuffle then join, serialized."""
+    return t_shuffle + t_compute
+
+
+def hop_time_overlapped(t_shuffle: float, t_compute: float,
+                        chunks: int) -> float:
+    """Wall-clock of one overlapped hop with ``chunks`` row blocks:
+    one block's pipeline fill (``(t_sh + t_cp)/C``) plus C−1 steady
+    blocks at the longer phase's rate.  ``chunks=1`` degenerates to the
+    staged time exactly."""
+    C = max(1, int(chunks))
+    return (t_shuffle + t_compute) / C \
+        + max(t_shuffle, t_compute) * (C - 1) / C
+
+
+def overlap_hidden_fraction(t_staged: float, t_overlapped: float,
+                            t_shuffle: float) -> float:
+    """Fraction of the shuffle wall-clock the overlap hid:
+    ``(t_staged − t_overlapped) / t_shuffle``.  1.0 means the whole
+    shuffle disappeared behind compute (the compute-bound ideal
+    ``C→∞`` limit when ``t_cp ≥ t_sh``); the roofline gate requires
+    ≥ 0.3 on the 16-device emulated mesh."""
+    if t_shuffle <= 0:
+        return 0.0
+    return (t_staged - t_overlapped) / t_shuffle
+
+
+def relation_row_bytes(rel) -> int:
+    """Bytes one materialized row of a relation carries: the sum of
+    its column itemsizes plus the validity byte — the unit converting
+    the paper's tuple accounting into the roofline's bytes-moved
+    accounting."""
+    return sum(int(c.dtype.itemsize) for c in rel.cols.values()) + 1
+
+
+# ---------------------------------------------------------------------------
 # Statistics + planner inputs
 # ---------------------------------------------------------------------------
 

@@ -63,7 +63,8 @@ from .cost_model import ChainStats, chain_replications
 from .local import groupby_sum, local_join
 from .plan import ChainQuery, JoinQuery
 from .relation import Relation, concat
-from .shuffle import Grid, SimGrid, broadcast_along, shuffle_by_bucket
+from .shuffle import (Grid, SimGrid, broadcast_along, compact_to,
+                      concat_rows, shuffle_by_bucket, split_rows)
 from .two_way import two_way_join
 
 Stats = Dict[str, jnp.ndarray]
@@ -214,10 +215,57 @@ def reduce_side_fn(query: JoinQuery, order: Sequence[int], *,
     return reduce_side
 
 
+def _reduce_split_fns(query: JoinQuery, order: Sequence[int], *,
+                      caps: ChainCaps, join_impl: str = "sort_merge"):
+    """:func:`reduce_side_fn` split at its last hop, for the overlapped
+    one-round schedule: ``head`` runs the chain over every relation but
+    ``order[-1]`` (computed once), ``tail(acc, shard)`` applies the
+    final join + closing filters (run per placement chunk).  Returns
+    ``(js_head, head, tail, final_cap)`` where ``js_head`` lists the
+    relation indices ``head`` consumes, in ascending order."""
+    n = query.n_relations
+    order = tuple(order)
+    steps = _join_steps(query, order)
+    out_caps = [caps.mid] * (n - 2) + [caps.join if (query.aggregate and
+                                                     caps.join) else caps.out]
+    last = steps[-1][0]
+    js_head = tuple(j for j in range(n) if j != last)
+
+    def head(*shards: Relation):
+        sh = dict(zip(js_head, shards))
+        acc = sh[order[0]]
+        ovf = jnp.zeros((), jnp.bool_)
+        for i, (j, key, extras) in enumerate(steps[:-1]):
+            right = sh[j]
+            if extras:
+                right = right.rename({a: _CLOSE + a for a in extras})
+            acc, o = local_join(acc, right, key, key, out_caps[i],
+                                impl=join_impl)
+            ovf = ovf | o
+            if extras:
+                acc = _close_cycle(acc, extras)
+        return acc, ovf
+
+    _, key_l, extras_l = steps[-1]
+
+    def tail(acc: Relation, shard: Relation):
+        right = shard
+        if extras_l:
+            right = right.rename({a: _CLOSE + a for a in extras_l})
+        out, o = local_join(acc, right, key_l, key_l, out_caps[-1],
+                            impl=join_impl)
+        if extras_l:
+            out = _close_cycle(out, extras_l)
+        return out, o
+
+    return js_head, head, tail, out_caps[-1]
+
+
 def one_round_query(grid: Grid, query: JoinQuery, rels: Sequence[Relation], *,
                     caps: ChainCaps, join_order: Optional[Sequence[int]] = None,
                     measure_skew: bool = False,
                     join_impl: str = "sort_merge",
+                    overlap_chunks: int = 1,
                     ) -> Tuple[Relation, Stats, jnp.ndarray]:
     """One MapReduce round: place every relation on the join-attribute
     hypercube, then join locally.  Shuffled cost is Σ_j r_j · K /
@@ -230,7 +278,15 @@ def one_round_query(grid: Grid, query: JoinQuery, rels: Sequence[Relation], *,
     and filters the rest — the cycle-closing predicates.  Tuples that
     agree on *all* their join attributes land on the same device (each
     relation is hashed on every join attribute it contains), so the
-    per-device joins compose to the global result."""
+    per-device joins compose to the global result.
+
+    ``overlap_chunks > 1`` selects the overlapped schedule: the last
+    relation in the join order streams through placement in that many
+    row chunks, each chunk's shuffle overlapping the previous chunk's
+    final join (the head of the chain is computed once).  Tuple
+    accounting, skew measurement, and the overflow condition are
+    exactly the staged schedule's; only per-device output row order may
+    differ."""
     n = query.n_relations
     query.check_relations(rels)
     ndims = query.n_dims
@@ -241,26 +297,76 @@ def one_round_query(grid: Grid, query: JoinQuery, rels: Sequence[Relation], *,
     read = sum(_count(grid, r) for r in rels)
     overflow = jnp.zeros((), jnp.bool_)
     skew = jnp.zeros((), jnp.float32)
-
-    placed: List[Relation] = []
-    for j, rel in enumerate(rels):
-        cur, ovf, sk = place_relation(grid, query, j, rel, caps=caps,
-                                      measure_skew=measure_skew)
-        overflow = overflow | ovf
-        skew = jnp.maximum(skew, sk)
-        placed.append(cur)
-
-    # Reduce side: left-deep chain of local joins (pure per-device work).
     order = tuple(join_order) if join_order is not None \
         else query.default_join_order()
-    reduce_side = reduce_side_fn(query, order, caps=caps, join_impl=join_impl)
 
-    joined, ovf_j = grid.map_devices(reduce_side, *placed)
-    overflow = overflow | jnp.any(grid.reduce_any(ovf_j))
+    if overlap_chunks <= 1 or n < 2:
+        placed: List[Relation] = []
+        for j, rel in enumerate(rels):
+            cur, ovf, sk = place_relation(grid, query, j, rel, caps=caps,
+                                          measure_skew=measure_skew)
+            overflow = overflow | ovf
+            skew = jnp.maximum(skew, sk)
+            placed.append(cur)
 
-    # Measured shuffle = tuples resident at reducers after placement
-    # (each relation counted with its replication factor).
-    received = sum(_count(grid, p) for p in placed)
+        # Reduce side: left-deep chain of local joins (pure per-device
+        # work).
+        reduce_side = reduce_side_fn(query, order, caps=caps,
+                                     join_impl=join_impl)
+        joined, ovf_j = grid.map_devices(reduce_side, *placed)
+        overflow = overflow | jnp.any(grid.reduce_any(ovf_j))
+
+        # Measured shuffle = tuples resident at reducers after placement
+        # (each relation counted with its replication factor).
+        received = sum(_count(grid, p) for p in placed)
+    else:
+        # Overlapped schedule: place every relation but the last in the
+        # join order, run the head chain once, then stream the last
+        # relation through in row chunks — chunk b+1's placement
+        # shuffle has no dependency on chunk b's join, so XLA overlaps
+        # them.  The chunks partition the rows, so received counts,
+        # skew histograms, and the overflow condition equal the staged
+        # schedule's exactly; only per-device output row order differs.
+        js_head, head, tail, final_cap = _reduce_split_fns(
+            query, order, caps=caps, join_impl=join_impl)
+        last = order[-1]
+        placed_head: Dict[int, Relation] = {}
+        for j in js_head:
+            cur, ovf, sk = place_relation(grid, query, j, rels[j], caps=caps,
+                                          measure_skew=measure_skew)
+            overflow = overflow | ovf
+            skew = jnp.maximum(skew, sk)
+            placed_head[j] = cur
+        if measure_skew:
+            # The last relation's hop histograms, measured on the full
+            # input (identical to the staged measurement — chunk
+            # histograms would each see a subset).
+            for d in query.hashed_dims(last):
+                if grid.shape[d] == 1:
+                    continue
+                skew = jnp.maximum(skew, _hop_load(
+                    grid, rels[last], query.dim_attr(d), grid.shape[d],
+                    salt=d))
+
+        acc, ovf_h = grid.map_devices(head, *[placed_head[j]
+                                              for j in js_head])
+        overflow = overflow | jnp.any(grid.reduce_any(ovf_h))
+        received = sum(_count(grid, p) for p in placed_head.values())
+
+        parts: List[Relation] = []
+        for chunk in split_rows(rels[last], overlap_chunks):
+            pc, ovf_c, _ = place_relation(grid, query, last, chunk,
+                                          caps=caps, measure_skew=False)
+            received = received + _count(grid, pc)
+            out_c, ovf_t = grid.map_devices(tail, acc, pc)
+            overflow = overflow | ovf_c | jnp.any(grid.reduce_any(ovf_t))
+            parts.append(out_c)
+        # Chunk matches are subsets of the staged hop's, so the chunk
+        # joins at final_cap cannot overflow unless the staged join
+        # would; the compaction reimposes the staged capacity and its
+        # overflow condition.
+        joined, ovf_cc = compact_to(grid, concat_rows(parts), final_cap)
+        overflow = overflow | ovf_cc
     stats: Stats = {
         "read": read.astype(jnp.float32),
         "shuffled": received.astype(jnp.float32),
@@ -287,12 +393,14 @@ def one_round_query(grid: Grid, query: JoinQuery, rels: Sequence[Relation], *,
 def one_round_chain(grid: Grid, query: ChainQuery, rels: Sequence[Relation], *,
                     caps: ChainCaps, measure_skew: bool = False,
                     join_impl: str = "sort_merge",
+                    overlap_chunks: int = 1,
                     ) -> Tuple[Relation, Stats, jnp.ndarray]:
     """The historical chain entry point — now the chain instance of
     :func:`one_round_query` (default join order ``0..N−1`` on the
     rank-(N−1) grid), bit-for-bit unchanged."""
     return one_round_query(grid, query, rels, caps=caps,
-                           measure_skew=measure_skew, join_impl=join_impl)
+                           measure_skew=measure_skew, join_impl=join_impl,
+                           overlap_chunks=overlap_chunks)
 
 
 # ---------------------------------------------------------------------------
@@ -305,9 +413,15 @@ def cascade_query(grid: Grid, query: JoinQuery, rels: Sequence[Relation], *,
                   local_combine: bool = False,
                   measure_skew: bool = False,
                   join_impl: str = "sort_merge",
+                  overlap_chunks: int = 1,
                   ) -> Tuple[Relation, Stats, jnp.ndarray]:
     """N−1 rounds of two-way joins along a connected left-deep
     ``join_order`` (default: the query's greedy order).
+
+    ``overlap_chunks > 1`` runs every hop on the overlapped schedule —
+    the incoming relation's shuffle streams in row chunks against the
+    resident running intermediate (see :func:`~repro.core.two_way
+    .two_way_join`) — with identical tuple accounting and overflow.
 
     Each round equi-joins the running intermediate with the next
     relation on their first shared attribute across the whole grid; any
@@ -359,7 +473,8 @@ def cascade_query(grid: Grid, query: JoinQuery, rels: Sequence[Relation], *,
         left, st, ovf = two_way_join(
             grid, left, right, key, key,
             recv_capacity=recv, out_capacity=out_cap,
-            local_capacity=local, salt=i, join_impl=join_impl)
+            local_capacity=local, salt=i, join_impl=join_impl,
+            overlap_chunks=overlap_chunks)
         if extras:
             left = grid.map_devices(
                 lambda r, _e=extras: _close_cycle(r, _e), left)
@@ -393,6 +508,7 @@ def cascade_chain(grid: Grid, query: ChainQuery, rels: Sequence[Relation], *,
                   include_final_agg: bool = False,
                   measure_skew: bool = False,
                   join_impl: str = "sort_merge",
+                  overlap_chunks: int = 1,
                   ) -> Tuple[Relation, Stats, jnp.ndarray]:
     """N−1 rounds of two-way joins, left-deep in query order.
 
@@ -434,7 +550,8 @@ def cascade_chain(grid: Grid, query: ChainQuery, rels: Sequence[Relation], *,
         left, st, ovf = two_way_join(
             grid, left, rels[j], key, key,
             recv_capacity=recv, out_capacity=out_cap,
-            local_capacity=local, salt=j - 1, join_impl=join_impl)
+            local_capacity=local, salt=j - 1, join_impl=join_impl,
+            overlap_chunks=overlap_chunks)
         all_stats.append(st)
         overflow = overflow | ovf
         left_cap = out_cap
@@ -497,6 +614,7 @@ def mapside_cascade_chain(grid: Grid, query: ChainQuery, rels, *,
                           place_output: bool = False,
                           measure_skew: bool = False,
                           join_impl: str = "sort_merge",
+                          overlap_chunks: int = 1,
                           ) -> Tuple[Relation, Stats, jnp.ndarray]:
     """The zero-shuffle cascade over the partitioned store (MS,NJ[A]).
 
@@ -592,7 +710,8 @@ def mapside_cascade_chain(grid: Grid, query: ChainQuery, rels, *,
             left, st, ovf = two_way_join(
                 grid, left, right, key, key,
                 recv_capacity=recv, out_capacity=out_cap,
-                local_capacity=local, salt=j - 1, join_impl=join_impl)
+                local_capacity=local, salt=j - 1, join_impl=join_impl,
+                overlap_chunks=overlap_chunks)
             all_stats.append(st)
             hop_shuffled.append(st["shuffled"])
             overflow = overflow | ovf
@@ -716,6 +835,7 @@ def _flatten_grid(rel: Relation, grid_rank: int) -> Relation:
 def shares_skew_chain(query: ChainQuery, rels: Sequence[Relation], plan, *,
                       caps, measure_skew: bool = False,
                       join_impl: str = "sort_merge",
+                      overlap_chunks: int = 1,
                       ) -> Tuple[Relation, Stats, jnp.ndarray]:
     """SkewSplit lowering (SharesSkew): one Shares sub-join per
     heavy/residual combination, unioned.
@@ -783,7 +903,8 @@ def shares_skew_chain(query: ChainQuery, rels: Sequence[Relation], plan, *,
         combo_caps = caps(combo) if callable(caps) else caps
         out, st, ovf = one_round_chain(grid, query, sub, caps=combo_caps,
                                        measure_skew=measure_skew,
-                                       join_impl=join_impl)
+                                       join_impl=join_impl,
+                                       overlap_chunks=overlap_chunks)
         parts.append(_flatten_grid(out, n - 1))
         all_stats.append(st)
         overflow = overflow | ovf
@@ -807,6 +928,7 @@ def execute_chain(grid: Grid, query: ChainQuery, rels: Sequence[Relation], *,
                   join_impl: str = "sort_merge",
                   partitioning=None, hop_modes=None,
                   place_output: bool = False,
+                  overlap_chunks: int = 1,
                   ) -> Tuple[Relation, Stats, jnp.ndarray]:
     """Execute ``query`` with a planner-chosen strategy:
 
@@ -822,9 +944,12 @@ def execute_chain(grid: Grid, query: ChainQuery, rels: Sequence[Relation], *,
       proven position (:func:`mapside_cascade_chain`).
 
     ``join_impl`` selects the reduce-side join kernel for every
-    strategy: ``"sort_merge"`` (default) or the ``"all_pairs"`` oracle
-    — identical tuple sets, stats, and overflow flags (see
-    docs/architecture.md "Data plane").
+    strategy: ``"sort_merge"`` (default), ``"fused"`` (the rank-packed
+    pipeline), or the ``"all_pairs"`` oracle — identical tuple sets,
+    stats, and overflow flags (see docs/architecture.md "Data plane").
+    ``overlap_chunks > 1`` selects the overlapped shuffle schedule on
+    every strategy (see docs/overlap.md) — identical accounting, only
+    per-device output row order may differ.
 
     The skew-aware strategy ``"shares_skew"`` (1,NJS) cannot run on a
     single pre-scattered grid — its sub-joins each use their own clamped
@@ -840,7 +965,8 @@ def execute_chain(grid: Grid, query: ChainQuery, rels: Sequence[Relation], *,
                                      hop_modes=hop_modes,
                                      place_output=place_output,
                                      measure_skew=measure_skew,
-                                     join_impl=join_impl)
+                                     join_impl=join_impl,
+                                     overlap_chunks=overlap_chunks)
     if strategy == "shares_skew":
         raise ValueError(
             "shares_skew runs per-combination grids; call "
@@ -849,12 +975,14 @@ def execute_chain(grid: Grid, query: ChainQuery, rels: Sequence[Relation], *,
     if strategy == "one_round":
         return one_round_chain(grid, query, rels, caps=caps,
                                measure_skew=measure_skew,
-                               join_impl=join_impl)
+                               join_impl=join_impl,
+                               overlap_chunks=overlap_chunks)
     if strategy == "cascade":
         return cascade_chain(grid, query, rels, caps=caps, pushdown=False,
                              measure_skew=measure_skew,
                              local_combine=local_combine,
-                             join_impl=join_impl)
+                             join_impl=join_impl,
+                             overlap_chunks=overlap_chunks)
     if strategy == "cascade_pushdown":
         if query.aggregate is None:
             raise ValueError("cascade_pushdown needs an aggregated query")
@@ -862,7 +990,8 @@ def execute_chain(grid: Grid, query: ChainQuery, rels: Sequence[Relation], *,
                              measure_skew=measure_skew,
                              local_combine=local_combine,
                              include_final_agg=include_final_agg,
-                             join_impl=join_impl)
+                             join_impl=join_impl,
+                             overlap_chunks=overlap_chunks)
     raise ValueError(f"unknown strategy {strategy!r}")
 
 
@@ -872,6 +1001,7 @@ def execute_query(grid: Grid, query: JoinQuery, rels: Sequence[Relation], *,
                   measure_skew: bool = False, local_combine: bool = False,
                   include_final_agg: bool = False,
                   join_impl: str = "sort_merge",
+                  overlap_chunks: int = 1,
                   ) -> Tuple[Relation, Stats, jnp.ndarray]:
     """Execute a general :class:`JoinQuery` — chain, cycle, star, or any
     connected hypergraph — with a planner-chosen strategy:
@@ -897,13 +1027,15 @@ def execute_query(grid: Grid, query: JoinQuery, rels: Sequence[Relation], *,
         return one_round_query(grid, query, rels, caps=caps,
                                join_order=join_order,
                                measure_skew=measure_skew,
-                               join_impl=join_impl)
+                               join_impl=join_impl,
+                               overlap_chunks=overlap_chunks)
     if strategy == "cascade":
         return cascade_query(grid, query, rels, caps=caps,
                              join_order=join_order,
                              measure_skew=measure_skew,
                              local_combine=local_combine,
-                             join_impl=join_impl)
+                             join_impl=join_impl,
+                             overlap_chunks=overlap_chunks)
     if strategy == "cascade_pushdown":
         order = query.chain_attr_order()
         if query.aggregate is None or order is None or order != query.attrs:
@@ -914,7 +1046,8 @@ def execute_query(grid: Grid, query: JoinQuery, rels: Sequence[Relation], *,
                              measure_skew=measure_skew,
                              local_combine=local_combine,
                              include_final_agg=include_final_agg,
-                             join_impl=join_impl)
+                             join_impl=join_impl,
+                             overlap_chunks=overlap_chunks)
     if strategy == "shares_skew":
         raise ValueError(
             "shares_skew runs per-combination grids and is chain-only; call "

@@ -18,7 +18,8 @@ import jax.numpy as jnp
 from . import hashing
 from .local import local_join
 from .relation import Relation
-from .shuffle import Grid, shuffle_by_bucket
+from .shuffle import (Grid, compact_to, concat_rows, shuffle_by_bucket,
+                      split_rows)
 
 
 def flat_grid_bucket(grid: Grid, key: jnp.ndarray, salt: int = 0) -> Tuple[jnp.ndarray, ...]:
@@ -61,6 +62,7 @@ def two_way_join(grid: Grid, left: Relation, right: Relation,
                  local_capacity: int | None = None,
                  prefix_l: str = "", prefix_r: str = "",
                  salt: int = 0, join_impl: str = "sort_merge",
+                 overlap_chunks: int = 1,
                  ) -> Tuple[Relation, Dict[str, jnp.ndarray], jnp.ndarray]:
     """R ⋈ S on left_key == right_key across the whole grid.
 
@@ -69,29 +71,58 @@ def two_way_join(grid: Grid, left: Relation, right: Relation,
     (map output received by reducers) — cost of this round is their sum.
 
     ``join_impl`` selects the reduce-side kernel: ``"sort_merge"``
-    (default, the sorted-probe fast path) or ``"all_pairs"`` (the
-    quadratic oracle) — same tuple set, stats, and overflow either way.
+    (default, the sorted-probe fast path), ``"fused"`` (the rank-packed
+    pipeline), or ``"all_pairs"`` (the quadratic oracle) — same tuple
+    set, stats, and overflow either way.
+
+    ``overlap_chunks > 1`` selects the overlapped schedule: the right
+    side is split into that many row blocks, each shuffled and joined
+    against the resident left shard independently, so block b+1's
+    all-to-all carries no dependency on block b's join and XLA overlaps
+    them.  The blocks partition the rows, so ``stats`` and the overflow
+    condition are exactly those of the staged schedule; only the output
+    row order within a device may differ (same tuple multiset — the
+    per-chunk outputs are concatenated and compacted to
+    ``out_capacity``).
     """
     n_left = grid.reduce_sum(grid.map_devices(lambda r: r.count(), left))
     n_right = grid.reduce_sum(grid.map_devices(lambda r: r.count(), right))
 
     left_s, ovf_l = shuffle_to_device(grid, left, left_key, recv_capacity,
                                       salt, local_capacity)
-    right_s, ovf_r = shuffle_to_device(grid, right, right_key, recv_capacity,
-                                       salt, local_capacity)
 
     def reduce_side(l: Relation, r: Relation):
         return local_join(l, r, left_key, right_key, out_capacity,
                           prefix_l=prefix_l, prefix_r=prefix_r,
                           impl=join_impl)
 
-    joined, ovf_j = grid.map_devices(reduce_side, left_s, right_s)
-    overflow = ovf_l | ovf_r | jnp.any(grid.reduce_any(ovf_j))
+    def shard_count(rel):
+        return grid.reduce_sum(grid.map_devices(lambda r: r.count(), rel))
 
-    # Tuples received by reducers == tuples emitted by mappers (1 KVP per
-    # input tuple for a two-way join).
-    received = grid.reduce_sum(grid.map_devices(lambda r: r.count(), left_s)) + \
-        grid.reduce_sum(grid.map_devices(lambda r: r.count(), right_s))
+    if overlap_chunks <= 1:
+        right_s, ovf_r = shuffle_to_device(grid, right, right_key,
+                                           recv_capacity, salt, local_capacity)
+        joined, ovf_j = grid.map_devices(reduce_side, left_s, right_s)
+        overflow = ovf_l | ovf_r | jnp.any(grid.reduce_any(ovf_j))
+        received = shard_count(left_s) + shard_count(right_s)
+    else:
+        overflow = ovf_l
+        received = shard_count(left_s)
+        parts = []
+        for chunk in split_rows(right, overlap_chunks):
+            chunk_s, ovf_c = shuffle_to_device(grid, chunk, right_key,
+                                               recv_capacity, salt,
+                                               local_capacity)
+            received = received + shard_count(chunk_s)
+            out_c, ovf_j = grid.map_devices(reduce_side, left_s, chunk_s)
+            overflow = overflow | ovf_c | jnp.any(grid.reduce_any(ovf_j))
+            parts.append(out_c)
+        # Per-chunk matches are a subset of the full hop's, so the chunk
+        # joins at out_capacity cannot overflow unless the staged hop
+        # would; the final compaction reimposes the staged capacity and
+        # its overflow condition (total matches > out_capacity).
+        joined, ovf_cc = compact_to(grid, concat_rows(parts), out_capacity)
+        overflow = overflow | ovf_cc
     stats = {
         "read": (n_left + n_right).astype(jnp.float32),
         "shuffled": received.astype(jnp.float32),

@@ -24,10 +24,33 @@ def make_mesh(shape: Tuple[int, ...], axes: Tuple[str, ...]) -> Mesh:
         n *= s
     if n > len(jax.devices()):
         raise RuntimeError(
-            f"mesh needs {n} devices, have {len(jax.devices())}; the dry-run "
-            "must set XLA_FLAGS=--xla_force_host_platform_device_count "
-            "before importing jax")
+            f"mesh needs {n} devices, have {len(jax.devices())}; call "
+            "repro.config.configure_platform(host_devices=N) (or set "
+            "XLA_FLAGS=--xla_force_host_platform_device_count=N) before "
+            "the first jax computation")
     return jax.make_mesh(shape, axes)
+
+
+def emulated_host_mesh(shape: Tuple[int, ...], axes: Tuple[str, ...]) -> Mesh:
+    """A mesh over *emulated* CPU host devices — the CI-testing path
+    for 16+-device ShardGrid runs (tests/_query_shard_check.py).
+
+    Calls :func:`repro.config.configure_platform` with the required
+    device count first; this only works when JAX has not initialized
+    yet, so call it at process start (subprocess tests set the count in
+    the environment before importing jax, which is equivalent)."""
+    from .. import config
+
+    n = 1
+    for s in shape:
+        n *= s
+    if n > len(jax.devices()) and not config.configure_platform(
+            platform="cpu", host_devices=n):
+        raise RuntimeError(
+            f"emulated mesh needs {n} devices but JAX already initialized "
+            f"with {len(jax.devices())}; configure_platform(host_devices="
+            f"{n}) must run before the first jax computation")
+    return make_mesh(shape, axes)
 
 
 def single_device_mesh() -> Mesh:

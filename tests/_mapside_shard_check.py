@@ -1,25 +1,30 @@
 """Map-side cascade on a real multi-device ShardGrid (run in a
 subprocess: the main pytest process must keep its single CPU device).
 
-Builds a 1-D 8-device mesh — the partition grid of a fully
-co-partitioned 3-hop chain — feeds the stored partitions straight into
-``mapside_cascade_chain`` inside ``shard_map`` (with ``place_output``
-so intermediates land pre-partitioned on the next hop's key), and
-checks the result count against the host path count plus the zero
-per-hop shuffle accounting.
+Builds a 1-D mesh of ``REPRO_HOST_DEVICES`` emulated devices (default
+8; CI also runs 16) via ``repro.config.configure_platform`` — the
+partition grid of a fully co-partitioned 3-hop chain — feeds the
+stored partitions straight into ``mapside_cascade_chain`` inside
+``shard_map`` (with ``place_output`` so intermediates land
+pre-partitioned on the next hop's key), and checks the result count
+against the host path count plus the zero per-hop shuffle accounting.
 """
 
 import os
 import sys
 from pathlib import Path
 
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
-os.environ.setdefault("JAX_PLATFORMS", "cpu")  # the 8 devices are host-emulated
-
 try:
     import repro  # noqa: F401 — installed, or on PYTHONPATH
 except ImportError:  # checkout fallback: src/ relative to this file
     sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+os.environ.setdefault("JAX_PLATFORMS", "cpu")  # devices are host-emulated
+
+from repro.config import configure_platform  # noqa: E402
+
+NP = int(os.environ.get("REPRO_HOST_DEVICES", "8"))  # partitions == devices
+assert configure_platform(platform="cpu", host_devices=NP) is True
 
 import numpy as np  # noqa: E402
 
@@ -32,7 +37,6 @@ from repro.core import (ChainCaps, ChainQuery, PartitionedRelation,  # noqa: E40
                         edge_relation, mapside_cascade_chain,
                         partition_relation)
 
-NP = 8          # partitions == devices
 N = 4           # relations (3 hops)
 
 

@@ -1,0 +1,79 @@
+"""``configure_platform`` end to end (run in a subprocess: XLA flags
+and the emulated device count must be set before JAX initializes its
+backends, so the main pytest process keeps its own configuration).
+
+Configures an emulated multi-device CPU host, checks the flag merge is
+idempotent and override-preserving, builds a mesh over the emulated
+devices, and verifies the warn-don't-crash contract once a backend
+exists.
+
+Usage: ``python tests/_platform_check.py [n_devices]`` (default 16).
+"""
+
+import os
+import sys
+import warnings
+from pathlib import Path
+
+# Pre-existing XLA_FLAGS entries that configure_platform must keep (an
+# unrelated flag) or replace (a stale device count).
+os.environ["XLA_FLAGS"] = ("--xla_cpu_enable_fast_math=false "
+                           "--xla_force_host_platform_device_count=2")
+
+try:
+    import repro  # noqa: F401 — installed, or on PYTHONPATH
+except ImportError:  # checkout fallback: src/ relative to this file
+    sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+from repro.config import GPU_OVERLAP_FLAGS, configure_platform  # noqa: E402
+
+
+def main():
+    n = int(sys.argv[1]) if len(sys.argv) > 1 else 16
+
+    assert configure_platform(platform="cpu", host_devices=n) is True
+    flags = os.environ["XLA_FLAGS"].split()
+    assert f"--xla_force_host_platform_device_count={n}" in flags, flags
+    assert flags.count("--xla_force_host_platform_device_count="
+                       f"{n}") == 1
+    # The stale count was replaced and the unrelated flag kept; GPU
+    # overlap flags stay out of a CPU configuration (CPU-only XLA
+    # builds reject unknown --xla_gpu_* flags fatally).
+    assert "--xla_force_host_platform_device_count=2" not in flags
+    assert "--xla_cpu_enable_fast_math=false" in flags
+    for f in GPU_OVERLAP_FLAGS:
+        assert f not in flags, f
+
+    # Idempotent: a second call before init re-merges without
+    # duplicating anything.
+    assert configure_platform(host_devices=n) is True
+    flags2 = os.environ["XLA_FLAGS"].split()
+    assert len(flags2) == len(set(flags2)), flags2
+
+    import jax
+    import jax.numpy as jnp
+
+    assert jax.default_backend() == "cpu"
+    assert jax.device_count() == n, (jax.device_count(), n)
+
+    # The emulated devices really run sharded programs.
+    from repro.distributed.mesh import emulated_host_mesh
+    mesh = emulated_host_mesh((n,), ("d",))
+    assert int(jnp.sum(jnp.arange(n))) == n * (n - 1) // 2
+    assert mesh.devices.size == n
+
+    # After initialization: warn, return False, change nothing.
+    before = os.environ["XLA_FLAGS"]
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        applied = configure_platform(host_devices=2 * n)
+    assert applied is False
+    assert any(issubclass(w.category, RuntimeWarning) for w in caught)
+    assert os.environ["XLA_FLAGS"] == before
+    assert jax.device_count() == n
+
+    print("OK", n)
+
+
+if __name__ == "__main__":
+    main()

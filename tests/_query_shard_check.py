@@ -1,23 +1,40 @@
 """JoinQuery.triangle() on a real multi-device ShardGrid (run in a
 subprocess: the main pytest process must keep its single CPU device).
 
-Builds a 2×2×2 mesh — the rank-3 join-attribute hypercube of the
-triangle query — scatters three copies of one edge list onto it, runs
-``execute_query`` inside ``shard_map``, and checks the psum'd result
-tuple count against the host oracle (count/3 == oracle_triangles).
+Device count comes from ``REPRO_HOST_DEVICES`` (default 8; CI also runs
+16) and is applied through ``repro.config.configure_platform`` — the
+production entry point for emulated meshes — before JAX initializes.
+
+Three checks:
+
+* ``one_round`` on the rank-3 join-attribute hypercube: psum'd result
+  count against the host oracle plus exact Shares shuffle accounting.
+* ``cascade`` staged vs overlapped (``overlap_chunks=3``) on the flat
+  grid: identical tuple counts and identical read/shuffled stats — the
+  chunked schedule must be invisible to results and accounting on the
+  production backend too.
+* The overlapped cascade's *lowering* moves relations with per-chunk
+  ``all_to_all``s and never replicates a full relation via
+  ``all_gather`` (``repro.analysis.jaxpr_audit.audit_collectives`` —
+  only meaningful on a ShardGrid trace; SimGrid lowers its gathers to
+  ``broadcast_in_dim``).
 """
 
 import os
 import sys
 from pathlib import Path
 
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
-os.environ.setdefault("JAX_PLATFORMS", "cpu")  # the 8 devices are host-emulated
-
 try:
     import repro  # noqa: F401 — installed, or on PYTHONPATH
 except ImportError:  # checkout fallback: src/ relative to this file
     sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+os.environ.setdefault("JAX_PLATFORMS", "cpu")  # devices are host-emulated
+
+from repro.config import configure_platform  # noqa: E402
+
+N_DEV = int(os.environ.get("REPRO_HOST_DEVICES", "8"))
+assert configure_platform(platform="cpu", host_devices=N_DEV) is True
 
 import numpy as np  # noqa: E402
 
@@ -25,22 +42,17 @@ import jax  # noqa: E402
 import jax.numpy as jnp  # noqa: E402
 from jax.sharding import Mesh, PartitionSpec as P  # noqa: E402
 
+from repro.analysis.jaxpr_audit import audit_collectives  # noqa: E402
 from repro.core import (ChainCaps, JoinQuery, ShardGrid, execute_query,  # noqa: E402
                         oracle_triangles, query_table_inputs)
 
-GRID = (2, 2, 2)
+GRID = (4, 2, 2) if N_DEV >= 16 else (2, 2, 2)
 
 
-def main():
-    rng = np.random.default_rng(7)
-    src = rng.integers(0, 24, 80).astype(np.int32)
-    dst = rng.integers(0, 24, 80).astype(np.int32)
-    want = oracle_triangles(src, dst)
-
-    query = JoinQuery.triangle()
+def check_one_round(query, src, dst, want):
     rels = query_table_inputs(query, [(src, dst)] * 3, GRID)
-
-    devices = np.array(jax.devices()[:8]).reshape(GRID)
+    k_total = int(np.prod(GRID))
+    devices = np.array(jax.devices()[:k_total]).reshape(GRID)
     mesh = Mesh(devices, axis_names=("x", "y", "z"))
     grid = ShardGrid(mesh, ("x", "y", "z"))
     caps = ChainCaps(recv=256, mid=4096, out=8192, local=512)
@@ -53,10 +65,7 @@ def main():
         out, st, ovf = execute_query(grid_, query, flat,
                                      strategy="one_round", caps=caps)
         n = grid_.reduce_sum(jnp.sum(out.valid).astype(jnp.float32))
-        read = st["read"]
-        shuffled = st["shuffled"]
-        ovf_any = grid_.reduce_any(ovf)
-        return n, read, shuffled, ovf_any
+        return n, st["read"], st["shuffled"], grid_.reduce_any(ovf)
 
     n, read, shuffled, ovf = grid.run(
         body, *rels,
@@ -65,9 +74,77 @@ def main():
     assert not bool(ovf), "overflow on ShardGrid"
     got = float(n) / 3.0
     assert got == want, f"ShardGrid triangle count {got} != oracle {want}"
-    # Shares accounting holds on the production backend too.
+    # Shares accounting holds on the production backend too: each
+    # relation is replicated K / prod(shares it pins) times.
     assert float(read) == 3.0 * len(src)
-    assert float(shuffled) == 3.0 * len(src) * 2.0  # K/m_j = 8/4 per relation
+    want_shuffled = sum(
+        len(src) * k_total / np.prod([GRID[d] for d in dims])
+        for dims in query.rel_dims())
+    assert float(shuffled) == want_shuffled, (float(shuffled), want_shuffled)
+    return got
+
+
+def check_cascade_overlap(query, src, dst, want):
+    """Staged vs overlapped cascade on the flat grid: same counts, same
+    stats; the overlapped lowering never all-gathers a relation."""
+    rels = query_table_inputs(query, [(src, dst)] * 3, (N_DEV,))
+    devices = np.array(jax.devices()[:N_DEV])
+    mesh = Mesh(devices, axis_names=("x",))
+    grid = ShardGrid(mesh, ("x",))
+    caps = ChainCaps(recv=512, mid=4096, out=8192, local=2048)
+
+    def make_body(chunks):
+        def body(grid_, *shards):
+            flat = [jax.tree.map(lambda a: a.reshape(a.shape[1:]), r)
+                    for r in shards]
+            out, st, ovf = execute_query(grid_, query, flat,
+                                         strategy="cascade", caps=caps,
+                                         overlap_chunks=chunks)
+            n = grid_.reduce_sum(jnp.sum(out.valid).astype(jnp.float32))
+            return n, st["read"], st["shuffled"], grid_.reduce_any(ovf)
+        return body
+
+    in_specs = tuple(P("x", None) for _ in rels)
+    out_specs = (P(), P(), P(), P())
+    results = {}
+    for chunks in (1, 3):
+        n, read, shuffled, ovf = grid.run(
+            make_body(chunks), *rels, in_specs=in_specs,
+            out_specs=out_specs)
+        assert not bool(ovf), f"overflow on ShardGrid cascade x{chunks}"
+        results[chunks] = (float(n), float(read), float(shuffled))
+    assert results[1][0] / 3.0 == want, (results[1][0] / 3.0, want)
+    assert results[1] == results[3], (
+        f"overlapped cascade diverges from staged: {results}")
+
+    # The overlapped lowering's collectives: per-chunk all_to_alls,
+    # strictly more of them than the staged plan, and no all_gather of
+    # a relation-sized buffer.
+    audits = {}
+    for chunks in (1, 3):
+        closed = jax.make_jaxpr(
+            lambda *s: grid.run(make_body(chunks), *s,
+                                in_specs=in_specs,
+                                out_specs=out_specs))(*rels)
+        rep = audit_collectives(closed, max_gather_rows=caps.local,
+                                target=f"shard/cascade[x{chunks}]")
+        assert not rep.findings, [f.code for f in rep.findings]
+        audits[chunks] = rep.metrics
+    assert audits[3]["n_all_to_all"] > audits[1]["n_all_to_all"], audits
+    return results[1][0] / 3.0
+
+
+def main():
+    rng = np.random.default_rng(7)
+    src = rng.integers(0, 24, 80).astype(np.int32)
+    dst = rng.integers(0, 24, 80).astype(np.int32)
+    want = oracle_triangles(src, dst)
+    query = JoinQuery.triangle()
+
+    assert jax.device_count() == N_DEV, (jax.device_count(), N_DEV)
+    got = check_one_round(query, src, dst, want)
+    got2 = check_cascade_overlap(query, src, dst, want)
+    assert got == got2 == want
     print("OK", got)
 
 

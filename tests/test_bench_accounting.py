@@ -16,7 +16,10 @@ count, and the delta-maintenance savings are part of the pin), and
 ``BENCH_resilience.json`` as pinned when resilient execution landed
 (fault-free resilient runs are bit-identical to the plain executors,
 and seeded-injector recovery costs are deterministic — both claims
-live inside this gate).
+live inside this gate), and ``BENCH_roofline.json`` as pinned when the
+fused/overlap perf pass landed (the overlapped shuffle schedule must
+move exactly the tuples the staged one does — measured and analytic
+alike).
 Regenerating those files must reproduce each field
 bit-identically: neither the join kernel nor the hypergraph surface
 decides which tuples move — only the physical plan does.
@@ -52,7 +55,8 @@ def extract_counts(obj, path=""):
                                    "BENCH_triangles.json",
                                    "BENCH_mapside.json",
                                    "BENCH_serving.json",
-                                   "BENCH_resilience.json"])
+                                   "BENCH_resilience.json",
+                                   "BENCH_roofline.json"])
 def test_accounting_bit_identical_to_seed(bench):
     path = REPO / bench
     if not path.exists():

@@ -17,16 +17,20 @@ from repro.core.relation import Relation
 
 
 def test_all_lowerings_audit_clean():
-    """Every traced lowering — one-round chain/query, cascade, the
-    map-side cascade over a real partitioned store, and the jitted
-    wrapper with donation — audits with zero findings."""
+    """Every traced lowering — one-round chain/query, cascade (staged
+    and fused+overlapped), the map-side cascade over a real partitioned
+    store, and the jitted wrapper with donation (both variants) —
+    audits with zero findings."""
     reports = audit_lowerings()
-    assert len(reports) == 6
+    assert len(reports) == 9
     bad = [r.summary() for r in reports if not r.ok]
     assert not bad, "\n".join(bad)
     names = {r.target for r in reports}
     assert "jaxpr/mapside_cascade_chain" in names
     assert "jaxpr/jit_cache_key" in names
+    assert "jaxpr/one_round_query[fused,overlap]" in names
+    assert "jaxpr/cascade_query[fused,overlap]" in names
+    assert "jaxpr/jit_execute_chain[fused,overlap]" in names
     # Sanity: the audit actually walked the programs.
     assert all(r.metrics.get("n_eqns", 0) > 100 for r in reports
                if r.target != "jaxpr/jit_cache_key")
